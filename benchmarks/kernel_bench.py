@@ -1,0 +1,71 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp reference vs the
+engine's segment-sum path, on local-phase-shaped workloads.
+
+On this CPU container absolute numbers mean little (interpret mode runs the
+kernel body in Python); the table exists to (a) exercise the kernels at
+benchmark shapes and (b) report the DERIVED arithmetic-intensity numbers the
+TPU roofline cares about (bytes/edge, flops/edge).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_ell_spmv(rows=4096, k=128, n=4096, seed=0) -> list[str]:
+    from repro.kernels.ell_spmv import ell_spmv, ell_spmv_ref
+    rng = np.random.RandomState(seed)
+    idx = jnp.asarray(rng.randint(0, n, size=(rows, k)).astype(np.int32))
+    val = jnp.asarray(rng.uniform(size=(rows, k)).astype(np.float32))
+    msk = jnp.asarray(rng.uniform(size=(rows, k)) < 0.5)
+    x = jnp.asarray(rng.uniform(size=(n,)).astype(np.float32))
+
+    edges = rows * k
+    bytes_per_edge = 4 + 4 + 1 + 4          # idx + val + msk + gathered x
+    rows_out = []
+    for semiring in ("add_mul", "min_add"):
+        t_ref = _time(jax.jit(lambda *a: ell_spmv_ref(*a, semiring=semiring)),
+                      idx, val, msk, x)
+        t_pal = _time(lambda *a: ell_spmv(*a, semiring=semiring), idx, val,
+                      msk, x)
+        derived = (f"edges={edges};bytes/edge={bytes_per_edge};"
+                   f"ref_us={t_ref*1e6:.0f};interp_ratio={t_pal/t_ref:.1f}")
+        rows_out.append(f"kernel/ell_spmv/{semiring},{t_ref*1e6:.0f},{derived}")
+    return rows_out
+
+
+def bench_fused_pr_step(rows=4096, k=128, seed=1) -> list[str]:
+    from repro.kernels.pr_step import fused_pr_step, fused_pr_step_ref
+    rng = np.random.RandomState(seed)
+    n = rows
+    idx = jnp.asarray(rng.randint(0, n, size=(rows, k)).astype(np.int32))
+    val = jnp.asarray(rng.uniform(size=(rows, k)).astype(np.float32))
+    msk = jnp.asarray(rng.uniform(size=(rows, k)) < 0.5)
+    delta = jnp.asarray(rng.uniform(size=(n,)).astype(np.float32) * 0.1)
+    send = jnp.asarray(rng.uniform(size=(n,)) < 0.5)
+    rank = jnp.asarray(rng.uniform(size=(rows,)).astype(np.float32))
+
+    t_ref = _time(jax.jit(fused_pr_step_ref), idx, val, msk, delta, send, rank)
+    # unfused engine path: gather -> segment-sum -> add -> compare (4 HBM trips)
+    def unfused(idx, val, msk, delta, send, rank):
+        contrib = jnp.where(send[idx] & msk, 0.85 * val * delta[idx], 0.0)
+        d_in = jnp.sum(contrib, axis=1)
+        return rank + d_in, d_in, d_in > 1e-4
+    t_unf = _time(jax.jit(unfused), idx, val, msk, delta, send, rank)
+    derived = (f"hbm_trips_fused=1;hbm_trips_unfused=4;"
+               f"unfused_us={t_unf*1e6:.0f}")
+    return [f"kernel/fused_pr_step,{t_ref*1e6:.0f},{derived}"]

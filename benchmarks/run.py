@@ -1,0 +1,88 @@
+"""Benchmark harness: one function per paper table/figure, plus kernel
+micro-benchmarks and the roofline summary (if dry-run JSONs exist).
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--table NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller graphs (CI-sized)")
+    ap.add_argument("--table", default=None,
+                    help="run a single table: sssp|pagerank|bm|giraphpp|"
+                         "kernels|roofline")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_tables
+
+    rows: list[str] = []
+
+    def want(name):
+        return args.table in (None, name)
+
+    if want("sssp"):
+        kw = dict(rows_cols=(8, 110), partition_counts=(4, 8)) if args.fast \
+            else dict()
+        rows += [r.csv() for r in paper_tables.sssp_road(**kw)]
+    if want("pagerank"):
+        if args.fast:
+            rows += [r.csv() for r in paper_tables.pagerank_tolerance(
+                tols=(1e-2, 1e-4), n=1500)]
+            rows += [r.csv() for r in paper_tables.pagerank_scalability(
+                partition_counts=(4, 8), n=1500)]
+        else:
+            rows += [r.csv() for r in paper_tables.pagerank_tolerance()]
+            rows += [r.csv() for r in paper_tables.pagerank_scalability()]
+    if want("bm"):
+        rows += [r.csv() for r in paper_tables.bipartite_matching_table()]
+    if want("giraphpp"):
+        n = 1500 if args.fast else 4000
+        rows += [r.csv() for r in paper_tables.giraphpp_proxy(n=n)]
+    if want("kernels"):
+        rows += kernel_bench.bench_ell_spmv()
+        rows += kernel_bench.bench_fused_pr_step()
+    if want("roofline"):
+        rows += roofline_rows()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+def roofline_rows(out_dir: str = "results/dryrun") -> list[str]:
+    """Summarize dry-run JSONs as CSV rows (us = dominant roofline term)."""
+    import json
+    rows = []
+    if not os.path.isdir(out_dir):
+        return rows
+    for fn in sorted(os.listdir(out_dir)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(out_dir, fn)) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        t = rec["roofline"]
+        dom_t = max(t["t_compute_s"], t["t_memory_s"], t["t_collective_s"])
+        derived = (f"dom={t['dominant']};tc={t['t_compute_s']:.3g};"
+                   f"tm={t['t_memory_s']:.3g};tx={t['t_collective_s']:.3g};"
+                   f"mem_gib={rec.get('memory',{}).get('bytes_per_device',0)/2**30:.2f}")
+        rows.append(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']},"
+                    f"{dom_t*1e6:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Graph-analytics walkthrough: all four vertex programs (SSSP, incremental
+PageRank, WCC, bipartite matching) on the hybrid engine, with the Pallas
+ELL-SpMV kernel shown as the local-phase hot-loop equivalent.
+
+    PYTHONPATH=src python examples/graph_analytics.py
+"""
+
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+
+from repro.core import bfs_partition, build_partitioned_graph, run_hybrid
+from repro.core.apps import SSSP, WCC, BipartiteMatching, IncrementalPageRank
+from repro.core.apps.pagerank import pagerank_edge_weights
+from repro.data.graphs import (bipartite_graph, grid_graph, rmat_graph,
+                               symmetrize)
+
+
+def main():
+    # ---- SSSP on a road grid -------------------------------------------
+    edges, w, n = grid_graph(10, 60, seed=0)
+    part = bfs_partition(edges, n, 6, seed=0)
+    g = build_partitioned_graph(edges, n, part, weights=w)
+    es, iters = run_hybrid(g, SSSP(source=0))
+    finite = np.isfinite(np.asarray(es.state["dist"])).sum()
+    print(f"SSSP: {iters} global iterations, {finite} reachable slots")
+
+    # ---- incremental PageRank on a web-ish graph ------------------------
+    edges, n = rmat_graph(1200, avg_degree=6, seed=1)
+    wpr = pagerank_edge_weights(edges, n)
+    g = build_partitioned_graph(edges, n, bfs_partition(edges, n, 6, seed=1),
+                                weights=wpr)
+    es, iters = run_hybrid(g, IncrementalPageRank(tolerance=1e-4))
+    ranks = np.asarray(es.state["rank"])
+    print(f"PageRank: {iters} global iterations, top rank "
+          f"{ranks.max():.2f}, Σrank {ranks.sum():.0f} ≈ N={n}... "
+          f"(unnormalized 0.15-base dynamics)")
+
+    # ---- WCC -------------------------------------------------------------
+    e2 = symmetrize(edges)
+    g = build_partitioned_graph(e2, n, bfs_partition(e2, n, 6, seed=2))
+    es, iters = run_hybrid(g, WCC())
+    labels = np.asarray(es.state["label"])
+    gid = np.asarray(g.vertex_gid)
+    ncomp = len(np.unique(labels[gid >= 0]))
+    print(f"WCC: {iters} global iterations, {ncomp} components")
+
+    # ---- bipartite matching ---------------------------------------------
+    edges, nl, n = bipartite_graph(300, 260, avg_degree=3, seed=3)
+    g = build_partitioned_graph(edges, n, bfs_partition(edges, n, 6, seed=3))
+    vdata = {"is_left": g.vertex_gid < nl, "degree": g.out_degree}
+    es, iters = run_hybrid(g, BipartiteMatching(seed=1), vdata=vdata,
+                           max_iters=300)
+    matched = np.asarray(es.state["matched"])
+    n_matched = int(((matched >= 0) & (np.asarray(g.vertex_gid) < nl)
+                     & (np.asarray(g.vertex_mask))).sum())
+    print(f"BM: {iters} global iterations, {n_matched} lefts matched")
+
+    # ---- the local-phase hot loop as a Pallas kernel ---------------------
+    from repro.kernels.ell_spmv import ell_spmv, to_ell
+    idx, val, msk = to_ell(edges, n, weights=np.ones(len(edges), np.float32))
+    x = jnp.ones((n,), jnp.float32)
+    y = ell_spmv(idx, val, msk, x, semiring="add_mul")
+    print(f"Pallas ELL-SpMV: y[:4] = {np.asarray(y[:4])} "
+          f"(= in-degrees; interpret mode on CPU, Mosaic on TPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end training driver: train a ~100M-param dense LM for a few hundred
+steps on the synthetic pipeline, with checkpointing and restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+(~100M model: 12 x 512 transformer with a 32k vocab; on this CPU container a
+step takes O(seconds) — the same driver scales to the production mesh via
+launch/train.py.)
+"""
+
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsyncCheckpointer
+from repro.checkpoint.ckpt import latest_checkpoint, load_checkpoint
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
+from repro.models.registry import count_params, get_model
+from repro.optim.adamw import adamw_init
+from repro.train.trainer import make_train_step
+
+
+def small_lm() -> ArchConfig:
+    # ~100M params: 21M embedding (32k x 640, tied) + 14 x 5.7M layers
+    return ArchConfig(
+        name="demo-100m", family="dense", n_layers=14, d_model=640,
+        n_heads=10, n_kv_heads=5, head_dim=64, d_ff=2304, vocab=32_768,
+        pattern=(LayerSpec(),), tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_demo_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = small_lm()
+    api = get_model(cfg)
+    print(f"model: {cfg.name}, {count_params(cfg)/1e6:.0f}M params")
+
+    params = api.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    opt = adamw_init(params)
+    start_step = 0
+    latest = latest_checkpoint(args.ckpt_dir)
+    if latest:
+        state, start_step = load_checkpoint(latest, {"p": params, "o": opt})
+        params, opt = state["p"], state["o"]
+        print(f"restored checkpoint at step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, api, peak_lr=3e-4, warmup=50,
+                                      total_steps=args.steps))
+    data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                      global_batch=args.batch))
+    ckpt = AsyncCheckpointer(args.ckpt_dir, keep=2)
+
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        params, opt, m = step_fn(params, opt, batch, jnp.asarray(step))
+        if step % 20 == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.3f}  "
+                  f"lr {float(m['lr']):.2e}  ({dt:.1f}s)")
+        if step and step % args.ckpt_every == 0:
+            ckpt.save(step, {"p": params, "o": opt})
+    ckpt.save(args.steps, {"p": params, "o": opt})
+    ckpt.close()
+    print("done; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

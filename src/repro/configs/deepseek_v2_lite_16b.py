@@ -1,0 +1,25 @@
+"""deepseek-v2-lite-16b [moe] — arXiv:2405.04434 (hf-verified).
+27L d_model=2048, MLA with 16 heads (kv_lora=512, qk_nope=128, qk_rope=64,
+v_head=128), vocab=102400; MoE 64 routed experts top-6 + 2 shared
+(expert hidden 1408), first layer dense (d_ff=10944)."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=192,
+    d_ff=10_944, vocab=102_400,
+    pattern=(LayerSpec(mixer="attn", attn="mla", moe=True),),
+    first_k_dense=1,
+    n_experts=64, top_k=6, d_expert=1408, n_shared_experts=2,
+    kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+    source="arXiv:2405.04434; hf",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="deepseek-smoke", n_layers=3, d_model=64, n_heads=4,
+    n_kv_heads=4, head_dim=48, d_ff=128, vocab=256, first_k_dense=1,
+    n_experts=8, top_k=2, d_expert=32, n_shared_experts=1,
+    kv_lora_rank=32, qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32)

@@ -1,0 +1,24 @@
+"""gemma2-9b [dense] — arXiv:2408.00118 (hf-verified).
+42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000; local/global
+alternating attention (window 4096), attn/final logit soft-capping."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="gemma2-9b", family="dense",
+    n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, head_dim=256,
+    d_ff=14_336, vocab=256_000, rope_theta=10_000.0, window=4096,
+    pattern=(LayerSpec(mixer="attn", attn="window", window=4096),
+             LayerSpec(mixer="attn", attn="full")),
+    softcap_attn=50.0, softcap_final=30.0, tie_embeddings=True,
+    act="gelu", sub_quadratic=True,   # half the stack is windowed
+    source="arXiv:2408.00118; hf",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="gemma2-smoke", n_layers=4, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, window=16,
+    pattern=(LayerSpec(mixer="attn", attn="window", window=16),
+             LayerSpec(mixer="attn", attn="full")))

@@ -1,0 +1,25 @@
+"""gemma3-4b [dense] — hf:google/gemma-3-1b-pt family (unverified).
+34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144; 5 local : 1 global
+interleave (window 1024), 128k context."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+_LOCAL = LayerSpec(mixer="attn", attn="window", window=1024)
+_GLOBAL = LayerSpec(mixer="attn", attn="full")
+
+CONFIG = ArchConfig(
+    name="gemma3-4b", family="dense",
+    n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4, head_dim=256,
+    d_ff=10_240, vocab=262_144, rope_theta=1_000_000.0, window=1024,
+    pattern=(_LOCAL, _LOCAL, _LOCAL, _LOCAL, _LOCAL, _GLOBAL),
+    tie_embeddings=True, act="gelu", sub_quadratic=True,
+    source="hf:google/gemma-3-1b-pt; unverified",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="gemma3-smoke", n_layers=6, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, window=16,
+    pattern=(LayerSpec(mixer="attn", attn="window", window=16),) * 5
+            + (LayerSpec(mixer="attn", attn="full"),))

@@ -1,0 +1,21 @@
+"""granite-moe-1b-a400m [moe] — hf:ibm-granite/granite-3.0-1b-a400m-base.
+24L d_model=1024 16H (GQA kv=8) vocab=49155, 32 experts top-8 with expert
+hidden 512 (d_ff field = expert hidden, every layer MoE)."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab=49_155,
+    pattern=(LayerSpec(mixer="attn", attn="full", moe=True),),
+    n_experts=32, top_k=8, d_expert=512, tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="granite-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=32, vocab=256, n_experts=8, top_k=2,
+    d_expert=32)

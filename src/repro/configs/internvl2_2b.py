@@ -1,0 +1,20 @@
+"""internvl2-2b [vlm] — arXiv:2404.16821 (hf-verified).
+InternViT frontend (STUB: precomputed patch embeddings) + InternLM2-1.8b
+backbone: 24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="internvl2-2b", family="vlm",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=92_553, rope_theta=1_000_000.0,
+    pattern=(LayerSpec(mixer="attn", attn="full"),),
+    vis_tokens=256, vis_dim=1024,
+    source="arXiv:2404.16821; hf",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="internvl2-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, vis_tokens=8, vis_dim=32)

@@ -1,0 +1,35 @@
+"""jamba-1.5-large-398b [hybrid] — arXiv:2403.19887 (hf-verified).
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536; Mamba:attn 7:1
+interleave (1 attention layer per 8-layer block), MoE 16e top-2 on every
+other layer."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+_M = lambda moe: LayerSpec(mixer="mamba", attn="none", moe=moe)
+_A = lambda moe: LayerSpec(mixer="attn", attn="full", moe=moe)
+
+# 8-layer Jamba block: attention at position 4, MoE every other layer
+_PATTERN = (_M(False), _M(True), _M(False), _M(True),
+            _A(False), _M(True), _M(False), _M(True))
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=24_576, vocab=65_536,
+    pattern=_PATTERN,
+    n_experts=16, top_k=2, d_expert=24_576,
+    # ssm_chunk=64 (not 256): the SSD intra-chunk decay tensor is
+    # (B, S/Q, Q, Q, H) — quadratic in Q; at d_inner=16384 (H=128 heads),
+    # Q=64 keeps the per-device working set ~2 GiB instead of ~550 GiB
+    # (EXPERIMENTS.md #Perf, jamba iteration 1).
+    ssm_state=64, ssm_expand=2, ssm_head_dim=128, ssm_chunk=64, conv_dim=4,
+    sub_quadratic=True,
+    source="arXiv:2403.19887; hf",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="jamba-smoke", n_layers=8, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256, n_experts=4, top_k=2,
+    d_expert=128, ssm_state=16, ssm_head_dim=16, ssm_chunk=16)

@@ -1,0 +1,20 @@
+"""mamba2-370m [ssm] — arXiv:2405.21060 (unverified).
+48L d_model=1024 attn-free, vocab=50280, ssm_state=128 (SSD)."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab=50_280,
+    pattern=(LayerSpec(mixer="mamba", attn="none"),),
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_chunk=128, conv_dim=4,
+    tie_embeddings=True, sub_quadratic=True,
+    source="arXiv:2405.21060; unverified",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="mamba2-smoke", n_layers=2, d_model=64, vocab=256,
+    ssm_state=16, ssm_head_dim=16, ssm_chunk=16)

@@ -1,0 +1,18 @@
+"""phi3-medium-14b [dense] — arXiv:2404.14219 (unverified).
+40L d_model=5120 40H (GQA kv=10) d_ff=17920 vocab=100352, RoPE+SwiGLU."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="phi3-medium-14b", family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10, head_dim=128,
+    d_ff=17_920, vocab=100_352, rope_theta=10_000.0,
+    pattern=(LayerSpec(mixer="attn", attn="full"),),
+    source="arXiv:2404.14219; unverified",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="phi3-medium-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=160, vocab=256)

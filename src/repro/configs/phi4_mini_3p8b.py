@@ -1,0 +1,18 @@
+"""phi4-mini-3.8b [dense] — arXiv:2412.08905 (hf-verified).
+32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064, RoPE+SwiGLU."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="phi4-mini-3.8b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=200_064, rope_theta=10_000.0,
+    pattern=(LayerSpec(mixer="attn", attn="full"),),
+    tie_embeddings=True, source="arXiv:2412.08905; hf",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="phi4-mini-smoke", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256)

@@ -1,0 +1,22 @@
+"""whisper-small [audio] — arXiv:2212.04356 (unverified).
+Encoder-decoder, 12L+12L d_model=768 12H d_ff=3072 vocab=51865.
+The conv/mel frontend is a STUB: input_specs() provides precomputed frame
+embeddings (1500 frames), per the assignment."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="whisper-small", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+    d_ff=3072, vocab=51_865,
+    pattern=(LayerSpec(mixer="attn", attn="full"),),
+    enc_layers=12, enc_frames=1500,
+    norm="layernorm", pos="sinusoidal", act="gelu", mlp="plain",
+    source="arXiv:2212.04356; unverified",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="whisper-smoke", n_layers=2, enc_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab=256, enc_frames=24)

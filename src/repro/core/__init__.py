@@ -1,0 +1,13 @@
+from repro.core.graph import (PartitionedGraph, bfs_partition,
+                              build_partitioned_graph, hash_partition)
+from repro.core.vertex_program import Channel, StepInfo, VertexProgram
+from repro.core.runtime import Counters, EngineState
+from repro.core.engine_bsp import run_bsp
+from repro.core.engine_am import run_am
+from repro.core.engine_hybrid import run_hybrid
+
+__all__ = [
+    "PartitionedGraph", "build_partitioned_graph", "hash_partition",
+    "bfs_partition", "Channel", "StepInfo", "VertexProgram", "Counters",
+    "EngineState", "run_bsp", "run_am", "run_hybrid",
+]

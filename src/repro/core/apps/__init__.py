@@ -1,0 +1,6 @@
+from repro.core.apps.sssp import SSSP
+from repro.core.apps.pagerank import IncrementalPageRank
+from repro.core.apps.wcc import WCC
+from repro.core.apps.bipartite_matching import BipartiteMatching
+
+__all__ = ["SSSP", "IncrementalPageRank", "WCC", "BipartiteMatching"]

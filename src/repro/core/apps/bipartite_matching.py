@@ -1,0 +1,166 @@
+"""Bipartite maximal matching (paper §6.3, Algorithm 6).
+
+The representative of "algorithms that send and process *different types* of
+messages at different stages" (§6.4).  Typed channels model the paper's
+handshake:
+
+  req    left -> right   match request; the ``lexmin`` combiner over a
+                         per-edge hash realizes the right vertex's "randomly
+                         choose one request" as a deterministic
+                         random-priority pick,
+  grant  right -> left   targeted grant (only the edge whose destination is
+                         the granted left carries a message),
+  acc    left -> right   targeted acceptance,
+  full   right -> left   broadcast "I am matched": lefts count exhausted
+                         neighbours and retire when all are matched,
+  retry  right -> left   broadcast "my grant fell through, ask again".
+
+Fidelity note (DESIGN.md §9): the paper's rights iterate over *all* received
+requests and send per-requester deny messages.  A combining engine keeps only
+the winning request, so losers cannot be denied individually; instead a right
+broadcasts ``retry``/``full`` when its grant resolves, which re-activates the
+losers.  The fixed point is the same (a valid maximal matching), the
+iteration structure matches the paper's 3-stage handshake, and message counts
+keep the same engine-to-engine ordering.
+
+Right states: 0 = ungranted, 1 = granted (waiting for acceptance with a
+countdown that ticks only at global/superstep cadence — local-phase accepts
+arrive by message, so no local tick is needed), 2 = matched.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vertex_program import Channel, StepInfo, VertexProgram
+
+_IMAX = jnp.iinfo(jnp.int32).max
+
+UNGRANTED, GRANTED, MATCHED = 0, 1, 2
+
+
+def _hash2(a, b):
+    x = a.astype(jnp.uint32) * jnp.uint32(2654435761)
+    y = b.astype(jnp.uint32) * jnp.uint32(40503)
+    h = jnp.bitwise_xor(x, y)
+    h = h * jnp.uint32(2246822519)
+    h = jnp.bitwise_xor(h, h >> 13)
+    return (h & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+
+
+class BipartiteMatching(VertexProgram):
+    channels = (
+        Channel("req", "lexmin", ((jnp.int32, _IMAX), (jnp.int32, _IMAX))),
+        Channel("grant", "min", ((jnp.int32, _IMAX),)),
+        Channel("acc", "min", ((jnp.int32, _IMAX),)),
+        Channel("full", "sum", ((jnp.int32, 0),)),
+        Channel("retry", "max", ((jnp.int32, 0),)),
+    )
+    boundary_participates = True
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def init(self, gid, vmask, vdata):
+        is_left = vdata["is_left"]
+        deg = vdata["degree"]
+        state = {
+            "matched": jnp.full_like(gid, -1),
+            "rstate": jnp.zeros_like(gid),         # rights: UNGRANTED
+            "grantee": jnp.full_like(gid, -1),     # rights: granted left gid
+            "cd": jnp.zeros_like(gid),             # rights: acceptance countdown
+            "n_full": jnp.zeros_like(gid),         # lefts: matched neighbours
+        }
+        out = {
+            "requesting": jnp.logical_and(is_left, deg > 0),
+            "grant_to": jnp.full_like(gid, -1),
+            "accept_to": jnp.full_like(gid, -1),
+            "announce_full": jnp.zeros_like(vmask),
+            "announce_retry": jnp.zeros_like(vmask),
+        }
+        send = jnp.logical_and(out["requesting"], vmask)   # stage 1 at init
+        active = jnp.zeros_like(vmask)
+        return state, out, send, active
+
+    def emit(self, ch, out_src, w, src_gid, dst_gid):
+        if ch.name == "req":
+            pri = _hash2(src_gid + self.seed, dst_gid)
+            return (pri, src_gid), out_src["requesting"]
+        if ch.name == "grant":
+            return (src_gid,), dst_gid == out_src["grant_to"]
+        if ch.name == "acc":
+            return (src_gid,), dst_gid == out_src["accept_to"]
+        if ch.name == "full":
+            return (jnp.ones_like(src_gid),), out_src["announce_full"]
+        if ch.name == "retry":
+            return (jnp.ones_like(src_gid),), out_src["announce_retry"]
+        raise ValueError(ch.name)
+
+    def apply(self, state, inbox, gid, vmask, vdata, info: StepInfo):
+        is_left = vdata["is_left"]
+        deg = vdata["degree"]
+        (_, req_gid), has_req = inbox["req"]
+        (grant_gid,), has_grant = inbox["grant"]
+        (acc_gid,), has_acc = inbox["acc"]
+        (full_cnt,), has_full = inbox["full"]
+
+        matched = state["matched"]
+        rstate = state["rstate"]
+        grantee = state["grantee"]
+        cd = state["cd"]
+        n_full = state["n_full"] + jnp.where(has_full, full_cnt, 0)
+
+        # ---------------- left vertices (stages 1 & 3) -------------------
+        l_unmatched = jnp.logical_and(is_left, matched < 0)
+        l_accepts = jnp.logical_and(l_unmatched, has_grant)
+        l_retired = jnp.logical_and(l_unmatched, n_full >= deg)
+        l_requesting = jnp.logical_and(
+            l_unmatched, jnp.logical_and(~l_accepts, ~l_retired))
+
+        # ---------------- right vertices (stages 2 & 4) ------------------
+        r = jnp.logical_not(is_left)
+        r_ungranted = jnp.logical_and(r, rstate == UNGRANTED)
+        r_grants = jnp.logical_and(r_ungranted, has_req)
+        r_granted = jnp.logical_and(r, rstate == GRANTED)
+        r_accepted = jnp.logical_and(
+            r_granted, jnp.logical_and(has_acc, acc_gid == grantee))
+        # countdown ticks at global/superstep cadence only: a same-partition
+        # acceptance arrives by message within two pseudo-supersteps, a
+        # cross-partition one within two global iterations (< the timeout).
+        tick = info.phase != "local"
+        r_timeout = jnp.logical_and(
+            r_granted, jnp.logical_and(~r_accepted,
+                                       jnp.logical_and(tick, cd <= 0)))
+
+        new_matched = jnp.where(l_accepts, grant_gid, matched)
+        new_matched = jnp.where(r_accepted, acc_gid, new_matched)
+        new_rstate = jnp.where(r_grants, GRANTED, rstate)
+        new_rstate = jnp.where(r_accepted, MATCHED, new_rstate)
+        new_rstate = jnp.where(r_timeout, UNGRANTED, new_rstate)
+        new_grantee = jnp.where(r_grants, req_gid, grantee)
+        new_cd = jnp.where(r_grants, 3,
+                           jnp.where(tick, jnp.maximum(cd - 1, 0), cd))
+
+        out = {
+            "requesting": l_requesting,
+            "grant_to": jnp.where(r_grants, req_gid, -1),
+            "accept_to": jnp.where(l_accepts, grant_gid, -1),
+            "announce_full": r_accepted,
+            "announce_retry": r_timeout,
+        }
+        send = (l_requesting | l_accepts | r_grants | r_accepted | r_timeout)
+        # granted rights must observe their own timeout even with no incoming
+        # message — they stay active, but only for global-cadence scheduling
+        # (global_only_active below keeps local phases terminating).
+        active = jnp.logical_and(jnp.logical_and(r, new_rstate == GRANTED), vmask)
+
+        state = {"matched": new_matched, "rstate": new_rstate,
+                 "grantee": new_grantee, "cd": new_cd, "n_full": n_full}
+        return state, out, send, active
+
+    def global_only_active(self, state, vdata):
+        """Granted rights wait for remote acceptances/timeouts: they are
+        scheduled at global phases, not kept spinning in local phases."""
+        return jnp.logical_and(jnp.logical_not(vdata["is_left"]),
+                               state["rstate"] == GRANTED)

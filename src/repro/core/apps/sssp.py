@@ -1,0 +1,41 @@
+"""Single-source shortest paths (paper §6.1, Algorithm 4).
+
+Min-combiner over distance messages; a vertex relaxes and re-sends only when
+its value improves; always votes to halt.  Incremental (monotone min), so
+boundary vertices participate in local phases (paper recommendation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.vertex_program import Channel, StepInfo, VertexProgram
+
+INF = jnp.float32(jnp.inf)
+
+
+class SSSP(VertexProgram):
+    channels = (Channel("dist", "min", ((jnp.float32, jnp.inf),)),)
+    boundary_participates = True
+
+    def __init__(self, source: int):
+        self.source = source
+
+    def init(self, gid, vmask, vdata):
+        is_src = gid == self.source
+        dist = jnp.where(is_src, 0.0, INF).astype(jnp.float32)
+        state = {"dist": dist}
+        out = {"dist": dist}
+        send = jnp.logical_and(is_src, vmask)
+        active = jnp.zeros_like(vmask)          # voteToHalt()
+        return state, out, send, active
+
+    def emit(self, ch, out_src, w, src_gid, dst_gid):
+        return (out_src["dist"] + w,), jnp.ones(w.shape, bool)
+
+    def apply(self, state, inbox, gid, vmask, vdata, info: StepInfo):
+        (msg,), has = inbox["dist"]
+        new = jnp.minimum(state["dist"], jnp.where(has, msg, INF))
+        send = new < state["dist"]
+        state = {"dist": new}
+        return state, {"dist": new}, send, jnp.zeros_like(send)

@@ -1,0 +1,80 @@
+"""AM-Hama: Hama + asynchronous in-memory messaging (paper §4.2 / §7).
+
+Same superstep/exchange cadence as standard BSP, but messages between
+co-located vertices are delivered in memory, and a message sent earlier in a
+superstep may be consumed by a not-yet-processed vertex *within the same
+superstep* (the Grace mechanism [35] as implemented for comparison in [32]).
+
+Vectorized adaptation (DESIGN.md §9.3): the JVM implementation processes
+vertices sequentially, so roughly the messages flowing "forward" in processing
+order land in the same superstep.  We split each partition's slots into two
+ordered half-blocks A|B: A computes first, its in-partition messages are
+delivered in memory, then B computes — every vertex still runs Compute() at
+most once per superstep (Grace's bound), and forward-crossing messages land
+same-superstep.  Cross-partition messages keep the superstep-latency of Hama.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import PartitionedGraph
+from repro.core.runtime import (EngineState, apply_phase, deliver, exchange,
+                                init_state, quiescent)
+from repro.core.vertex_program import StepInfo, VertexProgram
+
+__all__ = ["am_superstep", "run_am"]
+
+
+def am_superstep(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    es: EngineState,
+    vdata: Any,
+    gather_table: Callable | None = None,
+) -> EngineState:
+    es = exchange(graph, es, gather_table)
+    es = dataclasses.replace(
+        es, export_out=prog.export_identity(es.export_out),
+        export_send=jnp.zeros_like(es.export_send))
+    es, _ = deliver(graph, prog, es, edges="all")
+
+    slot = jnp.arange(graph.vp)[None, :]
+    half_a = jnp.logical_and(graph.vertex_mask, slot < graph.vp // 2)
+    half_b = jnp.logical_and(graph.vertex_mask, jnp.logical_not(slot < graph.vp // 2))
+
+    info = StepInfo(superstep=es.counters.iterations + 1, pseudo_step=0,
+                    phase="superstep")
+    es = apply_phase(graph, prog, es, half_a, info, vdata)
+    es, _ = deliver(graph, prog, es, edges="local")   # A's messages, in memory
+    es = apply_phase(graph, prog, es, half_b, info, vdata)
+    # es.send is now B's senders only: A's in-partition messages were already
+    # delivered above (delivering them again next superstep would double-count
+    # for sum channels); A's cross-partition messages travel via the export
+    # buffer, which accumulated A's sends in its apply_phase.
+
+    c = es.counters
+    return dataclasses.replace(
+        es, counters=dataclasses.replace(
+            c, iterations=c.iterations + 1,
+            pseudo_supersteps=c.pseudo_supersteps + 1))
+
+
+def run_am(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    vdata: Any = None,
+    max_iters: int = 100_000,
+) -> tuple[EngineState, int]:
+    step = jax.jit(partial(am_superstep, graph, prog, vdata=vdata))
+    es = init_state(graph, prog, vdata)
+    for _ in range(max_iters):
+        if bool(quiescent(prog, es)):
+            break
+        es = step(es=es)
+    return es, int(es.counters.iterations)

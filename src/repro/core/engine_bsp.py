@@ -1,0 +1,69 @@
+"""Standard BSP engine (the paper's Hama baseline).
+
+Every superstep = one distributed exchange + one bulk Compute() over all
+(active ∨ messaged) vertices.  Synchronization/communication frequency is
+O(#supersteps) — the inefficiency GraphHP attacks.
+
+Message accounting follows the paper's Hama baseline: *all* messages travel
+through the distributed mechanism (RPC "by default", §4.1), so M counts both
+same-partition and cross-partition combined groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import PartitionedGraph
+from repro.core.runtime import (EngineState, apply_phase, deliver, exchange,
+                                init_state, quiescent)
+from repro.core.vertex_program import StepInfo, VertexProgram
+
+__all__ = ["bsp_superstep", "run_bsp"]
+
+
+def _reset_export(prog: VertexProgram, es: EngineState) -> EngineState:
+    return dataclasses.replace(
+        es, export_out=prog.export_identity(es.export_out),
+        export_send=jnp.zeros_like(es.export_send))
+
+
+def bsp_superstep(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    es: EngineState,
+    vdata: Any,
+    gather_table: Callable | None = None,
+) -> EngineState:
+    """One Hama superstep: exchange -> deliver(all) -> Compute(all)."""
+    es = exchange(graph, es, gather_table)
+    es = _reset_export(prog, es)
+    es, _ = deliver(graph, prog, es, edges="all")
+    info = StepInfo(superstep=es.counters.iterations + 1, pseudo_step=0,
+                    phase="superstep")
+    es = apply_phase(graph, prog, es, graph.vertex_mask, info, vdata)
+    c = es.counters
+    return dataclasses.replace(
+        es, counters=dataclasses.replace(
+            c, iterations=c.iterations + 1,
+            pseudo_supersteps=c.pseudo_supersteps + 1))
+
+
+def run_bsp(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    vdata: Any = None,
+    max_iters: int = 100_000,
+) -> tuple[EngineState, int]:
+    """Host-driven loop: init superstep + supersteps until quiescence."""
+    step = jax.jit(partial(bsp_superstep, graph, prog, vdata=vdata))
+    es = init_state(graph, prog, vdata)
+    for _ in range(max_iters):
+        if bool(quiescent(prog, es)):
+            break
+        es = step(es=es)
+    return es, int(es.counters.iterations)

@@ -1,0 +1,145 @@
+"""GraphHP hybrid engine — the paper's contribution (§4.2, §5.2, Algorithm 2).
+
+One *global iteration* =
+  1. distributed exchange of the export buffers (the ONLY cross-partition
+     communication + the only synchronization point),
+  2. **global phase**: each active boundary vertex runs Compute() exactly
+     once, consuming the messages buffered since the previous iteration,
+  3. **local phase**: pseudo-supersteps iterated *per partition, in memory,
+     with zero collectives* until every participating vertex is inactive and
+     no local message is in transit (Algorithm 2's inner while loop).
+
+Messages to remote vertices produced anywhere in the iteration accumulate in
+the export buffer through ``SourceCombine()`` and ride the next exchange.
+
+Two functionally identical drivers are provided:
+
+* ``run_hybrid``        — host loop (counters, tests, paper tables): the
+                          local phase is a ``lax.while_loop`` whose per-
+                          partition convergence is tracked with a ``running``
+                          mask so pseudo-superstep counts stay faithful;
+* ``hybrid_iteration``  — one jittable global iteration, reused by the
+                          shard_map distributed lowering in launch/ where the
+                          while_loop truly runs decoupled per device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import PartitionedGraph
+from repro.core.runtime import (EngineState, _has_any_pending, apply_phase,
+                                deliver, exchange, init_state, quiescent)
+from repro.core.vertex_program import StepInfo, VertexProgram
+
+__all__ = ["hybrid_iteration", "run_hybrid", "init_hybrid"]
+
+
+def _participation_mask(graph: PartitionedGraph, prog: VertexProgram) -> jax.Array:
+    """Vertices eligible for local-phase computation (paper §4.2: boundary
+    vertices join local phases for incremental algorithms)."""
+    if prog.boundary_participates:
+        return graph.vertex_mask
+    return jnp.logical_and(graph.vertex_mask, jnp.logical_not(graph.is_boundary))
+
+
+def _partition_running(graph, prog, es, participate, vdata) -> jax.Array:
+    """(P,) — does any participating vertex still need a pseudo-superstep?"""
+    act = es.active
+    gonly = prog.global_only_active(es.state, vdata)
+    if gonly is not None:
+        act = jnp.logical_and(act, jnp.logical_not(gonly))
+    need = jnp.logical_or(act, _has_any_pending(prog, es.pending))
+    return jnp.any(jnp.logical_and(need, participate), axis=1)
+
+
+def hybrid_iteration(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    es: EngineState,
+    vdata: Any,
+    gather_table: Callable | None = None,
+    max_local_steps: int = 100_000,
+    wire_dtype=None,
+) -> EngineState:
+    """One global iteration: exchange -> global phase -> local phase."""
+    participate = _participation_mask(graph, prog)
+    it = es.counters.iterations + 1
+
+    # -- 1. the one distributed exchange ---------------------------------
+    es = exchange(graph, es, gather_table, wire_dtype=wire_dtype)
+    es = dataclasses.replace(
+        es, export_out=prog.export_identity(es.export_out),
+        export_send=jnp.zeros_like(es.export_send))
+    es, _ = deliver(graph, prog, es, edges="remote")
+
+    # -- 2. global phase: boundary vertices, exactly once -----------------
+    # (plus any program-declared global-only-active vertices: interior
+    #  vertices waiting on cross-partition round-trips tick here)
+    gmask = graph.is_boundary
+    gonly = prog.global_only_active(es.state, vdata)
+    if gonly is not None:
+        gmask = jnp.logical_or(gmask, jnp.logical_and(es.active, gonly))
+    info_g = StepInfo(superstep=it, pseudo_step=0, phase="global")
+    es = apply_phase(graph, prog, es, gmask, info_g, vdata)
+    # boundary -> same-partition messages are processed by the immediate
+    # local phase of this iteration (paper §4.2)
+    es, _ = deliver(graph, prog, es, edges="local")
+
+    # -- 3. local phase: pseudo-supersteps until per-partition quiescence --
+    def cond(carry):
+        es_, running, k = carry
+        return jnp.logical_and(jnp.any(running), k < max_local_steps)
+
+    def body(carry):
+        es_, running, k = carry
+        mask = jnp.logical_and(participate, running[:, None])
+        info_l = StepInfo(superstep=it, pseudo_step=k + 1, phase="local")
+        es_ = apply_phase(graph, prog, es_, mask, info_l, vdata)
+        es_, _ = deliver(graph, prog, es_, edges="local")
+        running = _partition_running(graph, prog, es_, mask, vdata)
+        c = es_.counters
+        es_ = dataclasses.replace(es_, counters=dataclasses.replace(
+            c, pseudo_supersteps=c.pseudo_supersteps + running.astype(jnp.int32)))
+        return es_, running, k + 1
+
+    running0 = _partition_running(graph, prog, es, participate, vdata)
+    c0 = es.counters
+    es = dataclasses.replace(es, counters=dataclasses.replace(
+        c0, pseudo_supersteps=c0.pseudo_supersteps + running0.astype(jnp.int32)))
+    es, _, _ = jax.lax.while_loop(cond, body, (es, running0, jnp.zeros((), jnp.int32)))
+
+    c = es.counters
+    return dataclasses.replace(
+        es, counters=dataclasses.replace(c, iterations=c.iterations + 1))
+
+
+def init_hybrid(graph: PartitionedGraph, prog: VertexProgram, vdata: Any) -> EngineState:
+    """Initialization iteration (iteration 0): same as Hama's first superstep;
+    in-partition messages go to pending for iteration 1's phases, crossing
+    messages ride the export buffer."""
+    es = init_state(graph, prog, vdata)
+    es, _ = deliver(graph, prog, es, edges="local")
+    return es
+
+
+def run_hybrid(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    vdata: Any = None,
+    max_iters: int = 100_000,
+    max_local_steps: int = 100_000,
+) -> tuple[EngineState, int]:
+    step = jax.jit(partial(hybrid_iteration, graph, prog, vdata=vdata,
+                           max_local_steps=max_local_steps))
+    es = init_hybrid(graph, prog, vdata)
+    for _ in range(max_iters):
+        if bool(quiescent(prog, es)):
+            break
+        es = step(es=es)
+    return es, int(es.counters.iterations)

@@ -1,0 +1,115 @@
+"""GraphHP's hybrid execution model lifted to multi-pod training.
+
+Mapping (DESIGN.md §6): pod = graph partition; one optimizer step = one
+pseudo-superstep; the cross-pod exchange = the global phase.  Each pod runs H
+*inner* steps with gradient reduction confined to its own (data, model)
+slice — zero cross-pod traffic, exactly like the local phase running on
+in-memory messages — then the *global phase* exchanges accumulated parameter
+deltas once, through an error-feedback int8 combiner (the ``Combine()``
+before the wire), and an outer Nesterov step (DiLoCo-style) advances the
+shared anchor.
+
+Implementation: per-pod replicas are *stacked along a leading pod axis*
+(sharded over the mesh's ``pod`` dimension) and the inner step is ``vmap``ed
+over it — per-pod gradients are independent by construction, so no GSPMD
+reduction can leak across pods.  Both phases lower and compile on the
+(pod=2, data=16, model=16) production mesh; the dry-run proves it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compression import (ErrorFeedbackState, ef_int8_compress,
+                                     ef_int8_decompress)
+
+Params = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OuterState:
+    """Outer (cross-pod) optimizer state: shared anchor + Nesterov momentum +
+    per-pod error-feedback residuals."""
+
+    anchor: Params                  # synchronized parameters (no pod axis)
+    momentum: Params                # outer Nesterov buffer (no pod axis)
+    ef: ErrorFeedbackState          # residuals, stacked per pod
+
+
+def stack_pods(tree: Params, n_pods: int) -> Params:
+    """Replicate to a leading pod axis (pod-sharded on the mesh)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape), tree)
+
+
+def outer_init(params: Params, n_pods: int) -> OuterState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OuterState(
+        anchor=params,
+        momentum=jax.tree.map(zeros, params),
+        ef=ErrorFeedbackState(
+            residual=stack_pods(jax.tree.map(zeros, params), n_pods)),
+    )
+
+
+def inner_steps(train_step: Callable, params_pods, opt_pods, batch_pods,
+                step: jax.Array):
+    """The local phase: one (or more) pod-independent inner steps.
+
+    ``train_step(params, opt, batch, step) -> (params, opt, metrics)`` is the
+    single-pod step; vmap over the leading pod axis keeps each pod's gradient
+    reduction inside the pod.
+    """
+    return jax.vmap(train_step, in_axes=(0, 0, 0, None))(
+        params_pods, opt_pods, batch_pods, step)
+
+
+def global_sync(params_pods: Params, outer: OuterState, *,
+                outer_lr: float = 0.7, outer_momentum: float = 0.9,
+                compress: bool = True,
+                gathered_specs: Params | None = None) -> tuple[Params, OuterState]:
+    """The global phase: one cross-pod exchange per H inner steps.
+
+    Per-pod delta vs. the anchor -> int8 error-feedback compression (4× fewer
+    cross-pod bytes; the residual rides the next exchange) -> pod-mean ->
+    outer Nesterov update of the anchor -> broadcast back to every pod.
+
+    ``gathered_specs`` (pod-replicated PartitionSpecs) pins the cross-pod
+    gather to happen ON THE QUANTIZED TENSORS — without it GSPMD may hoist
+    the dequant before the collective and erase the wire savings (§Perf).
+    """
+    n_pods = jax.tree.leaves(params_pods)[0].shape[0]
+
+    delta_pods = jax.tree.map(
+        lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
+        params_pods, outer.anchor)
+
+    if compress:
+        q, scales, ef = ef_int8_compress(delta_pods, outer.ef)
+        if gathered_specs is not None:
+            q = jax.tree.map(jax.lax.with_sharding_constraint, q,
+                             gathered_specs)
+        delta_pods = ef_int8_decompress(q, scales)
+    else:
+        ef = outer.ef
+        if gathered_specs is not None:
+            delta_pods = jax.tree.map(jax.lax.with_sharding_constraint,
+                                      delta_pods, gathered_specs)
+    delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta_pods)
+
+    # outer Nesterov (DiLoCo): v <- mu v + delta; anchor += lr (mu v + delta)
+    momentum = jax.tree.map(
+        lambda v, d: outer_momentum * v + d, outer.momentum, delta)
+    anchor = jax.tree.map(
+        lambda a, v, d: (a.astype(jnp.float32)
+                         + outer_lr * (outer_momentum * v + d)).astype(a.dtype),
+        outer.anchor, momentum, delta)
+
+    params_pods = stack_pods(anchor, n_pods)
+    return params_pods, OuterState(anchor=anchor, momentum=momentum, ef=ef)

@@ -1,0 +1,324 @@
+"""Shared execution primitives for the three engines (Hama / AM-Hama / GraphHP).
+
+The engines differ only in *when* they exchange across partitions and *which*
+edges deliver in a step; the primitives here are common:
+
+  ``exchange``         gather exported out-states across the partition cut
+                       (the once-per-iteration distributed communication),
+  ``deliver``          generate + combine messages along a selected edge set
+                       into the per-vertex pending inboxes,
+  ``apply_phase``      run the vertex program on a masked vertex set,
+                       consuming pending inboxes (Pregel reactivation rules).
+
+All primitives run on partition-major arrays ``(P, ...)`` and are pure, so the
+same code serves the host (all partitions on one device; used by tests and the
+paper-table benchmarks) and the distributed `shard_map` lowering (a block of
+partitions per device; used by the multi-pod dry-run) — only the export-table
+gather differs, which is injected as ``gather_table``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import PartitionedGraph
+from repro.core.vertex_program import (Channel, StepInfo, VertexProgram,
+                                       combine_segments)
+
+__all__ = ["Counters", "EngineState", "init_state", "exchange", "deliver",
+           "apply_phase", "merge_inbox", "quiescent", "gather_per_partition"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Counters:
+    """The paper's metrics: I (global iterations), M (network messages), plus
+    in-memory message and pseudo-superstep counts."""
+
+    iterations: jax.Array          # () int32
+    pseudo_supersteps: jax.Array   # (P,) int32
+    net_messages: jax.Array        # () int32  — combined, crossing the cut
+    net_local_messages: jax.Array  # () int32  — combined, same-partition RPC (Hama)
+    mem_messages: jax.Array        # () int32  — raw in-memory deliveries
+
+    @staticmethod
+    def zeros(p: int) -> "Counters":
+        z = jnp.zeros((), jnp.int32)
+        return Counters(z, jnp.zeros((p,), jnp.int32), z, z, z)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    state: Any                 # app vertex state: dict of (P, Vp, ...)
+    out: Any                   # current out-state: dict of (P, Vp, ...)
+    send: jax.Array            # (P, Vp) bool — sent in the last apply
+    active: jax.Array          # (P, Vp) bool
+    export_out: Any            # accumulated out-state for the next exchange
+    export_send: jax.Array     # (P, Vp) bool accumulated
+    pending: Any               # {ch: (payload tuple (P,Vp,...), has (P,Vp))}
+    halo_out: Any              # dict of (P, H, ...) — gathered remote out-states
+    halo_send: jax.Array       # (P, H) bool
+    counters: Counters
+
+
+def gather_per_partition(leaf: jax.Array, idx: jax.Array) -> jax.Array:
+    """leaf (P, N, ...) gathered with idx (P, K) -> (P, K, ...)."""
+    return jax.vmap(lambda l, i: l[i])(leaf, idx)
+
+
+def _empty_inbox(prog: VertexProgram, p: int, vp: int):
+    return {
+        ch.name: (ch.identity_like((p, vp)), jnp.zeros((p, vp), bool))
+        for ch in prog.channels
+    }
+
+
+def init_state(graph: PartitionedGraph, prog: VertexProgram, vdata: Any) -> EngineState:
+    """Run the paper's initialization iteration (superstep 0)."""
+    state, out, send, active = prog.init(graph.vertex_gid, graph.vertex_mask, vdata)
+    send = jnp.logical_and(send, graph.vertex_mask)
+    active = jnp.logical_and(active, graph.vertex_mask)
+    p, vp, h = graph.n_partitions, graph.vp, graph.hp
+    halo_out = jax.tree.map(
+        lambda l: jnp.zeros((p, h) + l.shape[2:], l.dtype), out)
+    return EngineState(
+        state=state, out=out, send=send, active=active,
+        export_out=out, export_send=send,
+        pending=_empty_inbox(prog, p, vp),
+        halo_out=halo_out, halo_send=jnp.zeros((p, h), bool),
+        counters=Counters.zeros(p),
+    )
+
+
+# ---------------------------------------------------------------------------
+# exchange: the once-per-global-iteration distributed communication.
+# ---------------------------------------------------------------------------
+
+def exchange(
+    graph: PartitionedGraph,
+    es: EngineState,
+    gather_table: Callable[[Any], Any] | None = None,
+    wire_dtype=None,
+) -> EngineState:
+    """Gather exported out-states through the halo plan.
+
+    ``gather_table`` maps per-partition export buffers (P_local, X, ...) to the
+    globally-visible table (P, X, ...); identity on the host, an all-gather
+    over the device axis inside shard_map.
+
+    ``wire_dtype`` (e.g. bf16) quantizes float payloads *before* the wire —
+    a GraphHP ``Combine()``-style bandwidth optimization: halves exchange
+    bytes; safe for monotone/incremental programs (min/accumulate re-apply
+    the combiner on the receiver) at ≤0.4% value quantization.  §Perf.
+    """
+    exports = jax.tree.map(
+        lambda l: gather_per_partition(l, graph.export_slot), es.export_out)
+    exp_send = jnp.logical_and(
+        gather_per_partition(es.export_send, graph.export_slot),
+        graph.export_mask)
+    dtypes = jax.tree.map(lambda l: l.dtype, exports)
+    if wire_dtype is not None:
+        # quantize, then BITCAST to the integer carrier: a plain
+        # convert->allgather->convert chain gets folded away by XLA's
+        # simplifier (lossy-cast hoisting), erasing the wire savings
+        carrier = jnp.uint16 if wire_dtype == jnp.bfloat16 else jnp.uint8
+        exports = jax.tree.map(
+            lambda l: jax.lax.bitcast_convert_type(
+                l.astype(wire_dtype), carrier)
+            if jnp.issubdtype(l.dtype, jnp.floating) else l, exports)
+    if gather_table is not None:
+        exports = gather_table(exports)
+        exp_send = gather_table(exp_send)
+    if wire_dtype is not None:
+        exports = jax.tree.map(
+            lambda l, dt: jax.lax.bitcast_convert_type(l, wire_dtype)
+            .astype(dt) if l.dtype in (jnp.uint16, jnp.uint8) else l,
+            exports, dtypes)
+
+    def pull(leaf):
+        flat = leaf.reshape((-1,) + leaf.shape[2:])
+        return flat[graph.halo_ptr]
+
+    halo_out = jax.tree.map(pull, exports)
+    halo_send = jnp.logical_and(pull(exp_send), graph.halo_mask)
+    return dataclasses.replace(es, halo_out=halo_out, halo_send=halo_send)
+
+
+# ---------------------------------------------------------------------------
+# deliver: emit + combine along a selected edge set into pending inboxes.
+# ---------------------------------------------------------------------------
+
+def merge_inbox(ch: Channel, a, b):
+    """Pairwise monoid merge of two combined inboxes (payloads, has)."""
+    (pa, ha), (pb, hb) = a, b
+    has = jnp.logical_or(ha, hb)
+    if ch.combiner == "sum":
+        out = tuple(x + y for x, y in zip(pa, pb))
+    elif ch.combiner == "min":
+        out = tuple(jnp.minimum(x, y) for x, y in zip(pa, pb))
+    elif ch.combiner == "max":
+        out = tuple(jnp.maximum(x, y) for x, y in zip(pa, pb))
+    elif ch.combiner == "lexmin":
+        a_lt_b = _lex_lt(pa, pb)
+        out = tuple(jnp.where(a_lt_b, x, y) for x, y in zip(pa, pb))
+    else:  # pragma: no cover
+        raise ValueError(ch.combiner)
+    return out, has
+
+
+def _lex_lt(pa, pb):
+    lt = jnp.zeros(pa[0].shape, bool)
+    eq = jnp.ones(pa[0].shape, bool)
+    for x, y in zip(pa, pb):
+        lt = jnp.logical_or(lt, jnp.logical_and(eq, x < y))
+        eq = jnp.logical_and(eq, x == y)
+    return jnp.logical_or(lt, eq)  # ties keep a
+
+
+def deliver(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    es: EngineState,
+    edges: str,                  # 'all' | 'local' | 'remote'
+    use_halo: bool = True,
+) -> tuple[EngineState, jax.Array]:
+    """Messages from the last apply travel along ``edges`` into pending.
+
+    Returns (state', delivered_any (P,) bool).  Updates the message counters:
+    remote deliveries count as combined network messages (one per
+    (source-partition, destination-vertex) group, i.e. post-``Combine()``),
+    local deliveries as in-memory messages.
+    """
+    vp = graph.vp
+
+    # per-edge source out-state and send flag (local slots then halo slots)
+    def cat(local_leaf, halo_leaf):
+        return jnp.concatenate([local_leaf, halo_leaf], axis=1)
+
+    if use_halo:
+        src_tab = jax.tree.map(cat, es.out, es.halo_out)
+        send_tab = cat(es.send, es.halo_send)
+    else:
+        src_tab = jax.tree.map(
+            lambda l: jnp.concatenate(
+                [l, jnp.zeros((l.shape[0], graph.hp) + l.shape[2:], l.dtype)], axis=1),
+            es.out)
+        send_tab = cat(es.send, jnp.zeros((graph.n_partitions, graph.hp), bool))
+
+    out_src = jax.tree.map(lambda l: gather_per_partition(l, graph.edge_src), src_tab)
+    send_e = gather_per_partition(send_tab, graph.edge_src)
+
+    if edges == "all":
+        sel = graph.edge_mask
+    elif edges == "local":
+        sel = jnp.logical_and(graph.edge_mask, graph.edge_local)
+    elif edges == "remote":
+        sel = jnp.logical_and(graph.edge_mask, jnp.logical_not(graph.edge_local))
+    else:  # pragma: no cover
+        raise ValueError(edges)
+    base_valid = jnp.logical_and(sel, send_e)
+
+    pending = dict(es.pending)
+    delivered = jnp.zeros((graph.n_partitions,), bool)
+    net = jnp.zeros((), jnp.int32)
+    net_local = jnp.zeros((), jnp.int32)
+    mem = jnp.zeros((), jnp.int32)
+    for ch in prog.channels:
+        payloads, valid = prog.emit(
+            ch, out_src, graph.edge_w, graph.edge_src_gid, graph.edge_dst_gid)
+        valid = jnp.logical_and(valid, base_valid)
+        fresh = jax.vmap(
+            lambda pl, v, d: combine_segments(ch, pl, v, d, vp)
+        )(payloads, valid, graph.edge_dst)
+        pending[ch.name] = merge_inbox(ch, pending[ch.name], fresh)
+        delivered = jnp.logical_or(delivered, jnp.any(valid, axis=1))
+        # --- paper metrics -------------------------------------------------
+        grp_sent = jax.vmap(
+            lambda v, g: jax.ops.segment_max(v.astype(jnp.int32), g,
+                                             num_segments=graph.gp)
+        )(valid, graph.edge_group) > 0
+        grp_sent = jnp.logical_and(grp_sent, graph.group_mask)
+        net += jnp.sum(jnp.logical_and(grp_sent, graph.group_remote)).astype(jnp.int32)
+        net_local += jnp.sum(
+            jnp.logical_and(grp_sent, jnp.logical_not(graph.group_remote))
+        ).astype(jnp.int32)
+        mem += jnp.sum(jnp.logical_and(valid, graph.edge_local)).astype(jnp.int32)
+
+    c = es.counters
+    counters = dataclasses.replace(
+        c, net_messages=c.net_messages + net,
+        net_local_messages=c.net_local_messages + net_local,
+        mem_messages=c.mem_messages + mem)
+    return dataclasses.replace(es, pending=pending, counters=counters), delivered
+
+
+# ---------------------------------------------------------------------------
+# apply: run Compute() on a masked vertex set, consuming pending inboxes.
+# ---------------------------------------------------------------------------
+
+def _has_any_pending(prog: VertexProgram, pending) -> jax.Array:
+    flags = [pending[ch.name][1] for ch in prog.channels]
+    out = flags[0]
+    for f in flags[1:]:
+        out = jnp.logical_or(out, f)
+    return out
+
+
+def apply_phase(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    es: EngineState,
+    phase_mask: jax.Array,       # (P, Vp) bool — vertices allowed in this phase
+    info: StepInfo,
+    vdata: Any,
+) -> EngineState:
+    """Compute() on ``phase_mask ∧ (active ∨ has-message)`` vertices."""
+    has_msg = _has_any_pending(prog, es.pending)
+    compute = jnp.logical_and(graph.vertex_mask, phase_mask)
+    compute = jnp.logical_and(compute, jnp.logical_or(es.active, has_msg))
+
+    new_state, new_out, new_send, new_active = prog.apply(
+        es.state, es.pending, graph.vertex_gid, graph.vertex_mask, vdata, info)
+
+    def sel(new, old):
+        m = compute.reshape(compute.shape + (1,) * (new.ndim - compute.ndim))
+        return jnp.where(m, new, old)
+
+    state = jax.tree.map(sel, new_state, es.state)
+    out = jax.tree.map(sel, new_out, es.out)
+    send = jnp.logical_and(jnp.logical_and(new_send, compute), graph.vertex_mask)
+    active = jnp.where(compute, jnp.logical_and(new_active, graph.vertex_mask),
+                       es.active)
+
+    # consumed inboxes reset to the channel identity
+    pending = {}
+    for ch in prog.channels:
+        payloads, has = es.pending[ch.name]
+        keep = jnp.logical_not(compute)
+        ident = ch.identity_like(has.shape)
+        payloads = tuple(
+            jnp.where(keep.reshape(keep.shape + (1,) * (p.ndim - keep.ndim)), p, i)
+            for p, i in zip(payloads, ident))
+        pending[ch.name] = (payloads, jnp.logical_and(has, keep))
+
+    # export accumulation (SourceCombine) — only freshly computed sends count
+    export_out, export_send = prog.accumulate_export(
+        es.export_out, es.export_send, out, send)
+
+    return dataclasses.replace(
+        es, state=state, out=out, send=send, active=active, pending=pending,
+        export_out=export_out, export_send=export_send)
+
+
+def quiescent(prog: VertexProgram, es: EngineState) -> jax.Array:
+    """Termination: no active vertex, nothing pending, nothing left to export."""
+    return jnp.logical_not(
+        jnp.any(es.active)
+        | jnp.any(_has_any_pending(prog, es.pending))
+        | jnp.any(es.export_send))

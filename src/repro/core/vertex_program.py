@@ -1,0 +1,159 @@
+"""Vertex-centric program API (the paper's `Compute()` contract, vectorized).
+
+A :class:`VertexProgram` is the bulk-synchronous, array-level equivalent of
+subclassing Hama's ``Vertex`` class:
+
+  * ``init``    — superstep 0 (the paper's initialization iteration),
+  * ``emit``    — message generation along an edge (``sendMessage`` over the
+                  adjacency list), evaluated receiver-side from the sender's
+                  exported *out-state*,
+  * channels    — per-destination combination (``Combine()``) as a monoid;
+                  several typed channels model heterogeneous messages
+                  (paper §6.4, bipartite matching),
+  * ``apply``   — the body of ``Compute()``: consume the combined inbox,
+                  update vertex state, decide what to send and whether to
+                  stay active (``voteToHalt``),
+  * ``accumulate_export`` — ``SourceCombine()``: how out-states pile up in a
+                  partition's export buffer between global exchanges
+                  (default: keep-latest, the paper's default rule).
+
+All functions are pure and vectorized over every vertex/edge of a partition
+at once; the engines supply masking so semantics match per-vertex execution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Channel", "VertexProgram", "StepInfo", "combine_segments", "INT_INF"]
+
+INT_INF = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """A typed message channel with a monoid combiner.
+
+    combiner: 'sum' | 'min' | 'max' | 'lexmin'
+      'lexmin' performs lexicographic minimum over the payload tuple via
+      cascaded masked segment-mins (deterministic tie-breaking) — this is how
+      "pick one random request" style combiners (bipartite matching) are
+      expressed without int64 packing.
+    components: per-payload-component (dtype, identity) pairs.
+    """
+
+    name: str
+    combiner: str
+    components: Sequence[tuple[Any, Any]]
+
+    def identity_like(self, shape: tuple[int, ...]) -> tuple[jax.Array, ...]:
+        return tuple(jnp.full(shape, ident, dtype=dt) for dt, ident in self.components)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepInfo:
+    """What the engine tells `apply` about the current step."""
+
+    superstep: jax.Array | int          # global iteration index
+    pseudo_step: jax.Array | int        # pseudo-superstep within local phase
+    phase: str                          # 'init' | 'global' | 'local' | 'superstep'
+
+
+class VertexProgram:
+    """Base class; subclasses define the five hooks below."""
+
+    channels: tuple[Channel, ...] = ()
+    # whether boundary vertices participate in local phases (paper §4.2 —
+    # safe for incremental computations; accelerates convergence).
+    boundary_participates: bool = True
+
+    # -- hooks ------------------------------------------------------------
+    def init(self, gid, vmask, vdata):
+        """-> (state dict, out dict, send (bool per vertex), active)."""
+        raise NotImplementedError
+
+    def emit(self, ch: Channel, out_src, w, src_gid, dst_gid):
+        """-> (payload tuple, valid bool) per edge for channel ``ch``."""
+        raise NotImplementedError
+
+    def apply(self, state, inbox, gid, vmask, vdata, info: StepInfo):
+        """-> (state, out, send, active).  ``inbox[name] = (payloads, has_msg)``."""
+        raise NotImplementedError
+
+    def accumulate_export(self, acc_out, acc_send, new_out, new_send):
+        """SourceCombine(): default keep-latest-if-sent (paper default)."""
+        merged = jax.tree.map(
+            lambda a, n: _where_send(new_send, n, a), acc_out, new_out)
+        return merged, jnp.logical_or(acc_send, new_send)
+
+    def export_identity(self, out):
+        """Export-buffer reset value after an exchange.  Keep-latest programs
+        don't care (the send flag gates); accumulative (sum) programs override
+        with zeros so deltas re-accumulate from scratch."""
+        return out
+
+    def global_only_active(self, state, vdata):
+        """Optional (P, Vp) mask of vertices whose self-activity only needs
+        global-cadence scheduling (they are message-reactivated locally).
+        ``None`` means no such vertices.  Lets programs that wait on
+        cross-partition round-trips (bipartite matching's granted rights)
+        keep local phases terminating."""
+        return None
+
+
+def _where_send(send, new, old):
+    send_b = send.reshape(send.shape + (1,) * (new.ndim - send.ndim))
+    return jnp.where(send_b, new, old)
+
+
+# ---------------------------------------------------------------------------
+# Monoid segment combination.
+# ---------------------------------------------------------------------------
+
+def combine_segments(
+    ch: Channel,
+    payloads: tuple[jax.Array, ...],
+    valid: jax.Array,
+    dst: jax.Array,
+    num_segments: int,
+) -> tuple[tuple[jax.Array, ...], jax.Array]:
+    """Combine per-edge payloads into per-destination inboxes.
+
+    Returns (combined payload tuple each (num_segments, ...), has_msg bool).
+    Invalid edges contribute the channel identity.
+    """
+    has = jax.ops.segment_max(valid.astype(jnp.int32), dst,
+                              num_segments=num_segments) > 0
+
+    if ch.combiner == "sum":
+        outs = tuple(
+            jax.ops.segment_sum(jnp.where(valid, p, jnp.zeros_like(p)), dst,
+                                num_segments=num_segments)
+            for p in payloads)
+        return outs, has
+
+    if ch.combiner in ("min", "max"):
+        op = jax.ops.segment_min if ch.combiner == "min" else jax.ops.segment_max
+        outs = []
+        for p, (dt, ident) in zip(payloads, ch.components):
+            masked = jnp.where(valid, p, jnp.asarray(ident, dtype=dt))
+            outs.append(op(masked, dst, num_segments=num_segments))
+        return tuple(outs), has
+
+    if ch.combiner == "lexmin":
+        # cascaded masked segment-min: component k participates only where all
+        # previous components equal their combined minimum.
+        eligible = valid
+        outs = []
+        for p, (dt, ident) in zip(payloads, ch.components):
+            masked = jnp.where(eligible, p, jnp.asarray(ident, dtype=dt))
+            m = jax.ops.segment_min(masked, dst, num_segments=num_segments)
+            outs.append(m)
+            eligible = jnp.logical_and(eligible, p == m[dst])
+        return tuple(outs), has
+
+    raise ValueError(f"unknown combiner {ch.combiner!r}")

@@ -1,0 +1,6 @@
+from repro.ft.heartbeat import HeartbeatMonitor, WorkerState
+from repro.ft.elastic import ElasticPlan, replan_partitions
+from repro.ft.straggler import StragglerMitigator
+
+__all__ = ["HeartbeatMonitor", "WorkerState", "ElasticPlan",
+           "replan_partitions", "StragglerMitigator"]

@@ -1,0 +1,32 @@
+"""Elastic scaling: replan partition/shard ownership when the worker count
+changes between restarts (grow or shrink), keeping data movement minimal."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    n_partitions: int
+    old_workers: int
+    new_workers: int
+    owner: np.ndarray          # (n_partitions,) new owner per partition
+    moved: int                 # partitions that changed owner
+
+
+def replan_partitions(n_partitions: int, old_workers: int,
+                      new_workers: int) -> ElasticPlan:
+    """Contiguous-block ownership before and after; only the boundary blocks
+    move.  The same plan reshards training state: leaves saved per shard
+    group are re-gathered by `checkpoint.load_checkpoint(shardings=new)`."""
+    old_owner = np.arange(n_partitions) * old_workers // n_partitions
+    new_owner = np.arange(n_partitions) * new_workers // n_partitions
+    moved = int(np.sum(old_owner * new_workers != new_owner * old_workers))
+    return ElasticPlan(n_partitions, old_workers, new_workers,
+                       new_owner.astype(np.int32),
+                       moved=int(np.sum(
+                           new_owner != np.minimum(old_owner,
+                                                   new_workers - 1))))

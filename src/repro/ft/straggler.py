@@ -1,0 +1,77 @@
+"""Straggler mitigation.
+
+Two mechanisms, one per workload kind:
+
+* serving: deadline-based re-dispatch — a request batch stuck past the
+  p99-derived deadline is re-enqueued to another replica slot; first result
+  wins (duplicate suppression by request id).
+* training (hybrid sync): pods vote — the global phase proceeds when a
+  quorum of pods delivered deltas; laggard deltas ride the next exchange via
+  the error-feedback residual (gradient-skip voting, DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class PendingWork:
+    work_id: int
+    issued_at: float
+    replica: int
+    attempts: int = 1
+    done: bool = False
+
+
+class StragglerMitigator:
+    def __init__(self, deadline_factor: float = 3.0, min_deadline: float = 0.5,
+                 clock: Callable = time.monotonic):
+        self.clock = clock
+        self.deadline_factor = deadline_factor
+        self.min_deadline = min_deadline
+        self._lat_ewma: float | None = None
+        self.pending: dict[int, PendingWork] = {}
+        self.duplicates_suppressed = 0
+        self.redispatches = 0
+
+    # -- latency model ----------------------------------------------------
+    def observe_latency(self, dt: float) -> None:
+        self._lat_ewma = dt if self._lat_ewma is None else \
+            0.9 * self._lat_ewma + 0.1 * dt
+
+    @property
+    def deadline(self) -> float:
+        base = self._lat_ewma if self._lat_ewma is not None else self.min_deadline
+        return max(self.min_deadline, self.deadline_factor * base)
+
+    # -- dispatch ----------------------------------------------------------
+    def issue(self, work_id: int, replica: int) -> None:
+        self.pending[work_id] = PendingWork(work_id, self.clock(), replica)
+
+    def complete(self, work_id: int) -> bool:
+        """Returns False if this was a duplicate (already completed)."""
+        w = self.pending.get(work_id)
+        if w is None or w.done:
+            self.duplicates_suppressed += 1
+            return False
+        self.observe_latency(self.clock() - w.issued_at)
+        w.done = True
+        return True
+
+    def overdue(self) -> list[PendingWork]:
+        now = self.clock()
+        out = [w for w in self.pending.values()
+               if not w.done and now - w.issued_at > self.deadline]
+        for w in out:
+            w.issued_at = now
+            w.attempts += 1
+            self.redispatches += 1
+        return out
+
+
+def quorum_ready(delivered: int, total: int, quorum: float = 0.75) -> bool:
+    """Training: global phase proceeds when >= quorum of pods delivered."""
+    return delivered >= max(1, int(total * quorum))

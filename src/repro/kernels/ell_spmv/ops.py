@@ -1,0 +1,59 @@
+"""Jitted wrapper + layout conversion for the ELL semiring SpMV kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ell_spmv.ell_spmv import ell_spmv_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "block_rows",
+                                             "block_slices", "interpret"))
+def ell_spmv(idx, val, msk, x, *, semiring: str = "add_mul",
+             block_rows: int = 256, block_slices: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """Jitted semiring SpMV: y[r] = ⊕_k val[r,k] ⊗ x[idx[r,k]].
+
+    ``interpret=True`` executes the Pallas kernel body on CPU (this
+    container); on a TPU runtime pass ``interpret=False`` to lower to Mosaic.
+    """
+    return ell_spmv_pallas(idx, val, msk, x, semiring=semiring,
+                           block_rows=block_rows, block_slices=block_slices,
+                           interpret=interpret)
+
+
+def to_ell(edges: np.ndarray, n_rows: int,
+           weights: np.ndarray | None = None,
+           pad_rows: int = 8, pad_slices: int = 128):
+    """Pack a COO edge list (src, dst) into destination-major ELL arrays.
+
+    Returns (idx (R,K) int32, val (R,K) f32, msk (R,K) bool) with
+    R = n_rows rounded up to ``pad_rows`` and K = max in-degree rounded up to
+    ``pad_slices`` (TPU lane alignment).
+    """
+    edges = np.asarray(edges)
+    if weights is None:
+        weights = np.ones(len(edges), dtype=np.float32)
+    dst = edges[:, 1]
+    order = np.argsort(dst, kind="stable")
+    src_s, dst_s, w_s = edges[order, 0], dst[order], weights[order]
+    indeg = np.bincount(dst_s, minlength=n_rows)
+    kmax = int(indeg.max()) if len(indeg) else 1
+    K = max(pad_slices, ((kmax + pad_slices - 1) // pad_slices) * pad_slices)
+    R = ((n_rows + pad_rows - 1) // pad_rows) * pad_rows
+    idx = np.zeros((R, K), dtype=np.int32)
+    val = np.zeros((R, K), dtype=np.float32)
+    msk = np.zeros((R, K), dtype=bool)
+    slot = np.zeros(n_rows, dtype=np.int64)
+    for s, d, w in zip(src_s, dst_s, w_s):
+        k = slot[d]
+        idx[d, k] = s
+        val[d, k] = w
+        msk[d, k] = True
+        slot[d] += 1
+    return jnp.asarray(idx), jnp.asarray(val), jnp.asarray(msk)

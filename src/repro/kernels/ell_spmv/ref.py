@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the sliced-ELL semiring SpMV."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ell_spmv.ell_spmv import SEMIRINGS
+
+
+def ell_spmv_ref(idx, val, msk, x, *, semiring: str = "add_mul") -> jax.Array:
+    combine, times, ident = SEMIRINGS[semiring]
+    prod = times(val, x[idx])
+    prod = jnp.where(msk, prod, jnp.asarray(ident, prod.dtype))
+    if semiring == "add_mul":
+        return jnp.sum(prod, axis=1)
+    if semiring in ("min_add", "min_mul"):
+        return jnp.min(prod, axis=1)
+    if semiring == "max_add":
+        return jnp.max(prod, axis=1)
+    raise ValueError(semiring)

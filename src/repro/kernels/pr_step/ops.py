@@ -1,0 +1,21 @@
+"""Jitted wrapper for the fused PageRank pseudo-superstep kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.pr_step.pr_step import fused_pr_step_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("damping", "tol", "block_rows",
+                                             "block_slices", "interpret"))
+def fused_pr_step(idx, val, msk, delta, send, rank, *, damping: float = 0.85,
+                  tol: float = 1e-4, block_rows: int = 256,
+                  block_slices: int = 128, interpret: bool = True):
+    return fused_pr_step_pallas(idx, val, msk, delta, send, rank,
+                                damping=damping, tol=tol,
+                                block_rows=block_rows,
+                                block_slices=block_slices,
+                                interpret=interpret)

@@ -1,0 +1,92 @@
+"""Fused GraphHP pseudo-superstep for incremental PageRank (Pallas).
+
+One local-phase pseudo-superstep of Algorithm 5 is, per partition:
+
+    delta_in[r] = Σ_k  0.85 · w[r,k] · (send[s] ? delta[s] : 0),  s = idx[r,k]
+    rank'       = rank + delta_in
+    send'       = delta_in > Δ
+
+The unfused engine path runs gather → segment-sum → add → compare as four HLO
+ops with HBM round-trips between them; since the local phase iterates this
+to convergence (the paper's whole point is that it iterates *a lot*), fusing
+the chain into one VMEM-resident kernel removes three HBM round-trips per
+pseudo-superstep.  Same blocking scheme as ell_spmv: grid (R/Bm, K/Bk),
+(Bm, Bk) edge tiles, frontier vectors whole in VMEM, output accumulated
+across the K grid axis with the epilogue on the final K step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, val_ref, msk_ref, delta_ref, send_ref, rank_ref,
+            acc_ref, rank_out_ref, send_out_ref, *, damping: float,
+            tol: float, n_kblocks: int):
+    k = pl.program_id(1)
+
+    idx = idx_ref[...]
+    val = val_ref[...]
+    msk = msk_ref[...]
+    delta = delta_ref[...]
+    send = send_ref[...]
+
+    contrib = jnp.where(send[idx], delta[idx], 0.0)
+    contrib = jnp.where(msk, damping * val * contrib, 0.0)
+    partial = jnp.sum(contrib, axis=1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _acc():
+        acc_ref[...] = acc_ref[...] + partial
+
+    @pl.when(k == n_kblocks - 1)
+    def _epilogue():
+        d_in = acc_ref[...]
+        rank_out_ref[...] = rank_ref[...] + d_in
+        send_out_ref[...] = d_in > tol
+
+
+def fused_pr_step_pallas(idx, val, msk, delta, send, rank, *,
+                         damping: float = 0.85, tol: float = 1e-4,
+                         block_rows: int = 256, block_slices: int = 128,
+                         interpret: bool = True):
+    """-> (rank', delta_in, send')."""
+    r, kk = idx.shape
+    bm = min(block_rows, r)
+    bk = min(block_slices, kk)
+    nkb = pl.cdiv(kk, bk)
+    grid = (pl.cdiv(r, bm), nkb)
+    n = delta.shape[0]
+
+    acc, rank_out, send_out = pl.pallas_call(
+        functools.partial(_kernel, damping=damping, tol=tol, n_kblocks=nkb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((n,), lambda i, k: (0,)),
+            pl.BlockSpec((n,), lambda i, k: (0,)),
+            pl.BlockSpec((bm,), lambda i, k: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, k: (i,)),
+            pl.BlockSpec((bm,), lambda i, k: (i,)),
+            pl.BlockSpec((bm,), lambda i, k: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r,), rank.dtype),
+            jax.ShapeDtypeStruct((r,), rank.dtype),
+            jax.ShapeDtypeStruct((r,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(idx, val, msk, delta, send, rank)
+    return rank_out, acc, send_out

@@ -1,0 +1,35 @@
+"""Production mesh definitions (TPU v5e).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips — the ``pod`` axis is the
+GraphHP partition axis for hybrid-sync training (DESIGN.md §6).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — for tests."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,177 @@
+"""Dry-run cell construction: for every (arch × input-shape × mesh) build the
+jittable step function + ShapeDtypeStruct inputs + shardings, without ever
+allocating real arrays (ShapeDtypeStruct end to end).
+
+Cells:
+  train_4k     -> train_step   (single-pod) / vmapped-per-pod hybrid-sync
+                  inner step (multi-pod; the pod axis carries stacked
+                  replicas, DESIGN.md §6)
+  prefill_32k  -> prefill      (batch over data [+pod])
+  decode_32k   -> serve_step   (one token against a seq_len KV cache;
+                  cache sequence-sharded over model)
+  long_500k    -> serve_step for sub-quadratic archs only
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.models.registry import get_model, param_shapes
+from repro.optim.adamw import AdamWState
+from repro.sharding.rules import batch_spec, cache_specs, param_specs
+from repro.sharding.util import named, sanitize_specs
+from repro.train.trainer import make_train_step
+
+BF16 = jnp.bfloat16
+
+
+class Cell(NamedTuple):
+    label: str
+    fn: Callable                 # jittable
+    args: tuple                  # ShapeDtypeStruct pytree(s)
+    in_shardings: tuple
+    donate: tuple | None = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _tree_sds(tree):
+    return jax.tree.map(lambda l: _sds(l.shape, l.dtype), tree)
+
+
+def token_shapes(cfg: ArchConfig, shape: ShapeConfig, with_labels: bool):
+    """Batch ShapeDtypeStructs for this arch (modality stubs included)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        s = s - cfg.vis_tokens          # patches + text = nominal seq_len
+    batch = {"tokens": _sds((b, s), jnp.int32)}
+    if with_labels:
+        batch["labels"] = _sds((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        batch["vis_embed"] = _sds((b, cfg.vis_tokens, cfg.vis_dim), BF16)
+    if cfg.family == "audio":
+        batch["audio_embed"] = _sds((b, cfg.enc_frames, cfg.d_model), BF16)
+    return batch
+
+
+def runnable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is this (arch, shape) cell runnable?  (see DESIGN.md §5 skip table)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention stack: 500k-token decode requires "
+                       "sub-quadratic attention (run for ssm/hybrid/"
+                       "sliding-window archs only)")
+    return True, ""
+
+
+def opt_moment_dtype(cfg: ArchConfig):
+    """bf16 moments above 50B params so optimizer state fits v5e HBM."""
+    from repro.models.registry import count_params
+    return BF16 if count_params(cfg) > 50e9 else jnp.float32
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               multi_pod: bool, microbatches: int = 1) -> Cell:
+    api = get_model(cfg)
+    pshapes = param_shapes(cfg, BF16)
+    pspecs = sanitize_specs(param_specs(pshapes), pshapes, mesh)
+    n_pods = mesh.shape.get("pod", 1)
+
+    if shape.kind == "train":
+        return _train_cell(cfg, api, shape, mesh, multi_pod, pshapes, pspecs,
+                           n_pods, microbatches)
+    if shape.kind == "prefill":
+        return _prefill_cell(cfg, api, shape, mesh, multi_pod, pshapes,
+                             pspecs)
+    return _decode_cell(cfg, api, shape, mesh, multi_pod, pshapes, pspecs)
+
+
+# ---------------------------------------------------------------------------
+
+def _train_cell(cfg, api, shape, mesh, multi_pod, pshapes, pspecs, n_pods,
+                microbatches: int = 1):
+    mdt = opt_moment_dtype(cfg)
+    opt_shapes = AdamWState(
+        mu=jax.tree.map(lambda l: _sds(l.shape, mdt), pshapes),
+        nu=jax.tree.map(lambda l: _sds(l.shape, mdt), pshapes),
+        step=_sds((), jnp.int32))
+    opt_specs = AdamWState(mu=pspecs, nu=pspecs, step=P())
+    batch_shapes = token_shapes(cfg, shape, with_labels=True)
+    bspecs = sanitize_specs(batch_spec(batch_shapes), batch_shapes, mesh)
+    step_fn = make_train_step(cfg, api, microbatches=microbatches)
+
+    if not multi_pod:
+        args = (pshapes, opt_shapes, batch_shapes, _sds((), jnp.int32))
+        shard = (named(pspecs, mesh), named(opt_specs, mesh),
+                 named(bspecs, mesh), NamedSharding(mesh, P()))
+        return Cell(f"{cfg.name}:{shape.name}", step_fn, args, shard)
+
+    # multi-pod: hybrid-sync inner step — per-pod replicas stacked on a
+    # leading pod axis, vmapped so gradient reductions stay pod-local.
+    def stackP(tree, specs):
+        sh = jax.tree.map(lambda l: _sds((n_pods,) + l.shape, l.dtype), tree)
+        sp = jax.tree.map(lambda s: P("pod", *tuple(s)), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+        return sh, sp
+
+    p_sh, p_sp = stackP(pshapes, pspecs)
+    o_sh, o_sp = stackP(opt_shapes, opt_specs)
+    pb = shape.global_batch // n_pods
+    b_sh = jax.tree.map(
+        lambda l: _sds((n_pods, pb) + l.shape[1:], l.dtype), batch_shapes)
+    b_sp = jax.tree.map(lambda s: P("pod", *tuple(s)), bspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+    b_sp = sanitize_specs(b_sp, b_sh, mesh)
+
+    from repro.core.hybrid_sync import inner_steps
+    fn = partial(inner_steps, step_fn)
+    args = (p_sh, o_sh, b_sh, _sds((), jnp.int32))
+    shard = (named(p_sp, mesh), named(o_sp, mesh), named(b_sp, mesh),
+             NamedSharding(mesh, P()))
+    return Cell(f"{cfg.name}:{shape.name}", fn, args, shard)
+
+
+def _prefill_cell(cfg, api, shape, mesh, multi_pod, pshapes, pspecs):
+    batch_shapes = token_shapes(cfg, shape, with_labels=False)
+    data_axes = ("pod", "data") if multi_pod else "data"
+    bspecs = sanitize_specs(
+        batch_spec(batch_shapes, data=data_axes), batch_shapes, mesh)
+    cache_shapes = jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len, BF16))
+    cspecs = sanitize_specs(
+        cache_specs(cache_shapes, data=data_axes), cache_shapes, mesh)
+
+    def fn(params, batch, cache):
+        logits, cache = api.prefill(params, batch, cache, cfg)
+        return logits, cache
+
+    args = (pshapes, batch_shapes, cache_shapes)
+    shard = (named(pspecs, mesh), named(bspecs, mesh), named(cspecs, mesh))
+    return Cell(f"{cfg.name}:{shape.name}", fn, args, shard)
+
+
+def _decode_cell(cfg, api, shape, mesh, multi_pod, pshapes, pspecs):
+    b = shape.global_batch
+    data_axes = ("pod", "data") if multi_pod else "data"
+    cache_shapes = jax.eval_shape(
+        lambda: api.init_cache(cfg, b, shape.seq_len, BF16))
+    cspecs = sanitize_specs(
+        cache_specs(cache_shapes, data=data_axes), cache_shapes, mesh)
+    tok = _sds((b, 1), jnp.int32)
+    tok_spec = sanitize_specs(P(data_axes, None), tok, mesh)
+
+    def fn(params, token, cache, cur_len):
+        return api.decode_step(params, token, cache, cur_len, cfg)
+
+    args = (pshapes, tok, cache_shapes, _sds((), jnp.int32))
+    shard = (named(pspecs, mesh), NamedSharding(mesh, tok_spec),
+             named(cspecs, mesh), NamedSharding(mesh, P()))
+    return Cell(f"{cfg.name}:{shape.name}", fn, args, shard)

@@ -1,0 +1,96 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+        --steps 100 --smoke            # CPU-sized sanity run
+    PYTHONPATH=src python -m repro.launch.train --arch jamba-1.5-large-398b \
+        --dry-run                      # lower+compile on the production mesh
+
+On real hardware this process runs per-host under the cluster scheduler; the
+launcher wires together mesh construction, sharding rules, the data pipeline,
+hybrid-sync (multi-pod), async checkpointing and the heartbeat monitor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on host devices")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile for the production mesh, no execution")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--hybrid-sync-h", type=int, default=8,
+                    help="inner steps per cross-pod sync (multi-pod)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # delegate to the dry-run module (it must own process start-up to set
+        # XLA_FLAGS before jax initializes)
+        import subprocess
+        import os
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", "train_4k",
+               "--mesh", "multi" if args.multi_pod else "single"]
+        return subprocess.call(cmd, env=dict(os.environ))
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import AsyncCheckpointer
+    from repro.checkpoint.ckpt import latest_checkpoint, load_checkpoint
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, SyntheticTokens
+    from repro.ft.heartbeat import HeartbeatMonitor
+    from repro.models.registry import count_params, get_model
+    from repro.optim.adamw import adamw_init
+    from repro.train.trainer import make_train_step
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    api = get_model(cfg)
+    print(f"[train] {cfg.name}: {count_params(cfg)/1e6:.1f}M params, "
+          f"{len(jax.devices())} device(s)")
+
+    params = api.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    opt = adamw_init(params)
+    start = 0
+    latest = latest_checkpoint(args.ckpt_dir)
+    if latest:
+        state, start = load_checkpoint(latest, {"p": params, "o": opt})
+        params, opt = state["p"], state["o"]
+        print(f"[train] restored step {start} from {latest}")
+
+    step_fn = jax.jit(make_train_step(cfg, api, total_steps=args.steps))
+    data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                      global_batch=args.batch))
+    ckpt = AsyncCheckpointer(args.ckpt_dir, keep=3)
+    mon = HeartbeatMonitor(n_workers=1)
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        params, opt, m = step_fn(params, opt, batch, jnp.asarray(step))
+        mon.beat(0)
+        if step % 10 == 0:
+            print(f"[train] step {step}: loss {float(m['loss']):.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+        if step and step % args.ckpt_every == 0:
+            ckpt.save(step, {"p": params, "o": opt})
+    ckpt.save(args.steps, {"p": params, "o": opt})
+    ckpt.close()
+    print("[train] done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

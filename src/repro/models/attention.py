@@ -1,0 +1,426 @@
+"""Attention: GQA (full / sliding-window) and MLA, with memory-bounded
+chunked-flash prefill/train paths and a distributed flash-decode.
+
+Design notes (DESIGN.md §5):
+
+* **Prefill/train** uses a pure-jnp chunked flash attention (scan over KV
+  chunks with online softmax) so 32k contexts never materialize S×S scores.
+  Sliding-window layers slice exactly one (window + chunk) KV band per query
+  chunk instead of scanning the whole sequence — the gemma local layers are
+  then O(S·W) compute with no cross-shard traffic when the sequence is
+  sharded contiguously.
+* **Decode** computes per-shard partial (m, ℓ, o) flash statistics; when the
+  KV cache is sequence-sharded (``axis_name`` set inside shard_map), partials
+  merge with one tiny all-gather + log-sum-exp combine — any head count works
+  on any mesh, which is how 24-head/40-head archs run on a 16-way model axis.
+* **Sliding-window decode caches are ring buffers** of size W, not S — a
+  34-layer gemma3 cache at 500k context costs MBs, not GBs.
+* **MLA** (deepseek) caches only the compressed latent (c_kv, k_rope) and
+  decodes in absorbed form: q is folded through W_UK once, attention runs in
+  the 512-dim latent space, and the output unfolds through W_UV — per-token
+  decode FLOPs scale with the latent rank, not heads × head_dim.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, matmul, softcap
+
+Params = dict
+NEG_INF = -1e30
+
+
+def _divisor_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (static, trace-time)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype=jnp.float32) -> Params:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kvh * hd, dtype),
+        "wv": dense_init(ks[2], d, kvh * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+
+
+def mla_init(key, cfg, dtype=jnp.float32) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    r, nope, rope, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                         cfg.v_head_dim)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], d, h * (nope + rope), dtype),
+        "w_dkv": dense_init(ks[1], d, r + rope, dtype),
+        "w_uk": (jax.random.normal(ks[2], (r, h, nope), jnp.float32)
+                 / math.sqrt(r)).astype(dtype),
+        "w_uv": (jax.random.normal(ks[3], (r, h, vd), jnp.float32)
+                 / math.sqrt(r)).astype(dtype),
+        "wo": dense_init(ks[4], h * vd, d, dtype),
+        "kv_norm": jnp.ones((r,), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (prefill / train)
+# ---------------------------------------------------------------------------
+
+def _block_attn(qb, kb, vb, qpos, kpos, *, causal, window, cap, scale,
+                kv_len, kv_start=None):
+    """One (Cq, Ckv) block of masked scores (B,KVH,G,Cq,Ckv), f32."""
+    # qb (B,Cq,KVH,G,hd) kb (B,Ckv,KVH,hd) -> s (B,KVH,G,Cq,Ckv)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                   preferred_element_type=jnp.float32)
+    s = s * scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    mask = kpos[None, :] < kv_len
+    if causal:
+        mask = jnp.logical_and(mask, kpos[None, :] <= qpos[:, None])
+    if window > 0:
+        mask = jnp.logical_and(mask, qpos[:, None] - kpos[None, :] < window)
+    mask = mask[None, None, None]
+    if kv_start is not None:      # left-padded serving batches
+        mask = jnp.logical_and(
+            mask, (kpos[None, :] >= kv_start[:, None])[:, None, None, None])
+    s = jnp.where(mask, s, NEG_INF)
+    return s
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                    q_offset=0, kv_len=None, chunk_q=512, chunk_kv=1024,
+                    scale=None, kv_start=None):
+    """Memory-bounded attention.
+
+    q (B,Sq,H,hd); k,v (B,Skv,KVH,hd).  ``q_offset`` is the global position of
+    q[0] (prefill continuation); ``kv_len`` masks cache padding.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kv_len = skv if kv_len is None else kv_len
+    cq = _divisor_chunk(sq, chunk_q)
+    ckv = _divisor_chunk(skv, chunk_kv)
+    nq, nkv = sq // cq, skv // ckv
+
+    qr = q.reshape(b, nq, cq, kvh, g, hd)
+
+    def q_chunk(qi, qb):
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        if window > 0:
+            # one KV band of width (window + cq) covers the whole chunk
+            band = min(window + cq, skv)
+            start = jnp.clip(qpos[0] - window + 1, 0, skv - band)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpos = start + jnp.arange(band)
+            s = _block_attn(qb, kb, vb, qpos, kpos, causal=causal,
+                            window=window, cap=cap, scale=scale,
+                            kv_len=kv_len, kv_start=kv_start)
+            m = jnp.max(s, axis=-1)
+            p = jnp.exp(s - m[..., None])
+            l = jnp.sum(p, axis=-1)
+            acc = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(q.dtype), vb,
+                             preferred_element_type=jnp.float32)
+            out = acc / jnp.maximum(
+                l.transpose(0, 3, 1, 2), 1e-30)[..., None]
+            return out.astype(q.dtype)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * ckv, ckv, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * ckv, ckv, axis=1)
+            kpos = ki * ckv + jnp.arange(ckv)
+            s = _block_attn(qb, kb, vb, qpos, kpos, causal=causal, window=0,
+                            cap=cap, scale=scale, kv_len=kv_len,
+                            kv_start=kv_start)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kvh, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv),
+                                      unroll=nkv if unroll_all else 1)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,kvh,g,cq,hd)
+        return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    # Small block grids are unrolled so XLA's cost analysis sees every block
+    # (a scan body is counted once); big grids (32k prefill) stay rolled and
+    # the roofline adds the analytic attention-core correction instead
+    # (EXPERIMENTS.md §Roofline methodology).  Window layers have one band
+    # per q chunk, so only nq matters for them.
+    unroll_all = (nq * (1 if window > 0 else nkv)) <= 64
+
+    # checkpoint per q-chunk: without it the backward of the (q × kv) scan
+    # nest saves every score block — the full S×S matrix flash attention
+    # exists to avoid.  With it, only per-chunk outputs persist and score
+    # blocks are recomputed chunk-at-a-time in the backward sweep.
+    def scan_body(_, args):
+        return None, jax.checkpoint(lambda a: q_chunk(*a))(args)
+
+    _, outs = jax.lax.scan(
+        scan_body, None, (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5)),
+        unroll=nq if unroll_all else 1)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k, v, kpos, cur_len, *, cap=0.0, window=0,
+                     scale=None, axis_name=None, kv_start=None):
+    """q (B,1,H,hd); k,v (B,S,KVH,hd) — S is the *local* cache shard inside
+    shard_map (``axis_name`` set) or the full cache; kpos (S,) are the global
+    positions of the cache rows.  Flash partials merge across shards with one
+    small all-gather (o, m, ℓ per head)."""
+    b, _, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(b, kvh, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    valid = kpos < cur_len
+    if window > 0:
+        valid = jnp.logical_and(valid, kpos > cur_len - 1 - window)
+    valid = jnp.logical_and(valid, kpos >= 0)   # unwritten ring slots
+    valid = valid[None, None, None]
+    if kv_start is not None:
+        valid = jnp.logical_and(
+            valid, (kpos[None, :] >= kv_start[:, None])[:, None, None])
+    s = jnp.where(valid, s, NEG_INF)
+
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype), v,
+                   preferred_element_type=jnp.float32)
+
+    if axis_name is not None:
+        # merge partials: tiny (n_shards, b, kvh, g, [hd|1]) all-gathers
+        ms = jax.lax.all_gather(m, axis_name)
+        ls = jax.lax.all_gather(l, axis_name)
+        os_ = jax.lax.all_gather(o, axis_name)
+        m_g = jnp.max(ms, axis=0)
+        corr = jnp.exp(ms - m_g[None])
+        l_g = jnp.sum(ls * corr, axis=0)
+        o_g = jnp.sum(os_ * corr[..., None], axis=0)
+        out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+    else:
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer forward (train/prefill & decode), cache management
+# ---------------------------------------------------------------------------
+
+def gqa_cache_init(cfg, spec, batch: int, max_len: int, dtype) -> Params:
+    s = min(max_len, spec.window) if spec.attn == "window" else max_len
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, s, kvh, hd), dtype),
+        "v": jnp.zeros((batch, s, kvh, hd), dtype),
+    }
+
+
+def gqa_fwd(p: Params, x, spec, cfg, *, positions, cache=None, cur_len=None,
+            decode_axis=None, kv_start=None):
+    """Returns (y, new_cache).  Train/prefill when cache is None or being
+    filled; decode when x has one token and cur_len is set."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = matmul(x, p["wq"]).reshape(b, s, h, hd)
+    k = matmul(x, p["wk"]).reshape(b, s, kvh, hd)
+    v = matmul(x, p["wv"]).reshape(b, s, kvh, hd)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    window = spec.window if spec.attn == "window" else 0
+    causal = getattr(spec, "causal", True)
+
+    if cache is None:
+        y = flash_attention(q, k, v, causal=causal, window=window,
+                            cap=cfg.softcap_attn, kv_start=kv_start)
+        new_cache = None
+    elif s > 1:                                   # prefill into cache
+        y = flash_attention(q, k, v, causal=causal, window=window,
+                            cap=cfg.softcap_attn, kv_start=kv_start)
+        cs = cache["k"].shape[1]
+        if window > 0 and s > cs:
+            # ring buffer: keep the last cs positions, each at slot p % cs
+            k_in = jnp.roll(k[:, -cs:], s % cs, axis=1)
+            v_in = jnp.roll(v[:, -cs:], s % cs, axis=1)
+        else:
+            k_in, v_in = k, v
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_in, 0, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_in, 0, 1),
+        }
+    else:                                         # decode step
+        cs = cache["k"].shape[1]
+        slot = (cur_len % cs) if window > 0 else cur_len
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        if window > 0:
+            # ring buffer: reconstruct global positions of each slot
+            idx = jnp.arange(cs)
+            wraps = (cur_len + 1 + cs - 1) // cs
+            kpos = jnp.where(idx <= slot, idx + (wraps - 1) * cs,
+                             idx + (wraps - 2) * cs)
+            kpos = jnp.where(idx == slot, cur_len, kpos)
+        else:
+            kpos = jnp.arange(cs)
+        y = decode_attention(q, ck, cv, kpos, cur_len + 1,
+                             cap=cfg.softcap_attn, window=window,
+                             axis_name=decode_axis, kv_start=kv_start)
+        new_cache = {"k": ck, "v": cv}
+
+    y = matmul(y.reshape(b, s, h * hd), p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA layer forward
+# ---------------------------------------------------------------------------
+
+def mla_cache_init(cfg, batch: int, max_len: int, dtype) -> Params:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def _mla_expand(p, c_kv, k_rope, cfg):
+    """Latent -> per-head K/V (prefill path)."""
+    k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhn->bshn", c_kv, p["w_uv"])
+    k_r = jnp.broadcast_to(k_rope[:, :, None, :],
+                           k_nope.shape[:3] + (cfg.qk_rope_dim,))
+    k = jnp.concatenate([k_nope, k_r], axis=-1)
+    return k.astype(c_kv.dtype), v.astype(c_kv.dtype)
+
+
+def mla_fwd(p: Params, x, spec, cfg, *, positions, cache=None, cur_len=None,
+            decode_axis=None, kv_start=None):
+    from repro.models.layers import norm_fwd
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope, r, vd = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.kv_lora_rank,
+                         cfg.v_head_dim)
+    qd = nope + rope
+    scale = 1.0 / math.sqrt(qd)
+
+    q = matmul(x, p["wq"]).reshape(b, s, h, qd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = matmul(x, p["w_dkv"])
+    c_kv, k_rope = dkv[..., :r], dkv[..., r:]
+    c_kv = norm_fwd({"scale": p["kv_norm"]}, c_kv, "rmsnorm", cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+
+    if cache is None or s > 1:                    # train / prefill: expand
+        if cache is not None:
+            new_cache = {
+                "c_kv": jax.lax.dynamic_update_slice_in_dim(
+                    cache["c_kv"], c_kv, 0, 1),
+                "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_rope"], k_rope, 0, 1),
+            }
+        else:
+            new_cache = None
+        k, v = _mla_expand(p, c_kv, k_rope, cfg)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad V up to the qk head dim so flash kernels see uniform shapes
+        y = flash_attention(qq, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                               (0, qd - vd))),
+                            causal=True, cap=0.0, scale=scale,
+                            kv_start=kv_start)
+        y = y[..., :vd]
+    else:                                         # absorbed decode
+        c = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, cur_len, 0))
+        kr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope,
+                                          (0, cur_len, 0))
+        new_cache = {"c_kv": c, "k_rope": kr}
+        # fold q through W_UK: (b,1,h,nope) @ (r,h,nope) -> (b,1,h,r)
+        q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, p["w_uk"])
+        cs = c.shape[1]
+        kpos = jnp.arange(cs)
+        s_lat = jnp.einsum("bqhr,bsr->bhqs", q_eff, c,
+                           preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bqhn,bsn->bhqs", q_rope, kr,
+                            preferred_element_type=jnp.float32)
+        sc = (s_lat + s_rope) * scale
+        valid = (kpos < (cur_len + 1))[None, None, None]
+        if kv_start is not None:
+            valid = jnp.logical_and(
+                valid, (kpos[None, :] >= kv_start[:, None])[:, None, None])
+        sc = jnp.where(valid, sc, NEG_INF)
+        m = jnp.max(sc, axis=-1)
+        pr = jnp.exp(sc - m[..., None])
+        l = jnp.sum(pr, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsr->bhqr", pr.astype(x.dtype), c,
+                           preferred_element_type=jnp.float32)
+        if decode_axis is not None:
+            ms = jax.lax.all_gather(m, decode_axis)
+            ls = jax.lax.all_gather(l, decode_axis)
+            os_ = jax.lax.all_gather(o_lat, decode_axis)
+            m_g = jnp.max(ms, axis=0)
+            corr = jnp.exp(ms - m_g[None])
+            l = jnp.sum(ls * corr, axis=0)
+            o_lat = jnp.sum(os_ * corr[..., None], axis=0)
+            m = m_g
+        o_lat = o_lat / jnp.maximum(l, 1e-30)[..., None]
+        y = jnp.einsum("bhqr,rhn->bqhn", o_lat.astype(x.dtype), p["w_uv"])
+
+    y = matmul(y.reshape(b, s, h * vd), p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg, dtype=jnp.float32) -> Params:
+    return gqa_init(key, cfg, dtype)
+
+
+def cross_attn_fwd(p: Params, x, enc, cfg):
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = matmul(x, p["wq"]).reshape(b, s, h, hd)
+    k = matmul(enc, p["wk"]).reshape(b, enc.shape[1], kvh, hd)
+    v = matmul(enc, p["wv"]).reshape(b, enc.shape[1], kvh, hd)
+    y = flash_attention(q, k, v, causal=False, chunk_q=min(512, s),
+                        chunk_kv=min(1024, enc.shape[1]))
+    return matmul(y.reshape(b, s, h * hd), p["wo"])

@@ -1,0 +1,124 @@
+"""Elementary layers: norms, rotary embeddings, MLPs, initializers.
+
+Everything is functional: ``*_init(key, ...) -> params-dict`` and
+``*_fwd(params, x, ...) -> y``.  Matmuls accumulate in f32
+(``preferred_element_type``) regardless of the storage dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x @ w with f32 accumulation, result in x.dtype."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str, dtype=jnp.float32) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_fwd(p: Params, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, hd) rotated by per-position angles; positions (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d]
+
+
+def sinusoidal_position_at(pos, d: int) -> jax.Array:
+    """Single (possibly traced) position -> (d,) sinusoid."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = jnp.asarray(pos, jnp.float32) / jnp.power(10_000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:d]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp_init(key, d: int, f: int, kind: str, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    if kind == "gated":
+        return {"wi": dense_init(k1, d, 2 * f, dtype),
+                "wo": dense_init(k2, f, d, dtype)}
+    return {"wi": dense_init(k1, d, f, dtype),
+            "wo": dense_init(k2, f, d, dtype)}
+
+
+def mlp_fwd(p: Params, x: jax.Array, kind: str, act: str) -> jax.Array:
+    h = matmul(x, p["wi"])
+    if kind == "gated":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = _act(act)(gate) * up
+    else:
+        h = _act(act)(h)
+    return matmul(h, p["wo"])
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0.0:
+        return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+    return x
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,184 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm: the sequence is split into chunks of Q; within a chunk
+the output is an attention-like masked contraction (parallel, MXU-friendly);
+across chunks a small (H, P, N) state is carried by a scan — the paper's
+"local phase / boundary exchange" structure in sequence space (DESIGN.md §4).
+
+Decode is O(1): one state update per token, which is why the SSM/hybrid archs
+are the ones eligible for the 500k-context shapes.
+
+All decays stay in log space until the last moment and are bounded above by 0
+(A < 0), so every exp() is ≤ 1 — no overflow at any chunk size.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, matmul, norm_fwd
+
+Params = dict
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_head_dim
+    return d_inner, h, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mamba_init(key, cfg, dtype=jnp.float32) -> Params:
+    d_inner, h, n, p_ = _dims(cfg)
+    conv_ch = d_inner + 2 * n                     # x, B, C go through conv
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model,
+                              2 * d_inner + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_dim, conv_ch),
+                                     jnp.float32) / math.sqrt(cfg.conv_dim)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),    # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[3], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv along S.  xbc (B,S,C); w (K,C)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state                          # (B, K-1, C)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba_cache_init(cfg, batch: int, dtype) -> Params:
+    d_inner, h, n, p_ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_dim - 1, d_inner + 2 * n), dtype),
+        "ssm": jnp.zeros((batch, h, p_, n), jnp.float32),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_inner, h, n, p_ = _dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:2 * d_inner + 2 * n]
+    dt = proj[..., 2 * d_inner + 2 * n:]
+    return z, xbc, dt
+
+
+def mamba_fwd(p: Params, u: jax.Array, cfg, cache=None):
+    """Train/prefill path.  u (B,S,D) -> (y, new_cache)."""
+    d_inner, h, n, p_ = _dims(cfg)
+    b, s, _ = u.shape
+    q = min(cfg.ssm_chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+
+    proj = matmul(u, p["in_proj"])
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc, conv_state = _causal_conv(
+        xbc, p["conv_w"], p["conv_b"],
+        None if cache is None else cache["conv"])
+    x = xbc[..., :d_inner].reshape(b, s, h, p_)
+    bmat = xbc[..., d_inner:d_inner + n]                    # (B,S,N)
+    cmat = xbc[..., d_inner + n:]                           # (B,S,N)
+
+    a = -jnp.exp(p["A_log"])                                # (H,) < 0
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    da = dt * a                                             # (B,S,H) <= 0
+
+    # ---- chunked SSD ------------------------------------------------------
+    xc = x.reshape(b, nc, q, h, p_).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h)
+    dac = da.reshape(b, nc, q, h)
+    cum = jnp.cumsum(dac, axis=2)                           # (B,nc,Q,H)
+    cum_last = cum[:, :, -1:, :]                            # (B,nc,1,H)
+
+    # per-chunk input state: sum_q exp(cum_last - cum_q) * dt_q * B_q ⊗ x_q
+    wgt = jnp.exp(cum_last - cum) * dtc                     # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", wgt, bc, xc)
+
+    # inter-chunk recurrence (sequential over nc chunks)
+    chunk_decay = jnp.exp(cum_last[:, :, 0, :])             # (B,nc,H)
+
+    def step(carry, inp):
+        st = carry                                          # (B,H,P,N)
+        cs, dec = inp
+        out = st                                            # state BEFORE chunk
+        st = st * dec[:, :, None, None] + cs
+        return st, out
+
+    init = (jnp.zeros((b, h, p_, n), jnp.float32) if cache is None
+            else cache["ssm"])
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (chunk_state.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,nc,H,P,N)
+
+    # inter-chunk output: C_q · (prev_state decayed to q)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", cc, prev_states) \
+        * jnp.exp(cum)[..., None]
+
+    # intra-chunk (attention-like, causal within chunk)
+    l = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])   # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    scores = jnp.einsum("bcqn,bcsn->bcqs", cc, bc)          # (B,nc,Q,Q)
+    scores = jnp.where(causal[None, None], scores, 0.0)
+    y_intra = jnp.einsum("bcqs,bcqsh,bcsh,bcshp->bcqhp",
+                         scores, jnp.where(causal[None, None, :, :, None],
+                                           l, 0.0),
+                         dtc, xc)
+
+    y = (y_inter + y_intra).reshape(b, s, h, p_)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(u.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = norm_fwd({"scale": p["norm_scale"]}, y, "rmsnorm", cfg.norm_eps)
+    y = matmul(y, p["out_proj"])
+    new_cache = None if cache is None else {"conv": conv_state,
+                                            "ssm": final_state}
+    return y, new_cache
+
+
+def mamba_decode(p: Params, u: jax.Array, cfg, cache: Params):
+    """Single-token decode: O(1) state update.  u (B,1,D)."""
+    d_inner, h, n, p_ = _dims(cfg)
+    b = u.shape[0]
+    proj = matmul(u, p["in_proj"])
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   cache["conv"])
+    x = xbc[:, 0, :d_inner].reshape(b, h, p_).astype(jnp.float32)
+    bvec = xbc[:, 0, d_inner:d_inner + n].astype(jnp.float32)
+    cvec = xbc[:, 0, d_inner + n:].astype(jnp.float32)
+
+    a = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    decay = jnp.exp(dt * a)                                 # (B,H)
+
+    st = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, x, bvec)
+    y = jnp.einsum("bn,bhpn->bhp", cvec, st)
+    y = y + p["D"][None, :, None] * x
+    y = y.reshape(b, 1, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = norm_fwd({"scale": p["norm_scale"]}, y, "rmsnorm", cfg.norm_eps)
+    y = matmul(y, p["out_proj"])
+    return y, {"conv": conv_state, "ssm": st}

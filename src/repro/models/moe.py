@@ -1,0 +1,134 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+Dispatch is scatter/gather based (argsort tokens by expert, slot = expert ×
+capacity + rank-within-expert), NOT the (T,E,C) one-hot einsum — so dispatch
+costs O(T·D) data movement instead of O(T·E·C·D) flops, matching what a real
+deployment does; with tokens sharded over `data` and experts over `model`,
+the SPMD partitioner turns the scatter/gather pair into the expert-parallel
+all-to-alls.  Over-capacity tokens are dropped (their gate mass simply does
+not contribute — standard Switch/GShard semantics, capacity factor 1.25).
+
+DeepSeek-style shared experts are a fused dense MLP running alongside.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _act, dense_init, matmul
+
+Params = dict
+
+
+def moe_init(key, cfg, dtype=jnp.float32) -> Params:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_expert
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d, e, dtype),
+        "wi": (jax.random.normal(ks[1], (e, d, 2 * fe), jnp.float32)
+               / jnp.sqrt(d)).astype(dtype),
+        "wo": (jax.random.normal(ks[2], (e, fe, d), jnp.float32)
+               / jnp.sqrt(fe)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        k1, k2 = jax.random.split(ks[3])
+        p["shared_wi"] = dense_init(k1, d, 2 * fs, dtype)
+        p["shared_wo"] = dense_init(k2, fs, d, dtype)
+    return p
+
+
+def _n_blocks(t: int, target: int = 16) -> int:
+    n = min(target, t)
+    while t % n:
+        n -= 1
+    return n
+
+
+def moe_fwd(p: Params, x: jax.Array, cfg, capacity_factor: float = 1.25):
+    """Block-parallel dispatch: tokens are split into ``nblk`` blocks (one
+    per data shard on the production mesh) and each block sorts/dispatches
+    its own tokens — sort, cumsum and scatter all carry a leading block dim,
+    so GSPMD shards them over ``data`` instead of replicating the global
+    token stream (the single-stream argsort is a propagation barrier; see
+    EXPERIMENTS.md §Perf iteration log).  Capacity is per (block, expert).
+    """
+    from repro.sharding.util import maybe_constrain
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    nblk = _n_blocks(t)
+    tb = t // nblk
+    cap = max(1, int(tb * k / e * capacity_factor))
+    act = _act(cfg.act)
+
+    xt = x.reshape(nblk, tb, d)
+    xt = maybe_constrain(xt, "data", None, None)
+    logits = jnp.matmul(xt, p["router"],
+                        preferred_element_type=jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                  # (nblk, tb, e)
+    topg, topi = jax.lax.top_k(gates, k)                     # (nblk, tb, k)
+    topg = topg / jnp.maximum(jnp.sum(topg, -1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(nblk, tb * k)
+    flat_g = topg.reshape(nblk, tb * k)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tb), k)[None], (nblk, tb * k))
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+
+    # rank within (block, expert): position - start offset of the expert
+    onehot_counts = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    counts = jnp.sum(onehot_counts, axis=1)                  # (nblk, e)
+    start = jnp.cumsum(counts, axis=-1) - counts
+    pos = (jnp.broadcast_to(jnp.arange(tb * k)[None], se.shape)
+           - jnp.take_along_axis(start, se, axis=-1))
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)          # overflow slot
+
+    gathered = jnp.take_along_axis(xt, st[..., None], axis=1)
+    disp = jnp.zeros((nblk, e * cap + 1, d), x.dtype)
+    disp = jax.vmap(lambda dd, sl, g: dd.at[sl].set(g))(disp, slot, gathered)
+    h = disp[:, :-1].reshape(nblk, e, cap, d)
+    h = maybe_constrain(h, "data", "model", None, None)
+
+    hi = jnp.einsum("necd,edf->necf", h, p["wi"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    gate, up = jnp.split(hi, 2, axis=-1)
+    ho = jnp.einsum("necf,efd->necd", act(gate) * up, p["wo"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    ho = maybe_constrain(ho, "data", "model", None, None)
+
+    y_slots = jnp.concatenate(
+        [ho.reshape(nblk, e * cap, d),
+         jnp.zeros((nblk, 1, d), x.dtype)], axis=1)
+    contrib = jnp.take_along_axis(y_slots, slot[..., None], axis=1)
+    contrib = contrib * sg[..., None].astype(x.dtype)
+    y = jnp.zeros((nblk, tb, d), x.dtype)
+    y = jax.vmap(lambda yy, tt, cc: yy.at[tt].add(cc))(y, st, contrib)
+    y = maybe_constrain(y, "data", None, None)
+
+    if cfg.n_shared_experts:
+        hs = matmul(xt, p["shared_wi"])
+        g2, u2 = jnp.split(hs, 2, axis=-1)
+        y = y + matmul(act(g2) * u2, p["shared_wo"])
+
+    return y.reshape(b, s, d)
+
+
+def moe_aux_loss(p: Params, x: jax.Array, cfg) -> jax.Array:
+    """Switch load-balance loss: E · Σ_e f_e · P_e (optional trainer term)."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.matmul(xt, p["router"], preferred_element_type=jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    _, topi = jax.lax.top_k(gates, cfg.top_k)
+    hard = jnp.zeros_like(gates).at[
+        jnp.arange(gates.shape[0])[:, None], topi].set(1.0)
+    f = jnp.mean(hard, axis=0)
+    pm = jnp.mean(gates, axis=0)
+    return cfg.n_experts * jnp.sum(f * pm)

@@ -1,0 +1,61 @@
+"""Model registry: dispatch an ArchConfig to its functional model API, plus
+parameter counting (total & active) used by the roofline analysis."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+
+class ModelAPI(NamedTuple):
+    init: Callable          # (key, cfg, dtype) -> params
+    forward: Callable       # (params, batch, cfg, remat=) -> logits
+    init_cache: Callable    # (cfg, batch_size, max_len, dtype) -> cache
+    prefill: Callable       # (params, batch, cache, cfg) -> (logits, cache)
+    decode_step: Callable | None  # (params, token, cache, cur_len, cfg, decode_axis=)
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    if cfg.family == "audio":
+        return ModelAPI(tf.encdec_init, tf.encdec_forward,
+                        tf.encdec_cache_init, tf.encdec_prefill,
+                        tf.encdec_decode_step)
+    if cfg.family == "vlm":
+        return ModelAPI(tf.vlm_init, tf.vlm_forward, tf.lm_cache_init,
+                        tf.vlm_prefill, tf.lm_decode_step)
+    return ModelAPI(tf.lm_init, tf.lm_forward, tf.lm_cache_init,
+                    tf.lm_prefill, tf.lm_decode_step)
+
+
+def param_shapes(cfg: ArchConfig, dtype=jnp.bfloat16):
+    api = get_model(cfg)
+    return jax.eval_shape(
+        lambda k: api.init(k, cfg, dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    shapes = param_shapes(cfg)
+    total = 0
+    expert = 0
+    leaves = jax.tree_util.tree_leaves_with_path(shapes)
+    for path, leaf in leaves:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        keys = [str(getattr(k, "key", k)) for k in path]
+        # routed-expert weights: (E, ...) stacks inside moe ffn params
+        if (cfg.n_experts and "ffn" in keys and keys[-1] in ("wi", "wo")
+                and leaf.ndim >= 3):
+            expert += n
+    if not active_only or not cfg.n_experts:
+        return total
+    active_expert = expert * cfg.top_k // cfg.n_experts
+    return total - expert + active_expert

@@ -1,0 +1,213 @@
+"""Heterogeneous layer stacks with scan-over-units.
+
+A stack's layer list is grouped into repetitions of its ``pattern`` unit
+(gemma3's LLLLLG, jamba's MMMM A MMM, or a single uniform layer); full units
+are ``lax.scan``ned over stacked parameters (compile the unit once, not 72
+layers) with per-unit rematerialization, and any remainder layers are
+unrolled.  Decode threads per-unit caches through the scan as xs/ys.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import mlp_fwd, mlp_init, norm_fwd, norm_init
+
+Params = dict
+
+
+def _unit_specs(cfg: ArchConfig, layers: tuple[LayerSpec, ...]):
+    """Split the layer list into (head, pattern, n_units, tail): ``head``
+    holds leading layers that differ from the repeating unit (deepseek's
+    first-k-dense), scanned units cover the homogeneous middle, ``tail`` the
+    trailing remainder (gemma3's final locals)."""
+    u = len(cfg.pattern)
+    head = tuple(layers[: cfg.first_k_dense]) if cfg.first_k_dense else ()
+    rest = layers[len(head):]
+    n_units = len(rest) // u
+    tail = rest[n_units * u:]
+    return head, cfg.pattern, n_units, tail
+
+
+# ---------------------------------------------------------------------------
+# one layer
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ArchConfig, spec: LayerSpec, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": norm_init(cfg.d_model, cfg.norm, dtype)}
+    if spec.mixer == "attn":
+        if spec.attn == "mla":
+            p["mixer"] = attn_mod.mla_init(ks[0], cfg, dtype)
+        else:
+            p["mixer"] = attn_mod.gqa_init(ks[0], cfg, dtype)
+    else:
+        p["mixer"] = mamba_mod.mamba_init(ks[0], cfg, dtype)
+    if spec.cross:
+        p["norm_x"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["cross"] = attn_mod.cross_attn_init(ks[1], cfg, dtype)
+    if spec.moe:
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["ffn"] = moe_mod.moe_init(ks[2], cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["ffn"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def layer_cache_init(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                     max_len: int, dtype) -> Params:
+    if spec.mixer == "mamba":
+        return {"mamba": mamba_mod.mamba_cache_init(cfg, batch, dtype)}
+    if spec.attn == "mla":
+        return {"mla": attn_mod.mla_cache_init(cfg, batch, max_len, dtype)}
+    return {"kv": attn_mod.gqa_cache_init(cfg, spec, batch, max_len, dtype)}
+
+
+def layer_fwd(p: Params, x, cfg: ArchConfig, spec: LayerSpec, *, positions,
+              cache=None, cur_len=None, enc=None, decode=False,
+              decode_axis=None, kv_start=None):
+    from repro.sharding.util import maybe_constrain, seq_axis
+    # re-anchor propagation; with sequence parallelism on, the residual
+    # stream (and thus the remat carry) shards over model on the seq dim
+    x = maybe_constrain(x, "data", seq_axis(), None)
+    h = norm_fwd(p["norm1"], x, cfg.norm, cfg.norm_eps)
+    if spec.mixer == "attn":
+        fwd = attn_mod.mla_fwd if spec.attn == "mla" else attn_mod.gqa_fwd
+        key = "mla" if spec.attn == "mla" else "kv"
+        sub = None if cache is None else cache[key]
+        y, new_sub = fwd(p["mixer"], h, spec, cfg, positions=positions,
+                         cache=sub, cur_len=cur_len, decode_axis=decode_axis,
+                         kv_start=kv_start)
+        new_cache = None if cache is None else {key: new_sub}
+    else:
+        if decode:
+            y, new_sub = mamba_mod.mamba_decode(p["mixer"], h, cfg,
+                                                cache["mamba"])
+        else:
+            sub = None if cache is None else cache["mamba"]
+            y, new_sub = mamba_mod.mamba_fwd(p["mixer"], h, cfg, cache=sub)
+        new_cache = None if cache is None else {"mamba": new_sub}
+    x = x + y
+
+    if spec.cross and enc is not None:
+        hx = norm_fwd(p["norm_x"], x, cfg.norm, cfg.norm_eps)
+        x = x + attn_mod.cross_attn_fwd(p["cross"], hx, enc, cfg)
+
+    if "ffn" in p:
+        h2 = norm_fwd(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        if spec.moe:
+            y2 = moe_mod.moe_fwd(p["ffn"], h2, cfg)
+        else:
+            y2 = mlp_fwd(p["ffn"], h2, cfg.mlp, cfg.act)
+        x = x + y2
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stack: scan over units + unrolled tail
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg: ArchConfig, layers: tuple[LayerSpec, ...],
+               dtype) -> Params:
+    head, pattern, n_units, tail = _unit_specs(cfg, layers)
+
+    def unit_init(k):
+        ks = jax.random.split(k, len(pattern))
+        return {f"layer_{i}": layer_init(ks[i], cfg, s, dtype)
+                for i, s in enumerate(pattern)}
+
+    p: Params = {}
+    head_keys = jax.random.split(jax.random.fold_in(key, 3), max(1, len(head)))
+    p["head"] = [layer_init(head_keys[i], cfg, s, dtype)
+                 for i, s in enumerate(head)]
+    if n_units:
+        p["units"] = jax.vmap(unit_init)(jax.random.split(key, n_units))
+    tail_keys = jax.random.split(jax.random.fold_in(key, 7), max(1, len(tail)))
+    p["tail"] = [layer_init(tail_keys[i], cfg, s, dtype)
+                 for i, s in enumerate(tail)]
+    return p
+
+
+def stack_cache_init(cfg: ArchConfig, layers, batch, max_len, dtype) -> Params:
+    head, pattern, n_units, tail = _unit_specs(cfg, layers)
+
+    def unit_cache(_):
+        return {f"layer_{i}": layer_cache_init(cfg, s, batch, max_len, dtype)
+                for i, s in enumerate(pattern)}
+
+    c: Params = {}
+    c["head"] = [layer_cache_init(cfg, s, batch, max_len, dtype)
+                 for s in head]
+    if n_units:
+        c["units"] = jax.vmap(unit_cache)(jnp.arange(n_units))
+    c["tail"] = [layer_cache_init(cfg, s, batch, max_len, dtype)
+                 for s in tail]
+    return c
+
+
+def stack_fwd(p: Params, x, cfg: ArchConfig, layers, *, positions,
+              cache=None, cur_len=None, enc=None, decode=False,
+              decode_axis=None, remat: bool = False, kv_start=None):
+    head, pattern, n_units, tail = _unit_specs(cfg, layers)
+
+    def unit_fwd(x, unit_p, unit_c):
+        new_c = {} if unit_c is not None else None
+        for i, spec in enumerate(pattern):
+            sub_c = None if unit_c is None else unit_c[f"layer_{i}"]
+            x, nc = layer_fwd(unit_p[f"layer_{i}"], x, cfg, spec,
+                              positions=positions, cache=sub_c,
+                              cur_len=cur_len, enc=enc, decode=decode,
+                              decode_axis=decode_axis, kv_start=kv_start)
+            if new_c is not None:
+                new_c[f"layer_{i}"] = nc
+        return x, new_c
+
+    if remat:
+        unit_fwd = jax.checkpoint(
+            unit_fwd, policy=jax.checkpoint_policies.nothing_saveable)
+
+    new_head = [] if cache is not None else None
+    for i, spec in enumerate(head):
+        sub_c = None if cache is None else cache["head"][i]
+        x, nc = layer_fwd(p["head"][i], x, cfg, spec, positions=positions,
+                          cache=sub_c, cur_len=cur_len, enc=enc,
+                          decode=decode, decode_axis=decode_axis,
+                          kv_start=kv_start)
+        if new_head is not None:
+            new_head.append(nc)
+
+    if n_units:
+        if cache is None:
+            def body(carry, unit_p):
+                y, _ = unit_fwd(carry, unit_p, None)
+                return y, None
+            x, _ = jax.lax.scan(body, x, p["units"])
+            new_cache = None
+        else:
+            def body(carry, xs):
+                unit_p, unit_c = xs
+                y, nc = unit_fwd(carry, unit_p, unit_c)
+                return y, nc
+            x, new_units = jax.lax.scan(body, x, (p["units"], cache["units"]))
+            new_cache = {"head": new_head, "units": new_units, "tail": []}
+    else:
+        new_cache = None if cache is None else {"head": new_head, "tail": []}
+
+    for i, spec in enumerate(tail):
+        sub_c = None if cache is None else cache["tail"][i]
+        x, nc = layer_fwd(p["tail"][i], x, cfg, spec, positions=positions,
+                          cache=sub_c, cur_len=cur_len, enc=enc,
+                          decode=decode, decode_axis=decode_axis,
+                          kv_start=kv_start)
+        if new_cache is not None:
+            new_cache["tail"].append(nc)
+    return x, new_cache

@@ -1,0 +1,230 @@
+"""Top-level models: decoder LM, encoder-decoder (whisper), VLM (internvl).
+
+All share one functional API (see registry.ModelAPI):
+
+  init(key, cfg, dtype)                     -> params
+  forward(params, batch, cfg)               -> logits           (train)
+  init_cache(cfg, batch, max_len, dtype)    -> cache
+  prefill(params, batch, cache, cfg)        -> (last_logits, cache)
+  decode_step(params, token, cache, cur_len, cfg) -> (logits, cache)
+
+``batch`` is a dict: tokens (B,S) int32 [+ vis_embed (B,Tv,Dv) for vlm,
+audio_embed (B,F,D) for audio].
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models.layers import (embed_init, matmul, norm_fwd, norm_init,
+                                 sinusoidal_position_at, sinusoidal_positions,
+                                 softcap, dense_init)
+from repro.models.stack import (stack_cache_init, stack_fwd, stack_init)
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# decoder-only LM (phi, gemma, granite, deepseek, mamba, jamba)
+# ---------------------------------------------------------------------------
+
+def lm_init(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "stack": stack_init(ks[1], cfg, cfg.layers(), dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab, dtype)
+    return p
+
+
+def _logits(p: Params, x, cfg: ArchConfig):
+    from repro.sharding.util import maybe_constrain
+    x = norm_fwd(p["final_norm"], x, cfg.norm, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.matmul(x, p["embed"].T,
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.matmul(x, p["lm_head"],
+                            preferred_element_type=jnp.float32)
+    logits = maybe_constrain(logits, "data", None, "model")
+    return softcap(logits, cfg.softcap_final)
+
+
+def lm_forward(p: Params, batch, cfg: ArchConfig, *, remat=True):
+    from repro.sharding.util import maybe_constrain
+    tokens = batch["tokens"]
+    x = maybe_constrain(p["embed"][tokens], "data", None, None)
+    positions = jnp.arange(tokens.shape[1])
+    x, _ = stack_fwd(p["stack"], x, cfg, cfg.layers(), positions=positions,
+                     remat=remat)
+    return _logits(p, x, cfg)
+
+
+def lm_cache_init(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=jnp.float32) -> Params:
+    return stack_cache_init(cfg, cfg.layers(), batch, max_len, dtype)
+
+
+def lm_prefill(p: Params, batch, cache, cfg: ArchConfig):
+    tokens = batch["tokens"]
+    x = p["embed"][tokens]
+    start = batch.get("start")          # (B,) left-pad offsets (serving)
+    if start is not None:
+        positions = jnp.maximum(
+            jnp.arange(tokens.shape[1])[None, :] - start[:, None], 0)
+    else:
+        positions = jnp.arange(tokens.shape[1])
+    x, cache = stack_fwd(p["stack"], x, cfg, cfg.layers(),
+                         positions=positions, cache=cache, cur_len=0,
+                         kv_start=start)
+    return _logits(p, x[:, -1:], cfg), cache
+
+
+def lm_decode_step(p: Params, token, cache, cur_len, cfg: ArchConfig,
+                   decode_axis=None, kv_start=None):
+    """token (B,1) int32; cur_len = #tokens already in the cache."""
+    x = p["embed"][token]
+    if kv_start is not None:
+        positions = jnp.maximum(cur_len - kv_start, 0)[:, None]
+    else:
+        positions = jnp.full(token.shape, cur_len, jnp.int32)
+    x, cache = stack_fwd(p["stack"], x, cfg, cfg.layers(),
+                         positions=positions, cache=cache, cur_len=cur_len,
+                         decode=True, decode_axis=decode_axis,
+                         kv_start=kv_start)
+    return _logits(p, x, cfg), cache
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper): conv/mel frontend is a stub — the batch carries
+# precomputed frame embeddings (B, F, d_model) per the assignment.
+# ---------------------------------------------------------------------------
+
+def _enc_layers(cfg) -> tuple[LayerSpec, ...]:
+    return (LayerSpec(mixer="attn", attn="full", causal=False),) * cfg.enc_layers
+
+
+def _dec_layers(cfg) -> tuple[LayerSpec, ...]:
+    return (LayerSpec(mixer="attn", attn="full", cross=True),) * cfg.n_layers
+
+
+def encdec_init(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    enc_cfg = _with_pattern(cfg, _enc_layers(cfg))
+    dec_cfg = _with_pattern(cfg, _dec_layers(cfg))
+    return {
+        "frontend_proj": dense_init(ks[0], cfg.d_model, cfg.d_model, dtype),
+        "embed": embed_init(ks[1], cfg.vocab, cfg.d_model, dtype),
+        "enc_stack": stack_init(ks[2], enc_cfg, _enc_layers(cfg), dtype),
+        "enc_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "stack": stack_init(ks[3], dec_cfg, _dec_layers(cfg), dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+        "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def _with_pattern(cfg: ArchConfig, layers):
+    import dataclasses
+    pat = (layers[0],) if layers else (LayerSpec(),)   # 0-layer cost probes
+    return dataclasses.replace(cfg, pattern=pat, n_layers=len(layers))
+
+
+def encode(p: Params, batch, cfg: ArchConfig):
+    frames = batch["audio_embed"].astype(p["embed"].dtype)
+    x = matmul(frames, p["frontend_proj"])
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    enc_cfg = _with_pattern(cfg, _enc_layers(cfg))
+    x, _ = stack_fwd(p["enc_stack"], x, enc_cfg, _enc_layers(cfg),
+                     positions=jnp.arange(x.shape[1]))
+    return norm_fwd(p["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+def encdec_forward(p: Params, batch, cfg: ArchConfig, *, remat=True):
+    enc = encode(p, batch, cfg)
+    tokens = batch["tokens"]
+    x = p["embed"][tokens]
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    dec_cfg = _with_pattern(cfg, _dec_layers(cfg))
+    x, _ = stack_fwd(p["stack"], x, dec_cfg, _dec_layers(cfg),
+                     positions=jnp.arange(tokens.shape[1]), enc=enc,
+                     remat=remat)
+    x = norm_fwd(p["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return jnp.matmul(x, p["lm_head"], preferred_element_type=jnp.float32)
+
+
+def encdec_cache_init(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.float32) -> Params:
+    dec_cfg = _with_pattern(cfg, _dec_layers(cfg))
+    return {"dec": stack_cache_init(dec_cfg, _dec_layers(cfg), batch,
+                                    max_len, dtype),
+            "enc_out": jnp.zeros((batch, cfg.enc_frames, cfg.d_model), dtype)}
+
+
+def encdec_prefill(p: Params, batch, cache, cfg: ArchConfig):
+    enc = encode(p, batch, cfg)
+    tokens = batch["tokens"]
+    x = p["embed"][tokens]
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    dec_cfg = _with_pattern(cfg, _dec_layers(cfg))
+    x, dec_cache = stack_fwd(p["stack"], x, dec_cfg, _dec_layers(cfg),
+                             positions=jnp.arange(tokens.shape[1]), enc=enc,
+                             cache=cache["dec"], cur_len=0)
+    x = norm_fwd(p["final_norm"], x[:, -1:], cfg.norm, cfg.norm_eps)
+    logits = jnp.matmul(x, p["lm_head"], preferred_element_type=jnp.float32)
+    return logits, {"dec": dec_cache, "enc_out": enc}
+
+
+def encdec_decode_step(p: Params, token, cache, cur_len, cfg: ArchConfig,
+                       decode_axis=None):
+    x = p["embed"][token]
+    x = x + sinusoidal_position_at(cur_len, cfg.d_model)[None, None, :].astype(x.dtype)
+    dec_cfg = _with_pattern(cfg, _dec_layers(cfg))
+    x, dec_cache = stack_fwd(p["stack"], x, dec_cfg, _dec_layers(cfg),
+                             positions=jnp.full(token.shape, cur_len),
+                             enc=cache["enc_out"], cache=cache["dec"],
+                             cur_len=cur_len, decode=True,
+                             decode_axis=decode_axis)
+    x = norm_fwd(p["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = jnp.matmul(x, p["lm_head"], preferred_element_type=jnp.float32)
+    return logits, {"dec": dec_cache, "enc_out": cache["enc_out"]}
+
+
+# ---------------------------------------------------------------------------
+# VLM (internvl): ViT frontend is a stub — batch carries precomputed patch
+# embeddings (B, Tv, vis_dim), projected and prepended to the token stream.
+# ---------------------------------------------------------------------------
+
+def vlm_init(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = lm_init(k1, cfg, dtype)
+    p["vis_proj"] = dense_init(k2, cfg.vis_dim, cfg.d_model, dtype)
+    return p
+
+
+def _vlm_embed(p, batch, cfg):
+    tok = p["embed"][batch["tokens"]]
+    vis = matmul(batch["vis_embed"].astype(tok.dtype), p["vis_proj"])
+    return jnp.concatenate([vis, tok], axis=1)
+
+
+def vlm_forward(p: Params, batch, cfg: ArchConfig, *, remat=True):
+    x = _vlm_embed(p, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    x, _ = stack_fwd(p["stack"], x, cfg, cfg.layers(), positions=positions,
+                     remat=remat)
+    return _logits(p, x, cfg)
+
+
+def vlm_prefill(p: Params, batch, cache, cfg: ArchConfig):
+    x = _vlm_embed(p, batch, cfg)
+    positions = jnp.arange(x.shape[1])
+    x, cache = stack_fwd(p["stack"], x, cfg, cfg.layers(),
+                         positions=positions, cache=cache, cur_len=0)
+    return _logits(p, x[:, -1:], cfg), cache

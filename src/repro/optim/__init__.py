@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.optim.compression import (ErrorFeedbackState, ef_init,
+                                     ef_int8_compress, ef_int8_decompress)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm",
+           "cosine_schedule", "linear_warmup", "ErrorFeedbackState",
+           "ef_init", "ef_int8_compress", "ef_int8_decompress"]

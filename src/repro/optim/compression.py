@@ -1,0 +1,55 @@
+"""Error-feedback int8 gradient/delta compression for the cross-pod phase.
+
+The hybrid-sync global phase (GraphHP's once-per-iteration exchange lifted to
+training, DESIGN.md §6) all-reduces an accumulated parameter delta across
+pods.  Before the wire, deltas are quantized to int8 with a per-tensor scale;
+the quantization error is fed back into the next round's accumulator — the
+``Combine()``-before-RPC idea applied to gradients.  4× fewer cross-pod bytes
+with no asymptotic convergence penalty (error feedback keeps the sum of
+applied updates unbiased up to O(1/H) terms).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ErrorFeedbackState:
+    residual: Params
+
+
+def ef_init(params: Params) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params))
+
+
+def ef_int8_compress(tree: Params, ef: ErrorFeedbackState
+                     ) -> tuple[Params, Params, ErrorFeedbackState]:
+    """-> (q_int8, scales, new_ef).  Quantizes (tree + residual)."""
+    def comp(x, r):
+        xf = x.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        err = xf - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    out = jax.tree.map(comp, tree, ef.residual)
+    is_t = lambda t: isinstance(t, tuple)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+    err = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
+    return q, s, ErrorFeedbackState(residual=err)
+
+
+def ef_int8_decompress(q: Params, scales: Params, dtype=jnp.float32) -> Params:
+    return jax.tree.map(
+        lambda qq, ss: (qq.astype(jnp.float32) * ss).astype(dtype), q, scales)

@@ -1,0 +1,17 @@
+"""LR schedules (functions of the step scalar)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def cosine_schedule(step, warmup: int, total: int, peak: float,
+                    floor: float = 0.0):
+    warm = linear_warmup(step, warmup, peak)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)

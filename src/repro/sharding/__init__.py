@@ -1,0 +1,4 @@
+from repro.sharding.rules import (batch_spec, cache_specs, param_specs,
+                                  prepend_axis)
+
+__all__ = ["param_specs", "batch_spec", "cache_specs", "prepend_axis"]

@@ -1,0 +1,108 @@
+"""Partition rules: parameter / batch / cache PartitionSpecs.
+
+2-D param sharding (MaxText-style): FSDP along ``data`` × tensor-parallel
+along ``model``; MoE experts shard over ``model`` (expert parallelism); KV
+caches shard their sequence axis over ``model`` so decode works for any head
+count (the flash-decode merge handles the softmax across shards).
+
+Rules match on the leaf's path keys, using the *unstacked* rank (scan-over-
+units prepends one stacking axis, detected via the ``units`` path component).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Tree = Any
+
+
+def _base_spec(keys: list[str], ndim: int, fsdp: str, tp: str) -> P:
+    last = keys[-1]
+    if last == "embed":
+        return P(tp, fsdp)
+    if last in ("lm_head", "vis_proj", "frontend_proj"):
+        return P(fsdp, tp)
+    if last in ("wq", "wk", "wv", "in_proj", "shared_wi"):
+        return P(fsdp, tp)
+    if last in ("out_proj", "shared_wo"):
+        return P(tp, fsdp)
+    if last == "wi":
+        return P(tp, fsdp, None) if ndim == 3 else P(fsdp, tp)
+    if last == "wo":
+        return P(tp, None, fsdp) if ndim == 3 else P(tp, fsdp)
+    if last == "router":
+        return P(fsdp, None)
+    if last == "w_dkv":
+        return P(fsdp, None)
+    if last in ("w_uk", "w_uv"):
+        return P(None, tp, None)
+    if last == "conv_w":
+        return P(None, tp)
+    return P()                       # 1-d scales/biases: replicated
+
+
+def param_specs(shapes: Tree, fsdp: str = "data", tp: str = "model",
+                prepend: tuple = ()) -> Tree:
+    """Spec tree mirroring a param (shape) tree."""
+
+    def spec_for(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        stacked = "units" in keys
+        nd = leaf.ndim - (1 if stacked else 0)
+        base = _base_spec(keys, nd, fsdp, tp)
+        parts = tuple(base) + (None,) * (nd - len(tuple(base)))
+        if stacked:
+            parts = (None,) + parts
+        return P(*prepend, *parts)
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def batch_spec(batch_shapes: Tree, data: str = "data",
+               prepend: tuple = ()) -> Tree:
+    """Batch dict: batch dimension over the data axis."""
+    def spec_for(path, leaf):
+        return P(*prepend, data, *([None] * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shapes)
+
+
+def cache_specs(cache_shapes: Tree, data: str = "data", tp: str = "model",
+                seq_shard: bool = True, prepend: tuple = ()) -> Tree:
+    """KV/state caches: batch over data; sequence over model (decode flash
+    merge); mamba states head-sharded over model."""
+
+    def spec_for(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        stacked = "units" in keys
+        nd = leaf.ndim - (1 if stacked else 0)
+        last = keys[-1]
+        seq = tp if seq_shard else None
+        if last in ("k", "v"):                    # (B, S, KVH, hd)
+            base = (data, seq, None, None)
+        elif last == "c_kv":                      # (B, S, r)
+            base = (data, seq, None)
+        elif last == "k_rope":
+            base = (data, seq, None)
+        elif last == "conv":                      # (B, K-1, C)
+            base = (data, None, tp)
+        elif last == "ssm":                       # (B, H, P, N)
+            base = (data, tp, None, None)
+        elif last == "enc_out":                   # (B, F, D)
+            base = (data, None, None)
+        else:
+            base = (data,) + (None,) * (nd - 1)
+        if stacked:
+            base = (None,) + base
+        return P(*prepend, *base)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def prepend_axis(specs: Tree, axis: str) -> Tree:
+    """Prepend a mesh axis (e.g. 'pod') to every spec in a tree — used when
+    per-pod replicas are stacked along a leading axis for hybrid sync."""
+    return jax.tree.map(lambda s: P(axis, *tuple(s)), specs,
+                        is_leaf=lambda x: isinstance(x, P))

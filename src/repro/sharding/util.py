@@ -1,0 +1,94 @@
+"""Spec sanitation: drop sharding on axes whose size does not divide the mesh
+axis (e.g. batch=1 long-context decode cannot shard over data=16) and build
+NamedShardings."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Tree = Any
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def sanitize_specs(specs: Tree, shapes: Tree, mesh: Mesh) -> Tree:
+    """Replace spec entries that don't divide the dimension with None."""
+
+    def fix(spec: P, leaf) -> P:
+        parts = tuple(spec)
+        out = []
+        for i, ax in enumerate(parts):
+            if ax is not None and i < leaf.ndim and \
+                    leaf.shape[i] % _axis_size(mesh, ax) == 0:
+                out.append(ax)
+            else:
+                out.append(None)
+        out += [None] * (leaf.ndim - len(out))
+        return P(*out[: leaf.ndim])
+
+    return jax.tree.map(fix, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(specs: Tree, mesh: Mesh) -> Tree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Sequence parallelism (Korthikanti et al.) switch: when enabled, the
+# residual stream between layers is sharded over ('data', 'model') on
+# (batch, seq) instead of ('data',) on batch alone.  GSPMD then turns the
+# Megatron row-parallel all-reduce of (B,S,D) activations into a
+# reduce-scatter (+ all-gather before the next column-parallel input), and
+# the per-layer remat carry shrinks by the model-axis size.  §Perf iteration.
+_SEQ_PARALLEL = False
+
+
+def set_seq_parallel(enabled: bool) -> None:
+    global _SEQ_PARALLEL
+    _SEQ_PARALLEL = bool(enabled)
+
+
+def seq_axis():
+    return "model" if _SEQ_PARALLEL else None
+
+
+def maybe_constrain(x, *parts):
+    """with_sharding_constraint if the ambient mesh has the named axes and
+    they divide the dims; identity otherwise (CPU tests run mesh-free).
+
+    Constraints are the steering wheel for GSPMD propagation: ops like
+    gather/sort/scatter stop propagation, and without a constraint
+    downstream of them XLA happily replicates 100-GB activations.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    out = []
+    for i, axis in enumerate(parts):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        if not all(a in mesh.axis_names for a in axes):
+            out.append(None)
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        # uneven sharding is fine (GSPMD pads); only refuse degenerate dims
+        out.append(axis if i < x.ndim and x.shape[i] >= size else None)
+    return jax.lax.with_sharding_constraint(x, P(*out))

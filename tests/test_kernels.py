@@ -1,0 +1,131 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property tests
+against the pure-jnp oracles (interpret mode executes kernel bodies on CPU)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ell_spmv import ell_spmv, ell_spmv_ref, to_ell
+from repro.kernels.pr_step import fused_pr_step, fused_pr_step_ref
+
+
+def _random_ell(rng, r, k, n, density=0.5, dtype=np.float32):
+    idx = rng.randint(0, n, size=(r, k)).astype(np.int32)
+    val = rng.uniform(0.1, 2.0, size=(r, k)).astype(dtype)
+    msk = rng.uniform(size=(r, k)) < density
+    x = rng.uniform(0.0, 3.0, size=(n,)).astype(dtype)
+    return jnp.asarray(idx), jnp.asarray(val), jnp.asarray(msk), jnp.asarray(x)
+
+
+SHAPES = [(8, 16, 32), (64, 128, 100), (256, 130, 511), (300, 257, 1024),
+          (1024, 128, 64)]
+SEMIRINGS = ["add_mul", "min_add", "max_add", "min_mul"]
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_ell_spmv_matches_ref(shape, semiring):
+    r, k, n = shape
+    rng = np.random.RandomState(hash((r, k, n)) % 2**31)
+    idx, val, msk, x = _random_ell(rng, r, k, n)
+    got = ell_spmv(idx, val, msk, x, semiring=semiring)
+    want = ell_spmv_ref(idx, val, msk, x, semiring=semiring)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_ell_spmv_dtypes(dtype):
+    rng = np.random.RandomState(0)
+    idx, val, msk, x = _random_ell(rng, 64, 32, 50, dtype=np.float32)
+    x = x.astype(dtype)
+    val = val.astype(dtype)
+    got = ell_spmv(idx, val, msk, x, semiring="add_mul")
+    want = ell_spmv_ref(idx, val, msk, x, semiring="add_mul")
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.integers(1, 90),
+    k=st.integers(1, 140),
+    n=st.integers(1, 200),
+    semiring=st.sampled_from(SEMIRINGS),
+    seed=st.integers(0, 2**16),
+)
+def test_ell_spmv_property(r, k, n, semiring, seed):
+    rng = np.random.RandomState(seed)
+    idx, val, msk, x = _random_ell(rng, r, k, n)
+    got = ell_spmv(idx, val, msk, x, semiring=semiring)
+    want = ell_spmv_ref(idx, val, msk, x, semiring=semiring)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ell_spmv_all_masked_rows_yield_identity():
+    rng = np.random.RandomState(1)
+    idx, val, msk, x = _random_ell(rng, 16, 8, 10)
+    msk = jnp.zeros_like(msk)
+    y = ell_spmv(idx, val, msk, x, semiring="min_add")
+    assert bool(jnp.all(jnp.isinf(y)))
+    y = ell_spmv(idx, val, msk, x, semiring="add_mul")
+    np.testing.assert_array_equal(np.asarray(y), 0.0)
+
+
+def test_to_ell_roundtrip_spmv_equals_dense():
+    """COO -> ELL -> spmv == dense matvec (the PageRank contraction)."""
+    rng = np.random.RandomState(3)
+    n = 37
+    edges = np.unique(rng.randint(0, n, size=(200, 2)), axis=0)
+    w = rng.uniform(0.1, 1.0, size=len(edges)).astype(np.float32)
+    idx, val, msk = to_ell(np.asarray(edges), n, weights=w)
+    x = rng.uniform(size=(n,)).astype(np.float32)
+    a = np.zeros((n, n), np.float32)
+    a[edges[:, 1], edges[:, 0]] = w       # A[dst, src]
+    want = a @ x
+    got = np.asarray(ell_spmv(idx, val, msk, jnp.asarray(x)))[:n]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused PageRank pseudo-superstep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(16, 8, 16), (128, 128, 128),
+                                   (260, 140, 300)])
+def test_fused_pr_step_matches_ref(shape):
+    r, k, n = shape
+    rng = np.random.RandomState(5)
+    idx = jnp.asarray(rng.randint(0, n, size=(r, k)).astype(np.int32))
+    val = jnp.asarray(rng.uniform(0, 1, size=(r, k)).astype(np.float32))
+    msk = jnp.asarray(rng.uniform(size=(r, k)) < 0.4)
+    delta = jnp.asarray(rng.uniform(0, 0.1, size=(n,)).astype(np.float32))
+    send = jnp.asarray(rng.uniform(size=(n,)) < 0.5)
+    rank = jnp.asarray(rng.uniform(0, 2, size=(r,)).astype(np.float32))
+    got = fused_pr_step(idx, val, msk, delta, send, rank, tol=1e-3)
+    want = fused_pr_step_ref(idx, val, msk, delta, send, rank, tol=1e-3)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.integers(1, 64), k=st.integers(1, 96), n=st.integers(1, 128),
+       seed=st.integers(0, 2**16))
+def test_fused_pr_step_property(r, k, n, seed):
+    rng = np.random.RandomState(seed)
+    idx = jnp.asarray(rng.randint(0, n, size=(r, k)).astype(np.int32))
+    val = jnp.asarray(rng.uniform(0, 1, size=(r, k)).astype(np.float32))
+    msk = jnp.asarray(rng.uniform(size=(r, k)) < 0.5)
+    delta = jnp.asarray(rng.uniform(0, 0.1, size=(n,)).astype(np.float32))
+    send = jnp.asarray(rng.uniform(size=(n,)) < 0.5)
+    rank = jnp.asarray(rng.uniform(0, 2, size=(r,)).astype(np.float32))
+    got = fused_pr_step(idx, val, msk, delta, send, rank)
+    want = fused_pr_step_ref(idx, val, msk, delta, send, rank)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
