@@ -1,0 +1,184 @@
+"""Engine-level A/B benchmark of the GraphHP local-phase hot loop.
+
+The paper's entire speedup comes from iterating the local phase a lot
+(Algorithm 2), so the metric that matters is the cost of ONE pseudo-superstep
+(apply_phase -> deliver(local)).  Three implementations are timed on the
+--fast PageRank and SSSP workloads:
+
+  dense   the seed path: gather over every padded edge + combine_segments,
+          per-channel segment-max message accounting inside the loop,
+  ell     kernel-backed delivery: semiring channels dispatch to the Pallas
+          `ell_spmv` ELL kernel, counters hoisted out (collect_metrics=False),
+  fused   (PageRank only) the whole pseudo-superstep through the fused
+          `pr_step` kernel — deliver + apply in one VMEM-resident pass.
+
+Emits BENCH_local_phase.json (repo root by default) so the perf trajectory
+is tracked per-PR, and returns harness CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.local_phase_bench [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_local_phase.json")
+
+
+def _time_us(fn, *args, warmup=3, iters=20):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def _saturated_state(graph, prog, vdata, payload_value):
+    """EngineState with a full frontier: every vertex sent last step and has
+    one pending message — the steady-state shape of a busy local phase."""
+    import dataclasses
+    from repro.core.engine_hybrid import init_hybrid
+
+    es = init_hybrid(graph, prog, vdata)
+    vm = graph.vertex_mask
+    pending = {}
+    for ch in prog.channels:
+        (dt, _), = ch.components
+        pending[ch.name] = ((jnp.where(vm, payload_value, 0).astype(dt),), vm)
+    return dataclasses.replace(es, send=vm, pending=pending)
+
+
+def _pseudo_superstep(graph, prog, vdata, use_ell, collect_metrics):
+    from repro.core.runtime import apply_phase, deliver
+    from repro.core.vertex_program import StepInfo
+
+    info = StepInfo(superstep=1, pseudo_step=1, phase="local")
+
+    def step(es):
+        es = apply_phase(graph, prog, es, graph.vertex_mask, info, vdata)
+        es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
+                        collect_metrics=collect_metrics)
+        return es
+
+    return jax.jit(step)
+
+
+def _fused_step(graph, prog):
+    """One fused-loop body (mirrors engine_hybrid._fused_pr_local_phase
+    with collect_metrics=False): kernel + has/running/export bookkeeping."""
+    from repro.core.runtime import flat_ell
+    from repro.kernels.common import default_interpret
+    from repro.kernels.pr_step import fused_pr_step
+
+    p, vp, kl = graph.n_partitions, graph.vp, graph.kl
+    idx, val, msk = flat_ell(graph, p)
+    interpret = default_interpret()
+
+    def step(rank, delta, send, eo, esend):
+        rank_n, d_in, send_n = fused_pr_step(
+            idx, val, msk, delta.reshape(-1), send.reshape(-1),
+            rank.reshape(-1), damping=prog.damping, tol=prog.tol,
+            interpret=interpret)
+        rank_n = rank_n.reshape(p, vp)
+        d_in = d_in.reshape(p, vp)
+        send_n = send_n.reshape(p, vp)
+        eo = eo + jnp.where(send_n, d_in, 0.0)
+        esend = jnp.logical_or(esend, send_n)
+        running = jnp.any(d_in > 0, axis=1)
+        return rank_n, d_in, send_n, eo, esend, running
+
+    return jax.jit(step)
+
+
+def bench_local_phase(out_path: str = DEFAULT_OUT) -> dict:
+    from repro.core import bfs_partition, build_partitioned_graph
+    from repro.core.apps import SSSP, IncrementalPageRank
+    from repro.core.apps.pagerank import pagerank_edge_weights
+    from repro.data.graphs import grid_graph, rmat_graph
+
+    results: dict = {"meta": {"backend": jax.default_backend(),
+                              "mode": "interpret" if
+                              jax.default_backend() != "tpu" else "mosaic"},
+                     "workloads": {}}
+
+    # --- PageRank, the --fast web workload -------------------------------
+    edges, n = rmat_graph(1500, avg_degree=8, seed=1)
+    w = pagerank_edge_weights(edges, n)
+    part = bfs_partition(edges, n, 8, seed=1)
+    graph = build_partitioned_graph(edges, n, part, weights=w)
+    prog = IncrementalPageRank(tolerance=1e-4)
+    es = _saturated_state(graph, prog, None, 0.01)
+    dense = _time_us(_pseudo_superstep(graph, prog, None, False, True), es)
+    ell = _time_us(_pseudo_superstep(graph, prog, None, True, False), es)
+    fstep = _fused_step(graph, prog)
+    fused = _time_us(
+        fstep, es.state["rank"],
+        jnp.where(graph.vertex_mask, 0.01, 0.0), graph.vertex_mask,
+        jnp.zeros_like(es.state["rank"]), jnp.zeros_like(graph.vertex_mask))
+    results["workloads"]["pagerank_fast"] = {
+        "graph": graph.shape_summary, "kl": graph.kl,
+        "dense_us": dense, "ell_us": ell, "fused_us": fused,
+        "speedup_ell": dense / ell, "speedup_fused": dense / fused,
+    }
+
+    # --- SSSP, the --fast road workload ----------------------------------
+    edges, w, n = grid_graph(8, 110, seed=0)
+    part = bfs_partition(edges, n, 8, seed=0)
+    graph = build_partitioned_graph(edges, n, part, weights=w)
+    prog = SSSP(source=0)
+    es = _saturated_state(graph, prog, None, 1.0)
+    dense = _time_us(_pseudo_superstep(graph, prog, None, False, True), es)
+    ell = _time_us(_pseudo_superstep(graph, prog, None, True, False), es)
+    results["workloads"]["sssp_fast"] = {
+        "graph": graph.shape_summary, "kl": graph.kl,
+        "dense_us": dense, "ell_us": ell,
+        "speedup_ell": dense / ell,
+    }
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def csv_rows(results: dict) -> list[str]:
+    rows = []
+    for name, r in results["workloads"].items():
+        for variant in ("dense", "ell", "fused"):
+            us = r.get(f"{variant}_us")
+            if us is None:
+                continue
+            sp = r.get(f"speedup_{variant}", 1.0)
+            rows.append(f"local_phase/{name}/{variant},{us:.0f},"
+                        f"speedup={sp:.2f};kl={r['kl']};graph={r['graph']}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="where to write BENCH_local_phase.json")
+    args = ap.parse_args()
+    results = bench_local_phase(args.out)
+    print("name,us_per_call,derived")
+    for row in csv_rows(results):
+        print(row)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, REPO_ROOT)
+    sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+    main()

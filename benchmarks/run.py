@@ -22,10 +22,10 @@ def main() -> None:
                     help="smaller graphs (CI-sized)")
     ap.add_argument("--table", default=None,
                     help="run a single table: sssp|pagerank|bm|giraphpp|"
-                         "kernels|roofline")
+                         "kernels|local_phase|roofline")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_tables
+    from benchmarks import kernel_bench, local_phase_bench, paper_tables
 
     rows: list[str] = []
 
@@ -53,6 +53,8 @@ def main() -> None:
     if want("kernels"):
         rows += kernel_bench.bench_ell_spmv()
         rows += kernel_bench.bench_fused_pr_step()
+    if want("local_phase"):
+        rows += local_phase_bench.csv_rows(local_phase_bench.bench_local_phase())
     if want("roofline"):
         rows += roofline_rows()
 

@@ -20,11 +20,22 @@ import threading
 from typing import Any
 
 import numpy as np
-import zstandard as zstd
+
+try:                               # optional: only save/load need it
+    import zstandard as zstd
+except ImportError:                # pragma: no cover - env without zstandard
+    zstd = None
 
 import jax
 
 Tree = Any
+
+
+def _require_zstd():
+    if zstd is None:
+        raise ImportError(
+            "checkpointing requires the optional 'zstandard' package "
+            "(pip install zstandard, see requirements-dev.txt)")
 
 
 def _flatten(tree: Tree):
@@ -43,6 +54,7 @@ def _leaf_path_names(tree: Tree) -> list[str]:
 
 def save_checkpoint(path: str, tree: Tree, step: int,
                     extra_meta: dict | None = None) -> None:
+    _require_zstd()
     os.makedirs(path, exist_ok=True)
     leaves, _ = _flatten(tree)
     names = _leaf_path_names(tree)
@@ -72,6 +84,7 @@ def load_checkpoint(path: str, tree_like: Tree, shardings: Tree | None = None,
     """Restore into the structure of ``tree_like``; if ``shardings`` given
     (possibly for a DIFFERENT mesh than the writer's), device_put re-shards —
     elastic scaling across restarts."""
+    _require_zstd()
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     leaves, treedef = _flatten(tree_like)
@@ -99,6 +112,7 @@ class AsyncCheckpointer:
     step loop; keeps the last ``keep`` checkpoints."""
 
     def __init__(self, base: str, keep: int = 3):
+        _require_zstd()   # fail on the caller thread, not silently in the worker
         self.base = base
         self.keep = keep
         self.q: queue.Queue = queue.Queue(maxsize=2)
@@ -109,15 +123,17 @@ class AsyncCheckpointer:
     def _worker(self):
         while True:
             item = self.q.get()
-            if item is None:
-                return
-            step, host_tree, meta = item
             try:
+                if item is None:
+                    return
+                step, host_tree, meta = item
                 path = os.path.join(self.base, f"step_{step:08d}")
                 save_checkpoint(path, host_tree, step, meta)
                 self._gc()
             except Exception as e:       # surfaced on next save()
                 self._err = e
+            finally:
+                self.q.task_done()       # wait() joins on this
 
     def _gc(self):
         if not os.path.isdir(self.base):
@@ -135,10 +151,7 @@ class AsyncCheckpointer:
         self.q.put((int(step), host, meta))
 
     def wait(self):
-        self.q.join() if hasattr(self.q, "join") else None
-        while not self.q.empty():
-            import time
-            time.sleep(0.05)
+        self.q.join()
 
     def close(self):
         self.q.put(None)

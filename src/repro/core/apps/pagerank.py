@@ -21,8 +21,13 @@ from repro.core.vertex_program import Channel, StepInfo, VertexProgram
 
 
 class IncrementalPageRank(VertexProgram):
-    channels = (Channel("delta", "sum", ((jnp.float32, 0.0),)),)
+    channels = (Channel("delta", "sum", ((jnp.float32, 0.0),),
+                        semiring="add_mul"),)
     boundary_participates = True
+    # the hybrid engine may run the whole local phase through the fused
+    # `pr_step` Pallas kernel: sum channel, always-emitting, never
+    # self-activating, strictly positive contributions (w > 0, delta > tol)
+    fused_kernel = "pr_step"
 
     def __init__(self, tolerance: float = 1e-4, damping: float = 0.85):
         self.tol = float(tolerance)
@@ -37,6 +42,10 @@ class IncrementalPageRank(VertexProgram):
 
     def emit(self, ch, out_src, w, src_gid, dst_gid):
         return (self.damping * out_src["delta"] * w,), jnp.ones(w.shape, bool)
+
+    def ell_payload(self, ch, out, send):
+        # message = (damping * delta)[src] * w; non-senders contribute 0
+        return jnp.where(send, self.damping * out["delta"], 0.0)
 
     def apply(self, state, inbox, gid, vmask, vdata, info: StepInfo):
         (delta,), has = inbox["delta"]

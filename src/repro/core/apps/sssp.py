@@ -15,7 +15,8 @@ INF = jnp.float32(jnp.inf)
 
 
 class SSSP(VertexProgram):
-    channels = (Channel("dist", "min", ((jnp.float32, jnp.inf),)),)
+    channels = (Channel("dist", "min", ((jnp.float32, jnp.inf),),
+                        semiring="min_add"),)
     boundary_participates = True
 
     def __init__(self, source: int):
@@ -32,6 +33,10 @@ class SSSP(VertexProgram):
 
     def emit(self, ch, out_src, w, src_gid, dst_gid):
         return (out_src["dist"] + w,), jnp.ones(w.shape, bool)
+
+    def ell_payload(self, ch, out, send):
+        # message = dist[src] + w; non-senders relax to +inf (min identity)
+        return jnp.where(send, out["dist"], INF)
 
     def apply(self, state, inbox, gid, vmask, vdata, info: StepInfo):
         (msg,), has = inbox["dist"]

@@ -17,7 +17,8 @@ _IMAX = jnp.iinfo(jnp.int32).max
 
 
 class WCC(VertexProgram):
-    channels = (Channel("label", "min", ((jnp.int32, _IMAX),)),)
+    channels = (Channel("label", "min", ((jnp.int32, _IMAX),),
+                        semiring="min_add"),)
     boundary_participates = True
 
     def init(self, gid, vmask, vdata):
@@ -26,6 +27,15 @@ class WCC(VertexProgram):
 
     def emit(self, ch, out_src, w, src_gid, dst_gid):
         return (out_src["label"],), jnp.ones(w.shape, bool)
+
+    # kernel path: labels ride min_add with zeroed edge values — exact for
+    # labels < 2**24 (float32-representable vertex ids); runtime.ell_channels
+    # enforces the bound and falls back to dense past it
+    def ell_payload(self, ch, out, send):
+        return jnp.where(send, out["label"].astype(jnp.float32), jnp.inf)
+
+    def ell_edge_values(self, ch, val):
+        return jnp.zeros_like(val)
 
     def apply(self, state, inbox, gid, vmask, vdata, info: StepInfo):
         (msg,), has = inbox["label"]

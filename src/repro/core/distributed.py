@@ -35,10 +35,13 @@ def shard0_specs(tree, axes) -> Any:
 def make_dist_hybrid_step(prog: VertexProgram, mesh: Mesh,
                           axes: tuple = AXES, vdata: Any = None,
                           max_local_steps: int = 10_000,
-                          wire_dtype=None):
+                          wire_dtype=None, use_ell: bool = False,
+                          collect_metrics: bool = True):
     """Returns a jittable step: (graph, es) -> es, running one global
     iteration on a mesh where dim 0 of every array is the partition axis.
-    ``wire_dtype=jnp.bfloat16`` halves exchange bytes (§Perf)."""
+    ``wire_dtype=jnp.bfloat16`` halves exchange bytes (§Perf);
+    ``use_ell``/``collect_metrics`` select the kernel-backed local phase
+    (the ELL tiles shard on dim 0 like every other partition-major array)."""
 
     def gather_table(x):
         # local (Pb, X, ...) -> global (P, X, ...): the one exchange
@@ -49,7 +52,8 @@ def make_dist_hybrid_step(prog: VertexProgram, mesh: Mesh,
         es = hybrid_iteration(graph, prog, es, vdata,
                               gather_table=gather_table,
                               max_local_steps=max_local_steps,
-                              wire_dtype=wire_dtype)
+                              wire_dtype=wire_dtype, use_ell=use_ell,
+                              collect_metrics=collect_metrics)
         # master-side aggregation of the paper's metrics: psum only THIS
         # iteration's per-device delta (one collective, outside the
         # pseudo-superstep loop), keeping the running totals replicated.
@@ -67,10 +71,20 @@ def make_dist_hybrid_step(prog: VertexProgram, mesh: Mesh,
     def step(graph, es):
         in_specs = (shard0_specs(graph, axes), _es_specs(es, axes))
         out_specs = _es_specs(es, axes)
-        return jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)(graph, es)
+        return _shard_map(local_step, mesh, in_specs, out_specs)(graph, es)
 
     return step
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across jax versions (older
+    releases ship it under jax.experimental with a ``check_rep`` kwarg)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def _es_specs(es: EngineState, axes) -> Any:
@@ -85,7 +99,7 @@ def _es_specs(es: EngineState, axes) -> Any:
 
 
 def block_graph_shapes(n_partitions: int, vp: int, ep: int, xp: int, hp: int,
-                       gp: int | None = None) -> PartitionedGraph:
+                       gp: int | None = None, kl: int = 0) -> PartitionedGraph:
     """ShapeDtypeStruct stand-in graph (dry-run; no allocation)."""
     gp = gp or vp
     f = jax.ShapeDtypeStruct
@@ -110,8 +124,11 @@ def block_graph_shapes(n_partitions: int, vp: int, ep: int, xp: int, hp: int,
         export_fanout=f((n_partitions, xp), i32),
         halo_ptr=f((n_partitions, hp), i32),
         halo_mask=f((n_partitions, hp), b),
+        ell_idx=f((n_partitions, vp, kl), i32),
+        ell_val=f((n_partitions, vp, kl), f32),
+        ell_msk=f((n_partitions, vp, kl), b),
         n_partitions=n_partitions, n_vertices=n_partitions * vp,
-        n_edges=n_partitions * ep, vp=vp, ep=ep, xp=xp, hp=hp, gp=gp,
+        n_edges=n_partitions * ep, vp=vp, ep=ep, xp=xp, hp=hp, gp=gp, kl=kl,
     )
     return pg
 

@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import PartitionedGraph
-from repro.core.runtime import (EngineState, apply_phase, deliver, exchange,
-                                init_state, quiescent)
+from repro.core.runtime import (EngineState, apply_phase, deliver,
+                                ell_channels, exchange, init_state, quiescent)
 from repro.core.vertex_program import StepInfo, VertexProgram
 
 __all__ = ["am_superstep", "run_am"]
@@ -37,12 +37,24 @@ def am_superstep(
     es: EngineState,
     vdata: Any,
     gather_table: Callable | None = None,
+    use_ell: bool = False,
+    collect_metrics: bool = True,
 ) -> EngineState:
     es = exchange(graph, es, gather_table)
     es = dataclasses.replace(
         es, export_out=prog.export_identity(es.export_out),
         export_send=jnp.zeros_like(es.export_send))
-    es, _ = deliver(graph, prog, es, edges="all")
+    if use_ell and ell_channels(graph, prog, es.out, es.send):
+        # split so the local half rides the ELL kernel (groups never mix
+        # local and remote edges, so counters are unchanged); programs with
+        # no kernel-eligible channel keep the single 'all' delivery
+        es, _ = deliver(graph, prog, es, edges="remote",
+                        collect_metrics=collect_metrics)
+        es, _ = deliver(graph, prog, es, edges="local", use_ell=True,
+                        collect_metrics=collect_metrics)
+    else:
+        es, _ = deliver(graph, prog, es, edges="all",
+                        collect_metrics=collect_metrics)
 
     slot = jnp.arange(graph.vp)[None, :]
     half_a = jnp.logical_and(graph.vertex_mask, slot < graph.vp // 2)
@@ -51,7 +63,8 @@ def am_superstep(
     info = StepInfo(superstep=es.counters.iterations + 1, pseudo_step=0,
                     phase="superstep")
     es = apply_phase(graph, prog, es, half_a, info, vdata)
-    es, _ = deliver(graph, prog, es, edges="local")   # A's messages, in memory
+    es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
+                    collect_metrics=collect_metrics)   # A's messages, in memory
     es = apply_phase(graph, prog, es, half_b, info, vdata)
     # es.send is now B's senders only: A's in-partition messages were already
     # delivered above (delivering them again next superstep would double-count
@@ -70,8 +83,11 @@ def run_am(
     prog: VertexProgram,
     vdata: Any = None,
     max_iters: int = 100_000,
+    use_ell: bool = False,
+    collect_metrics: bool = True,
 ) -> tuple[EngineState, int]:
-    step = jax.jit(partial(am_superstep, graph, prog, vdata=vdata))
+    step = jax.jit(partial(am_superstep, graph, prog, vdata=vdata,
+                           use_ell=use_ell, collect_metrics=collect_metrics))
     es = init_state(graph, prog, vdata)
     for _ in range(max_iters):
         if bool(quiescent(prog, es)):

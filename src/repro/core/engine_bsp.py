@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import PartitionedGraph
-from repro.core.runtime import (EngineState, apply_phase, deliver, exchange,
-                                init_state, quiescent)
+from repro.core.runtime import (EngineState, apply_phase, deliver,
+                                ell_channels, exchange, init_state, quiescent)
 from repro.core.vertex_program import StepInfo, VertexProgram
 
 __all__ = ["bsp_superstep", "run_bsp"]
@@ -38,11 +38,26 @@ def bsp_superstep(
     es: EngineState,
     vdata: Any,
     gather_table: Callable | None = None,
+    use_ell: bool = False,
+    collect_metrics: bool = True,
 ) -> EngineState:
-    """One Hama superstep: exchange -> deliver(all) -> Compute(all)."""
+    """One Hama superstep: exchange -> deliver(all) -> Compute(all).
+
+    With ``use_ell`` the delivery splits into remote + local halves so the
+    local half can dispatch to the Pallas ELL kernel.  Combine groups never
+    mix local and remote edges, so counters are unchanged; float 'sum'
+    inboxes may differ in the last bit (different reduction order).
+    """
     es = exchange(graph, es, gather_table)
     es = _reset_export(prog, es)
-    es, _ = deliver(graph, prog, es, edges="all")
+    if use_ell and ell_channels(graph, prog, es.out, es.send):
+        es, _ = deliver(graph, prog, es, edges="remote",
+                        collect_metrics=collect_metrics)
+        es, _ = deliver(graph, prog, es, edges="local", use_ell=True,
+                        collect_metrics=collect_metrics)
+    else:
+        es, _ = deliver(graph, prog, es, edges="all",
+                        collect_metrics=collect_metrics)
     info = StepInfo(superstep=es.counters.iterations + 1, pseudo_step=0,
                     phase="superstep")
     es = apply_phase(graph, prog, es, graph.vertex_mask, info, vdata)
@@ -58,9 +73,12 @@ def run_bsp(
     prog: VertexProgram,
     vdata: Any = None,
     max_iters: int = 100_000,
+    use_ell: bool = False,
+    collect_metrics: bool = True,
 ) -> tuple[EngineState, int]:
     """Host-driven loop: init superstep + supersteps until quiescence."""
-    step = jax.jit(partial(bsp_superstep, graph, prog, vdata=vdata))
+    step = jax.jit(partial(bsp_superstep, graph, prog, vdata=vdata,
+                           use_ell=use_ell, collect_metrics=collect_metrics))
     es = init_state(graph, prog, vdata)
     for _ in range(max_iters):
         if bool(quiescent(prog, es)):

@@ -58,6 +58,129 @@ def _partition_running(graph, prog, es, participate, vdata) -> jax.Array:
     return jnp.any(jnp.logical_and(need, participate), axis=1)
 
 
+def _use_fused_pr(graph: PartitionedGraph, prog: VertexProgram, use_ell: bool,
+                  max_local_steps: int) -> bool:
+    """Static gate for the fully-fused PageRank local phase."""
+    return (use_ell and graph.has_ell and max_local_steps > 0
+            and getattr(prog, "fused_kernel", None) == "pr_step"
+            and len(prog.channels) == 1 and prog.boundary_participates)
+
+
+def _fused_pr_local_phase(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    es: EngineState,
+    running0: jax.Array,
+    max_local_steps: int,
+    collect_metrics: bool,
+) -> EngineState:
+    """Local phase fused through the `pr_step` Pallas kernel.
+
+    One kernel call performs deliver(pseudo-superstep s) + apply(s+1): the
+    incremental-PageRank pseudo-superstep chain gather -> segment-sum ->
+    add -> compare collapses into a single VMEM-resident pass per step, so
+    the iterated-a-lot inner loop pays one HBM round-trip instead of four
+    and zero message-accounting reductions when ``collect_metrics=False``.
+
+    Kernel contract (asserted by ``prog.fused_kernel == 'pr_step'``):
+    single 'sum' channel, always-valid emit ``x[src] * w`` with w > 0 and
+    sent deltas > tol > 0 (so delivered sums are strictly positive and
+    d_in > 0 <=> has-message), apply is ``rank += delta; send = delta >
+    tol``, never self-activating, additive SourceCombine, boundary
+    vertices participating.  The bootstrap below runs the first apply
+    (consuming the inbox filled by the global phase) in plain jnp, then the
+    while-loop iterates the fused kernel; trip count, pseudo-superstep and
+    message counters match the generic path exactly.
+    """
+    from repro.core.runtime import flat_ell
+    from repro.kernels.common import default_interpret
+    from repro.kernels.pr_step import fused_pr_step
+
+    p = es.send.shape[0]
+    vp, kl = graph.vp, graph.kl
+    idx, val, msk = flat_ell(graph, p)
+    interpret = default_interpret()
+    tol, damping = prog.tol, prog.damping
+    name = prog.channels[0].name
+
+    (p0,), has0 = es.pending[name]
+    # bootstrap: apply_1 consumes the inbox (payload is 0 wherever ~has,
+    # the sum identity, so the adds need no explicit compute mask)
+    rank = es.state["rank"] + p0
+    send = p0 > tol
+    out_delta = jnp.where(has0, p0, es.out["delta"])
+    exp_out = es.export_out["delta"] + jnp.where(send, p0, 0.0)
+    exp_send = jnp.logical_or(es.export_send, send)
+    c0 = es.counters
+
+    def cond(carry):
+        _, _, _, _, _, _, _, running, _, _, k, _ = carry
+        return jnp.logical_and(jnp.any(running), k < max_local_steps)
+
+    def body(carry):
+        (rank, delta, send, has, out_d, eo, esend, running, pseudo,
+         metrics, k, _prev) = carry
+        # pre-step apply state, so a max_local_steps cutoff can roll the
+        # final fused apply back to generic-path semantics (see below)
+        prev = (rank, out_d, eo, esend, send)
+        rank_n, d_in, send_n = fused_pr_step(
+            idx, val, msk, delta.reshape(-1), send.reshape(-1),
+            rank.reshape(-1), damping=damping, tol=tol, interpret=interpret)
+        rank_n = rank_n.reshape(p, vp)
+        d_in = d_in.reshape(p, vp)
+        send_n = send_n.reshape(p, vp)
+        net_local, mem = metrics
+        if collect_metrics:
+            # exact parity with the dense accounting: has-flags from the
+            # send gather, one combined local group per messaged dst
+            send_tile = jnp.logical_and(
+                send.reshape(-1)[idx].reshape(p, vp, kl), graph.ell_msk)
+            has_n = jnp.any(send_tile, axis=-1)
+            net_local = net_local + jnp.sum(has_n).astype(jnp.int32)
+            mem = mem + jnp.sum(send_tile).astype(jnp.int32)
+        else:
+            has_n = d_in > 0           # positive-contribution invariant
+        out_d = jnp.where(has_n, d_in, out_d)
+        eo = eo + jnp.where(send_n, d_in, 0.0)
+        esend = jnp.logical_or(esend, send_n)
+        running = jnp.any(has_n, axis=1)
+        pseudo = pseudo + running.astype(jnp.int32)
+        return (rank_n, d_in, send_n, has_n, out_d, eo, esend, running,
+                pseudo, (net_local, mem), k + 1, prev)
+
+    carry0 = (rank, p0, send, has0, out_delta, exp_out, exp_send, running0,
+              c0.pseudo_supersteps,
+              (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)),
+              jnp.zeros((), jnp.int32),
+              (rank, out_delta, exp_out, exp_send, send))
+    (rank, delta, send, has, out_delta, exp_out, exp_send, _, pseudo,
+     (net_local, mem), _,
+     (rank_p, out_p, eo_p, esend_p, send_p)) = jax.lax.while_loop(
+        cond, body, carry0)
+
+    # max_local_steps cutoff: the kernel has already folded the final
+    # delivery into rank/out/export, but the generic path leaves it
+    # pending-only for the next iteration's apply — roll the non-pending
+    # state back one step so the delivery is not applied twice.  At a
+    # quiescent exit `has` is all-False and this is the identity.
+    cut = jnp.any(has)
+    rank = jnp.where(cut, rank_p, rank)
+    out_delta = jnp.where(cut, out_p, out_delta)
+    exp_out = jnp.where(cut, eo_p, exp_out)
+    exp_send = jnp.where(cut, esend_p, exp_send)
+    send = jnp.where(cut, send_p, send)
+
+    counters = dataclasses.replace(
+        c0, pseudo_supersteps=pseudo,
+        net_local_messages=c0.net_local_messages + net_local,
+        mem_messages=c0.mem_messages + mem)
+    return dataclasses.replace(
+        es, state={"rank": rank}, out={"delta": out_delta}, send=send,
+        pending={name: ((delta,), has)},
+        export_out={"delta": exp_out}, export_send=exp_send,
+        counters=counters)
+
+
 def hybrid_iteration(
     graph: PartitionedGraph,
     prog: VertexProgram,
@@ -66,8 +189,17 @@ def hybrid_iteration(
     gather_table: Callable | None = None,
     max_local_steps: int = 100_000,
     wire_dtype=None,
+    use_ell: bool = False,
+    collect_metrics: bool = True,
 ) -> EngineState:
-    """One global iteration: exchange -> global phase -> local phase."""
+    """One global iteration: exchange -> global phase -> local phase.
+
+    ``use_ell`` routes local-phase delivery through the Pallas ELL kernels
+    for semiring-declared channels (and the entire local phase through the
+    fused `pr_step` kernel for programs declaring ``fused_kernel``);
+    ``collect_metrics=False`` drops the paper's message accounting from the
+    hot loop (counters other than iterations/pseudo-supersteps stay put).
+    """
     participate = _participation_mask(graph, prog)
     it = es.counters.iterations + 1
 
@@ -76,7 +208,8 @@ def hybrid_iteration(
     es = dataclasses.replace(
         es, export_out=prog.export_identity(es.export_out),
         export_send=jnp.zeros_like(es.export_send))
-    es, _ = deliver(graph, prog, es, edges="remote")
+    es, _ = deliver(graph, prog, es, edges="remote",
+                    collect_metrics=collect_metrics)
 
     # -- 2. global phase: boundary vertices, exactly once -----------------
     # (plus any program-declared global-only-active vertices: interior
@@ -89,42 +222,53 @@ def hybrid_iteration(
     es = apply_phase(graph, prog, es, gmask, info_g, vdata)
     # boundary -> same-partition messages are processed by the immediate
     # local phase of this iteration (paper §4.2)
-    es, _ = deliver(graph, prog, es, edges="local")
+    es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
+                    collect_metrics=collect_metrics)
 
     # -- 3. local phase: pseudo-supersteps until per-partition quiescence --
-    def cond(carry):
-        es_, running, k = carry
-        return jnp.logical_and(jnp.any(running), k < max_local_steps)
-
-    def body(carry):
-        es_, running, k = carry
-        mask = jnp.logical_and(participate, running[:, None])
-        info_l = StepInfo(superstep=it, pseudo_step=k + 1, phase="local")
-        es_ = apply_phase(graph, prog, es_, mask, info_l, vdata)
-        es_, _ = deliver(graph, prog, es_, edges="local")
-        running = _partition_running(graph, prog, es_, mask, vdata)
-        c = es_.counters
-        es_ = dataclasses.replace(es_, counters=dataclasses.replace(
-            c, pseudo_supersteps=c.pseudo_supersteps + running.astype(jnp.int32)))
-        return es_, running, k + 1
-
     running0 = _partition_running(graph, prog, es, participate, vdata)
     c0 = es.counters
     es = dataclasses.replace(es, counters=dataclasses.replace(
         c0, pseudo_supersteps=c0.pseudo_supersteps + running0.astype(jnp.int32)))
-    es, _, _ = jax.lax.while_loop(cond, body, (es, running0, jnp.zeros((), jnp.int32)))
+
+    if _use_fused_pr(graph, prog, use_ell, max_local_steps):
+        es = _fused_pr_local_phase(graph, prog, es, running0,
+                                   max_local_steps, collect_metrics)
+    else:
+        def cond(carry):
+            es_, running, k = carry
+            return jnp.logical_and(jnp.any(running), k < max_local_steps)
+
+        def body(carry):
+            es_, running, k = carry
+            mask = jnp.logical_and(participate, running[:, None])
+            info_l = StepInfo(superstep=it, pseudo_step=k + 1, phase="local")
+            es_ = apply_phase(graph, prog, es_, mask, info_l, vdata)
+            es_, _ = deliver(graph, prog, es_, edges="local", use_ell=use_ell,
+                             collect_metrics=collect_metrics)
+            running = _partition_running(graph, prog, es_, mask, vdata)
+            c = es_.counters
+            es_ = dataclasses.replace(es_, counters=dataclasses.replace(
+                c, pseudo_supersteps=c.pseudo_supersteps + running.astype(jnp.int32)))
+            return es_, running, k + 1
+
+        es, _, _ = jax.lax.while_loop(
+            cond, body, (es, running0, jnp.zeros((), jnp.int32)))
 
     c = es.counters
     return dataclasses.replace(
         es, counters=dataclasses.replace(c, iterations=c.iterations + 1))
 
 
-def init_hybrid(graph: PartitionedGraph, prog: VertexProgram, vdata: Any) -> EngineState:
+def init_hybrid(graph: PartitionedGraph, prog: VertexProgram, vdata: Any,
+                use_ell: bool = False,
+                collect_metrics: bool = True) -> EngineState:
     """Initialization iteration (iteration 0): same as Hama's first superstep;
     in-partition messages go to pending for iteration 1's phases, crossing
     messages ride the export buffer."""
     es = init_state(graph, prog, vdata)
-    es, _ = deliver(graph, prog, es, edges="local")
+    es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
+                    collect_metrics=collect_metrics)
     return es
 
 
@@ -134,12 +278,35 @@ def run_hybrid(
     vdata: Any = None,
     max_iters: int = 100_000,
     max_local_steps: int = 100_000,
+    use_ell: bool = False,
+    collect_metrics: bool = True,
+    device_loop: bool = True,
 ) -> tuple[EngineState, int]:
-    step = jax.jit(partial(hybrid_iteration, graph, prog, vdata=vdata,
-                           max_local_steps=max_local_steps))
-    es = init_hybrid(graph, prog, vdata)
-    for _ in range(max_iters):
-        if bool(quiescent(prog, es)):
-            break
-        es = step(es=es)
+    """Run global iterations to quiescence.
+
+    ``device_loop=True`` (default) runs the whole outer loop as one jitted
+    device-side ``lax.while_loop`` — the per-iteration ``bool(quiescent(...))``
+    host round-trip disappears and the host syncs exactly once at the end.
+    ``device_loop=False`` keeps the old host-driven loop (useful when
+    stepping/debugging iteration by iteration).
+    """
+    step = partial(hybrid_iteration, graph, prog, vdata=vdata,
+                   max_local_steps=max_local_steps, use_ell=use_ell,
+                   collect_metrics=collect_metrics)
+    es = init_hybrid(graph, prog, vdata, use_ell=use_ell,
+                     collect_metrics=collect_metrics)
+    if device_loop:
+        def cond(es_):
+            return jnp.logical_and(
+                jnp.logical_not(quiescent(prog, es_)),
+                es_.counters.iterations < max_iters)
+
+        es = jax.jit(lambda es_: jax.lax.while_loop(
+            cond, lambda e: step(es=e), es_))(es)
+    else:
+        jstep = jax.jit(lambda es_: step(es=es_))
+        for _ in range(max_iters):
+            if bool(quiescent(prog, es)):
+                break
+            es = jstep(es)
     return es, int(es.counters.iterations)

@@ -79,6 +79,14 @@ class PartitionedGraph:
     export_fanout: jax.Array    # (P, X) int32 — #remote partitions consuming
     halo_ptr: jax.Array         # (P, H) int32 — flat index q*X + x into exports
     halo_mask: jax.Array        # (P, H) bool
+    # ---- ELL-packed local in-edges (destination-major) ------------------
+    # The local-phase fast path: row v of partition p holds the sources of
+    # v's same-partition in-edges as dense (idx, val, msk) slices that feed
+    # the Pallas `ell_spmv` / `pr_step` kernels.  Kl = 0 when the layout was
+    # not built (skewed in-degree past `ell_max_slices`, or disabled).
+    ell_idx: jax.Array          # (P, Vp, Kl) int32 — source local slot
+    ell_val: jax.Array          # (P, Vp, Kl) float32 — edge weight
+    ell_msk: jax.Array          # (P, Vp, Kl) bool — slot occupancy
     # ---- static metadata (not traced) -----------------------------------
     n_partitions: int = dataclasses.field(metadata=dict(static=True))
     n_vertices: int = dataclasses.field(metadata=dict(static=True))
@@ -88,6 +96,13 @@ class PartitionedGraph:
     xp: int = dataclasses.field(metadata=dict(static=True))
     hp: int = dataclasses.field(metadata=dict(static=True))
     gp: int = dataclasses.field(metadata=dict(static=True))
+    kl: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def has_ell(self) -> bool:
+        """Whether the ELL local-edge layout is available for kernel-backed
+        delivery."""
+        return self.kl > 0
 
     # ------------------------------------------------------------------
     @property
@@ -185,10 +200,21 @@ def build_partitioned_graph(
     part: np.ndarray,
     weights: np.ndarray | None = None,
     pad_multiple: int = 8,
+    build_ell: bool = True,
+    ell_pad_slices: int = 8,
+    ell_max_slices: int = 2048,
 ) -> PartitionedGraph:
     """Construct the padded partition-major structure from a global edge list.
 
     ``edges`` is (E, 2) int [src, dst]; ``part`` maps vertex -> partition id.
+
+    ``build_ell`` additionally packs each partition's *local* in-edges into a
+    destination-major ELL layout (the kernel fast path for local-phase
+    delivery).  ``ell_pad_slices`` pads the slice axis (use 128 when
+    targeting TPU lanes; 8 keeps CPU/interpret memory small);
+    ``ell_max_slices`` skips the layout entirely when the local in-degree is
+    too skewed for ELL padding to pay off (engines then fall back to the
+    dense gather/segment path).
     """
     edges = np.asarray(edges, dtype=np.int64)
     part = np.asarray(part, dtype=np.int32)
@@ -316,6 +342,29 @@ def build_partitioned_graph(
     halo_ptr = stack(halo_ptrs, (H,), np.int32, 0)
     halo_mask = stack(lambda p: np.ones(len(halo_by_p[p]), bool), (H,), bool, False)
 
+    # --- ELL-packed local in-edges (destination-major fast path) ----------
+    from repro.kernels.common import ell_pack_numpy
+
+    kl_max = 0
+    if build_ell:
+        for p in range(P):
+            loc = per_p[p]["local"]
+            if loc.any():
+                indeg = np.bincount(per_p[p]["dst_slot"][loc], minlength=Vp)
+                kl_max = max(kl_max, int(indeg.max()))
+    Kl = _round_up(kl_max, ell_pad_slices) if kl_max else 0
+    if Kl > ell_max_slices:
+        Kl = 0
+    ell_idx = np.zeros((P, Vp, Kl), dtype=np.int32)
+    ell_val = np.zeros((P, Vp, Kl), dtype=np.float32)
+    ell_msk = np.zeros((P, Vp, Kl), dtype=bool)
+    if Kl:
+        for p in range(P):
+            loc = per_p[p]["local"]
+            ell_idx[p], ell_val[p], ell_msk[p] = ell_pack_numpy(
+                per_p[p]["src_enc"][loc], per_p[p]["dst_slot"][loc],
+                per_p[p]["w"][loc], Vp, Kl)
+
     return PartitionedGraph(
         vertex_gid=jnp.asarray(vertex_gid), vertex_mask=jnp.asarray(vertex_mask),
         is_boundary=jnp.asarray(is_boundary), out_degree=jnp.asarray(out_deg),
@@ -328,6 +377,8 @@ def build_partitioned_graph(
         export_slot=jnp.asarray(export_slot), export_mask=jnp.asarray(export_mask),
         export_fanout=jnp.asarray(export_fanout),
         halo_ptr=jnp.asarray(halo_ptr), halo_mask=jnp.asarray(halo_mask),
+        ell_idx=jnp.asarray(ell_idx), ell_val=jnp.asarray(ell_val),
+        ell_msk=jnp.asarray(ell_msk),
         n_partitions=P, n_vertices=int(n_vertices), n_edges=int(n_edges),
-        vp=int(Vp), ep=int(Ep), xp=int(X), hp=int(H), gp=int(Gp),
+        vp=int(Vp), ep=int(Ep), xp=int(X), hp=int(H), gp=int(Gp), kl=int(Kl),
     )

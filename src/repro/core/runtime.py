@@ -31,7 +31,8 @@ from repro.core.vertex_program import (Channel, StepInfo, VertexProgram,
                                        combine_segments)
 
 __all__ = ["Counters", "EngineState", "init_state", "exchange", "deliver",
-           "apply_phase", "merge_inbox", "quiescent", "gather_per_partition"]
+           "apply_phase", "merge_inbox", "quiescent", "gather_per_partition",
+           "ell_channels", "flat_ell"]
 
 
 @jax.tree_util.register_dataclass
@@ -181,12 +182,92 @@ def _lex_lt(pa, pb):
     return jnp.logical_or(lt, eq)  # ties keep a
 
 
+def _ell_f32_exact(graph: PartitionedGraph, ch: Channel) -> bool:
+    """Integer payloads ride the kernel as float32, which is only exact up
+    to 2**24 — past that, vertex-id-valued payloads (WCC labels) would be
+    silently rounded, so the channel falls back to the dense path."""
+    (dt, _), = ch.components
+    if not jnp.issubdtype(jnp.dtype(dt), jnp.integer):
+        return True
+    return graph.n_vertices < (1 << 24)
+
+
+def ell_channels(graph: PartitionedGraph, prog: VertexProgram,
+                 out, send) -> list[Channel]:
+    """Channels eligible for kernel-backed local delivery: the graph carries
+    the ELL layout and the channel declares a matching single-component
+    semiring whose ``ell_payload`` hook is implemented (and whose payloads
+    are exactly float32-representable).  The decision is static (per
+    program/channel, not data-dependent)."""
+    if not graph.has_ell:
+        return []
+    return [ch for ch in prog.channels
+            if ch.semiring is not None and len(ch.components) == 1
+            and _ell_f32_exact(graph, ch)
+            and prog.ell_payload(ch, out, send) is not None]
+
+
+def flat_ell(graph: PartitionedGraph, p: int):
+    """ELL tiles flattened to one (P*Vp, Kl) problem: per-partition source
+    slots are offset by p*Vp so a single kernel call covers every
+    partition (sources of local edges index the flattened (P*Vp,) frontier)."""
+    vp, kl = graph.vp, graph.kl
+    offs = (jnp.arange(p, dtype=jnp.int32) * vp)[:, None, None]
+    idx = (graph.ell_idx + offs).reshape(p * vp, kl)
+    val = graph.ell_val.reshape(p * vp, kl)
+    msk = graph.ell_msk.reshape(p * vp, kl)
+    return idx, val, msk
+
+
+def _ell_deliver(graph, prog, chs, es, pending, delivered, collect_metrics):
+    """Kernel-backed local delivery for semiring channels.
+
+    The per-destination combine runs as one `ell_spmv` Pallas call over the
+    flattened (P*Vp, Kl) tiles; the has-message flags (and, when
+    ``collect_metrics``, the paper counters) come from a cheap masked gather
+    of the send flags through the same layout.
+    """
+    from repro.kernels.common import default_interpret
+    from repro.kernels.ell_spmv import ell_spmv
+
+    p = es.send.shape[0]
+    vp, kl = graph.vp, graph.kl
+    idx, val, msk = flat_ell(graph, p)
+    send_tile = jnp.logical_and(
+        es.send.reshape(-1)[idx].reshape(p, vp, kl), graph.ell_msk)
+    has_fresh = jnp.any(send_tile, axis=-1)
+    delivered = jnp.logical_or(delivered, jnp.any(has_fresh, axis=1))
+    interpret = default_interpret()
+
+    net_local = jnp.zeros((), jnp.int32)
+    mem = jnp.zeros((), jnp.int32)
+    for ch in chs:
+        x = prog.ell_payload(ch, es.out, es.send)
+        v = prog.ell_edge_values(ch, val)
+        y = ell_spmv(idx, v, msk.reshape(p * vp, kl),
+                     x.reshape(-1).astype(jnp.float32),
+                     semiring=ch.semiring, interpret=interpret)
+        y = y.reshape(p, vp)
+        dt, ident = ch.components[0]
+        payload = jnp.where(has_fresh, y.astype(dt), jnp.asarray(ident, dt))
+        pending[ch.name] = merge_inbox(ch, pending[ch.name],
+                                       ((payload,), has_fresh))
+        if collect_metrics:
+            # local deliveries: one combine group per messaged destination
+            # (same-partition source), every valid edge an in-memory message
+            net_local += jnp.sum(has_fresh).astype(jnp.int32)
+            mem += jnp.sum(send_tile).astype(jnp.int32)
+    return pending, delivered, net_local, mem
+
+
 def deliver(
     graph: PartitionedGraph,
     prog: VertexProgram,
     es: EngineState,
     edges: str,                  # 'all' | 'local' | 'remote'
     use_halo: bool = True,
+    use_ell: bool = False,
+    collect_metrics: bool = True,
 ) -> tuple[EngineState, jax.Array]:
     """Messages from the last apply travel along ``edges`` into pending.
 
@@ -194,61 +275,85 @@ def deliver(
     remote deliveries count as combined network messages (one per
     (source-partition, destination-vertex) group, i.e. post-``Combine()``),
     local deliveries as in-memory messages.
+
+    ``use_ell`` dispatches semiring-declared channels of a *local* delivery
+    to the Pallas ELL kernel (see :func:`ell_channels`); other channels —
+    and every channel of 'all'/'remote' deliveries — keep the dense
+    gather/segment path.  ``collect_metrics=False`` skips the paper's
+    message-accounting reductions entirely (the perf path pays nothing; the
+    counters then stay at their previous values).
     """
     vp = graph.vp
 
-    # per-edge source out-state and send flag (local slots then halo slots)
-    def cat(local_leaf, halo_leaf):
-        return jnp.concatenate([local_leaf, halo_leaf], axis=1)
-
-    if use_halo:
-        src_tab = jax.tree.map(cat, es.out, es.halo_out)
-        send_tab = cat(es.send, es.halo_send)
-    else:
-        src_tab = jax.tree.map(
-            lambda l: jnp.concatenate(
-                [l, jnp.zeros((l.shape[0], graph.hp) + l.shape[2:], l.dtype)], axis=1),
-            es.out)
-        send_tab = cat(es.send, jnp.zeros((graph.n_partitions, graph.hp), bool))
-
-    out_src = jax.tree.map(lambda l: gather_per_partition(l, graph.edge_src), src_tab)
-    send_e = gather_per_partition(send_tab, graph.edge_src)
-
-    if edges == "all":
-        sel = graph.edge_mask
-    elif edges == "local":
-        sel = jnp.logical_and(graph.edge_mask, graph.edge_local)
-    elif edges == "remote":
-        sel = jnp.logical_and(graph.edge_mask, jnp.logical_not(graph.edge_local))
-    else:  # pragma: no cover
-        raise ValueError(edges)
-    base_valid = jnp.logical_and(sel, send_e)
+    kernel_chs = ell_channels(graph, prog, es.out, es.send) \
+        if (use_ell and edges == "local") else []
+    dense_chs = [ch for ch in prog.channels if ch not in kernel_chs]
 
     pending = dict(es.pending)
-    delivered = jnp.zeros((graph.n_partitions,), bool)
+    delivered = jnp.zeros((es.send.shape[0],), bool)
     net = jnp.zeros((), jnp.int32)
     net_local = jnp.zeros((), jnp.int32)
     mem = jnp.zeros((), jnp.int32)
-    for ch in prog.channels:
-        payloads, valid = prog.emit(
-            ch, out_src, graph.edge_w, graph.edge_src_gid, graph.edge_dst_gid)
-        valid = jnp.logical_and(valid, base_valid)
-        fresh = jax.vmap(
-            lambda pl, v, d: combine_segments(ch, pl, v, d, vp)
-        )(payloads, valid, graph.edge_dst)
-        pending[ch.name] = merge_inbox(ch, pending[ch.name], fresh)
-        delivered = jnp.logical_or(delivered, jnp.any(valid, axis=1))
-        # --- paper metrics -------------------------------------------------
-        grp_sent = jax.vmap(
-            lambda v, g: jax.ops.segment_max(v.astype(jnp.int32), g,
-                                             num_segments=graph.gp)
-        )(valid, graph.edge_group) > 0
-        grp_sent = jnp.logical_and(grp_sent, graph.group_mask)
-        net += jnp.sum(jnp.logical_and(grp_sent, graph.group_remote)).astype(jnp.int32)
-        net_local += jnp.sum(
-            jnp.logical_and(grp_sent, jnp.logical_not(graph.group_remote))
-        ).astype(jnp.int32)
-        mem += jnp.sum(jnp.logical_and(valid, graph.edge_local)).astype(jnp.int32)
+
+    if kernel_chs:
+        pending, delivered, nl, mm = _ell_deliver(
+            graph, prog, kernel_chs, es, pending, delivered, collect_metrics)
+        net_local += nl
+        mem += mm
+
+    if dense_chs:
+        # per-edge source out-state and send flag (local then halo slots)
+        def cat(local_leaf, halo_leaf):
+            return jnp.concatenate([local_leaf, halo_leaf], axis=1)
+
+        if use_halo:
+            src_tab = jax.tree.map(cat, es.out, es.halo_out)
+            send_tab = cat(es.send, es.halo_send)
+        else:
+            src_tab = jax.tree.map(
+                lambda l: jnp.concatenate(
+                    [l, jnp.zeros((l.shape[0], graph.hp) + l.shape[2:], l.dtype)],
+                    axis=1),
+                es.out)
+            send_tab = cat(es.send, jnp.zeros((es.send.shape[0], graph.hp), bool))
+
+        out_src = jax.tree.map(
+            lambda l: gather_per_partition(l, graph.edge_src), src_tab)
+        send_e = gather_per_partition(send_tab, graph.edge_src)
+
+        if edges == "all":
+            sel = graph.edge_mask
+        elif edges == "local":
+            sel = jnp.logical_and(graph.edge_mask, graph.edge_local)
+        elif edges == "remote":
+            sel = jnp.logical_and(graph.edge_mask,
+                                  jnp.logical_not(graph.edge_local))
+        else:  # pragma: no cover
+            raise ValueError(edges)
+        base_valid = jnp.logical_and(sel, send_e)
+
+        for ch in dense_chs:
+            payloads, valid = prog.emit(
+                ch, out_src, graph.edge_w, graph.edge_src_gid, graph.edge_dst_gid)
+            valid = jnp.logical_and(valid, base_valid)
+            fresh = jax.vmap(
+                lambda pl, v, d: combine_segments(ch, pl, v, d, vp)
+            )(payloads, valid, graph.edge_dst)
+            pending[ch.name] = merge_inbox(ch, pending[ch.name], fresh)
+            delivered = jnp.logical_or(delivered, jnp.any(valid, axis=1))
+            if not collect_metrics:
+                continue
+            # --- paper metrics ---------------------------------------------
+            grp_sent = jax.vmap(
+                lambda v, g: jax.ops.segment_max(v.astype(jnp.int32), g,
+                                                 num_segments=graph.gp)
+            )(valid, graph.edge_group) > 0
+            grp_sent = jnp.logical_and(grp_sent, graph.group_mask)
+            net += jnp.sum(jnp.logical_and(grp_sent, graph.group_remote)).astype(jnp.int32)
+            net_local += jnp.sum(
+                jnp.logical_and(grp_sent, jnp.logical_not(graph.group_remote))
+            ).astype(jnp.int32)
+            mem += jnp.sum(jnp.logical_and(valid, graph.edge_local)).astype(jnp.int32)
 
     c = es.counters
     counters = dataclasses.replace(

@@ -44,11 +44,22 @@ class Channel:
       "pick one random request" style combiners (bipartite matching) are
       expressed without int64 packing.
     components: per-payload-component (dtype, identity) pairs.
+    semiring: optional kernel declaration, one of the `ell_spmv` semirings
+      ('add_mul' | 'min_add' | 'max_add' | 'min_mul') or None.  Declaring a
+      semiring states that this channel's per-edge message factors as
+      ``x[src] ⊗ edge_val`` with an always-valid emit, where ``x`` comes
+      from :meth:`VertexProgram.ell_payload` (neutralized to the ⊕/⊗
+      identity on non-sending sources).  `runtime.deliver` then dispatches
+      local-phase delivery for the channel to the Pallas ELL kernel;
+      channels without a semiring (or whose ``ell_payload`` returns None)
+      transparently keep the dense gather/segment path.  Only
+      single-component channels are eligible.
     """
 
     name: str
     combiner: str
     components: Sequence[tuple[Any, Any]]
+    semiring: str | None = None
 
     def identity_like(self, shape: tuple[int, ...]) -> tuple[jax.Array, ...]:
         return tuple(jnp.full(shape, ident, dtype=dt) for dt, ident in self.components)
@@ -70,6 +81,10 @@ class VertexProgram:
     # whether boundary vertices participate in local phases (paper §4.2 —
     # safe for incremental computations; accelerates convergence).
     boundary_participates: bool = True
+    # name of a fully-fused local-phase kernel ('pr_step') or None.  Setting
+    # it asserts the program satisfies that kernel's invariants — see
+    # engine_hybrid._fused_pr_local_phase for the 'pr_step' contract.
+    fused_kernel: str | None = None
 
     # -- hooks ------------------------------------------------------------
     def init(self, gid, vmask, vdata):
@@ -95,6 +110,23 @@ class VertexProgram:
         don't care (the send flag gates); accumulative (sum) programs override
         with zeros so deltas re-accumulate from scratch."""
         return out
+
+    def ell_payload(self, ch: Channel, out, send):
+        """Per-vertex kernel operand ``x`` (P, Vp) for a semiring channel.
+
+        Must satisfy: for every edge (s -> d) with weight w, the channel's
+        emitted message equals ``x[s] ⊗ edge_val`` under ``ch.semiring``,
+        and ``x`` is the ⊕-annihilating value where ``~send`` (0 for
+        add_mul, +inf for min_*, -inf for max_add) so non-senders contribute
+        the combine identity.  Return None to force the dense path (the
+        default).  Integer payloads must fit float32 exactly (< 2**24)."""
+        return None
+
+    def ell_edge_values(self, ch: Channel, val):
+        """Edge-value operand for the ELL kernel — the packed edge weights
+        by default; override when the message does not use the weight
+        (e.g. min-label propagation passes zeros through min_add)."""
+        return val
 
     def global_only_active(self, state, vdata):
         """Optional (P, Vp) mask of vertices whose self-activity only needs

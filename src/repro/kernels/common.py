@@ -1,0 +1,80 @@
+"""Shared ELL kernel plumbing: blocking/grid computation, the
+accumulate-across-K output pattern, backend-dependent interpret default, and
+the vectorized destination-major ELL packer.
+
+Both `ell_spmv` and `pr_step` tile a (R, K) edge array with grid
+(R/Bm, K/Bk) and revisit the same (Bm,) output block along the K grid axis,
+initializing on the first K step and combining on the rest — the standard TPU
+revisiting-output-block accumulation.  That boilerplate lives here once.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.experimental import pallas as pl
+
+__all__ = ["ell_blocking", "accumulate_k", "default_interpret",
+           "ell_pack_numpy"]
+
+
+def ell_blocking(r: int, kk: int, block_rows: int, block_slices: int):
+    """Clamp the requested block shape to the array and derive the grid.
+
+    Returns (bm, bk, n_kblocks, grid) for a (R, K) ELL tile iterated as
+    grid = (R/Bm, K/Bk).
+    """
+    bm = min(block_rows, r)
+    bk = min(block_slices, kk)
+    nkb = pl.cdiv(kk, bk)
+    return bm, bk, nkb, (pl.cdiv(r, bm), nkb)
+
+
+def accumulate_k(acc_ref, partial, combine):
+    """Accumulate ``partial`` into ``acc_ref`` across the K grid axis
+    (axis 1): initialize on the first K step, combine on subsequent ones."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _acc():
+        acc_ref[...] = combine(acc_ref[...], partial)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run the Mosaic lowering on TPU and interpret mode
+    everywhere else (this CPU container)."""
+    return jax.default_backend() != "tpu"
+
+
+def ell_pack_numpy(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                   n_rows: int, k_slices: int):
+    """Vectorized destination-major ELL pack (host-side, numpy).
+
+    Slot k of row d holds the k-th edge of destination d in stable
+    dst-sorted input order — identical layout to a per-edge scatter loop,
+    but O(E) vectorized: after the stable sort by destination the slot of
+    each edge is its rank within its destination run (arange minus the run's
+    first index via searchsorted on the sorted keys).
+
+    Returns (idx (n_rows, k_slices) int32, val float32, msk bool).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    w = np.asarray(w, dtype=np.float32)
+    idx = np.zeros((n_rows, k_slices), dtype=np.int32)
+    val = np.zeros((n_rows, k_slices), dtype=np.float32)
+    msk = np.zeros((n_rows, k_slices), dtype=bool)
+    if len(dst) == 0:
+        return idx, val, msk
+    order = np.argsort(dst, kind="stable")
+    src_s, dst_s, w_s = src[order], dst[order], w[order]
+    slot = np.arange(len(dst_s)) - np.searchsorted(dst_s, dst_s, side="left")
+    idx[dst_s, slot] = src_s
+    val[dst_s, slot] = w_s
+    msk[dst_s, slot] = True
+    return idx, val, msk

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import accumulate_k, ell_blocking
+
 SEMIRINGS = {
     "add_mul": (jnp.add, jnp.multiply, 0.0),
     "min_add": (jnp.minimum, jnp.add, jnp.inf),
@@ -43,7 +45,6 @@ SEMIRINGS = {
 
 def _kernel(idx_ref, val_ref, msk_ref, x_ref, y_ref, *, semiring: str):
     combine, times, ident = SEMIRINGS[semiring]
-    k = pl.program_id(1)
 
     idx = idx_ref[...]                      # (Bm, Bk) int32
     val = val_ref[...]                      # (Bm, Bk)
@@ -58,13 +59,7 @@ def _kernel(idx_ref, val_ref, msk_ref, x_ref, y_ref, *, semiring: str):
     for j in range(1, prod.shape[1]):       # slice-axis tree would also do;
         partial = combine(partial, prod[:, j])   # XLA re-associates on VPU
 
-    @pl.when(k == 0)
-    def _init():
-        y_ref[...] = partial
-
-    @pl.when(k > 0)
-    def _acc():
-        y_ref[...] = combine(y_ref[...], partial)
+    accumulate_k(y_ref, partial, combine)
 
 
 def ell_spmv_pallas(
@@ -80,9 +75,7 @@ def ell_spmv_pallas(
 ) -> jax.Array:
     """y = ⊕_k val ⊗ x[idx] per row.  Returns (R,) in x.dtype."""
     r, kk = idx.shape
-    bm = min(block_rows, r)
-    bk = min(block_slices, kk)
-    grid = (pl.cdiv(r, bm), pl.cdiv(kk, bk))
+    bm, bk, _, grid = ell_blocking(r, kk, block_rows, block_slices)
 
     return pl.pallas_call(
         functools.partial(_kernel, semiring=semiring),

@@ -9,6 +9,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import ell_pack_numpy
 from repro.kernels.ell_spmv.ell_spmv import ell_spmv_pallas
 
 
@@ -39,21 +40,9 @@ def to_ell(edges: np.ndarray, n_rows: int,
     edges = np.asarray(edges)
     if weights is None:
         weights = np.ones(len(edges), dtype=np.float32)
-    dst = edges[:, 1]
-    order = np.argsort(dst, kind="stable")
-    src_s, dst_s, w_s = edges[order, 0], dst[order], weights[order]
-    indeg = np.bincount(dst_s, minlength=n_rows)
+    indeg = np.bincount(edges[:, 1], minlength=n_rows)
     kmax = int(indeg.max()) if len(indeg) else 1
     K = max(pad_slices, ((kmax + pad_slices - 1) // pad_slices) * pad_slices)
     R = ((n_rows + pad_rows - 1) // pad_rows) * pad_rows
-    idx = np.zeros((R, K), dtype=np.int32)
-    val = np.zeros((R, K), dtype=np.float32)
-    msk = np.zeros((R, K), dtype=bool)
-    slot = np.zeros(n_rows, dtype=np.int64)
-    for s, d, w in zip(src_s, dst_s, w_s):
-        k = slot[d]
-        idx[d, k] = s
-        val[d, k] = w
-        msk[d, k] = True
-        slot[d] += 1
+    idx, val, msk = ell_pack_numpy(edges[:, 0], edges[:, 1], weights, R, K)
     return jnp.asarray(idx), jnp.asarray(val), jnp.asarray(msk)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import accumulate_k, ell_blocking
+
 
 def _kernel(idx_ref, val_ref, msk_ref, delta_ref, send_ref, rank_ref,
             acc_ref, rank_out_ref, send_out_ref, *, damping: float,
@@ -39,13 +41,7 @@ def _kernel(idx_ref, val_ref, msk_ref, delta_ref, send_ref, rank_ref,
     contrib = jnp.where(msk, damping * val * contrib, 0.0)
     partial = jnp.sum(contrib, axis=1)
 
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = partial
-
-    @pl.when(k > 0)
-    def _acc():
-        acc_ref[...] = acc_ref[...] + partial
+    accumulate_k(acc_ref, partial, jnp.add)
 
     @pl.when(k == n_kblocks - 1)
     def _epilogue():
@@ -60,10 +56,7 @@ def fused_pr_step_pallas(idx, val, msk, delta, send, rank, *,
                          interpret: bool = True):
     """-> (rank', delta_in, send')."""
     r, kk = idx.shape
-    bm = min(block_rows, r)
-    bk = min(block_slices, kk)
-    nkb = pl.cdiv(kk, bk)
-    grid = (pl.cdiv(r, bm), nkb)
+    bm, bk, nkb, grid = ell_blocking(r, kk, block_rows, block_slices)
     n = delta.shape[0]
 
     acc, rank_out, send_out = pl.pallas_call(

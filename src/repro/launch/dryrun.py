@@ -24,7 +24,7 @@ import traceback
 import jax
 
 from repro.configs.base import SHAPES, get_config
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, set_mesh
 from repro.launch.specs import build_cell, runnable
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
@@ -38,7 +38,7 @@ ARCHS = [
 
 def _compile_once(cfg, shape, mesh, multi_pod, microbatches: int = 1):
     cell = build_cell(cfg, shape, mesh, multi_pod, microbatches=microbatches)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
         lowered = jitted.lower(*cell.args)
         compiled = lowered.compile()
@@ -233,7 +233,7 @@ def run_graphhp_cell(multi_pod: bool, out_dir: str, smoke: bool = False,
                           shard0_specs(graph, axes))
         ess = jax.tree.map(lambda s: NamedSharding(mesh, s),
                            _es_specs(es, axes))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             jitted = jax.jit(lambda g, e: step(g, e),
                              in_shardings=(gs, ess))
             lowered = jitted.lower(graph, es)
@@ -298,7 +298,7 @@ def run_sync_cell(arch: str, out_dir: str, compress: bool = True,
                               is_leaf=lambda x: isinstance(x, P))
         fn = functools.partial(global_sync, compress=compress,
                                gathered_specs=gspecs)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             compiled = jax.jit(fn, in_shardings=(
                 named(pp_specs, mesh), named(outer_specs, mesh))
             ).lower(pp_shapes, outer_shapes).compile()

@@ -27,6 +27,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def set_mesh(mesh):
+    """``jax.set_mesh`` context manager across jax versions.
+
+    Older releases have no public ambient-mesh context (the private
+    ``jax._src.mesh.set_mesh`` switches on sharding-in-types and breaks
+    plain ops there), so this degrades to a no-op — every call site also
+    passes the mesh explicitly (shard_map / NamedSharding), which is what
+    actually places the computation."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    import contextlib
+    return contextlib.nullcontext(mesh)
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many (CPU) devices exist — for tests."""
     n = len(jax.devices())

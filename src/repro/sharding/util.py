@@ -74,8 +74,11 @@ def maybe_constrain(x, *parts):
     gather/sort/scatter stop propagation, and without a constraint
     downstream of them XLA happily replicates 100-GB activations.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    mesh = get_mesh() if get_mesh is not None else None
+    # older jax has no public ambient-mesh query (or returns a sentinel
+    # without axis_names): skip the constraint — it is only a GSPMD hint
+    if mesh is None or not getattr(mesh, "axis_names", ()):
         return x
     out = []
     for i, axis in enumerate(parts):

@@ -35,6 +35,7 @@ def test_distributed_hybrid_engine_matches_host():
     run_sub("""
     import numpy as np
     import jax, jax.numpy as jnp
+    from repro.launch.mesh import set_mesh
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
     from repro.core import build_partitioned_graph, bfs_partition, run_hybrid
     from repro.core.apps import SSSP
@@ -61,7 +62,7 @@ def test_distributed_hybrid_engine_matches_host():
     ess = jax.tree.map(lambda s: NamedSharding(mesh, s), _es_specs(es, axes))
     graph_d = jax.device_put(graph, gs)
     es_d = jax.device_put(es, ess)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(step, in_shardings=(gs, ess))
         iters = 0
         while not bool(quiescent(prog, es_d)) and iters < 500:
@@ -80,6 +81,7 @@ def test_lm_cell_runs_on_mesh():
     run_sub("""
     import numpy as np
     import jax, jax.numpy as jnp
+    from repro.launch.mesh import set_mesh
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import get_config
     from repro.models.registry import get_model, param_shapes
@@ -101,7 +103,7 @@ def test_lm_cell_runs_on_mesh():
     from repro.optim.adamw import AdamWState
     ospecs = AdamWState(mu=pspecs, nu=pspecs, step=P())
     step_fn = make_train_step(cfg, api, peak_lr=1e-3)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = jax.device_put(params, named(pspecs, mesh))
         opt = jax.device_put(opt, named(ospecs, mesh))
         batch = jax.device_put(batch, named(bspecs, mesh))
@@ -120,6 +122,7 @@ def test_decode_cell_seq_sharded_cache():
     run_sub("""
     import numpy as np
     import jax, jax.numpy as jnp
+    from repro.launch.mesh import set_mesh
     from repro.configs import get_config
     from repro.models.registry import get_model
     from repro.sharding.rules import cache_specs
@@ -140,7 +143,7 @@ def test_decode_cell_seq_sharded_cache():
     # sequence-sharded cache on the mesh
     cache = api.init_cache(cfg, 2, 32, jnp.float32)
     cspecs = sanitize_specs(cache_specs(cache), cache, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         cache = jax.device_put(cache, named(cspecs, mesh))
         logits, cache = jax.jit(lambda p, b, c: api.prefill(p, b, c, cfg))(
             params, {'tokens': tokens}, cache)
@@ -158,6 +161,7 @@ def test_hybrid_sync_on_pod_mesh():
     run_sub("""
     import numpy as np
     import jax, jax.numpy as jnp
+    from repro.launch.mesh import set_mesh
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import get_config
     from repro.core.hybrid_sync import (global_sync, inner_steps, outer_init,
@@ -183,7 +187,7 @@ def test_hybrid_sync_on_pod_mesh():
     batch = {'tokens': jnp.asarray(rng.randint(0, cfg.vocab, (2, 4, 32), dtype=np.int32)),
              'labels': jnp.asarray(rng.randint(0, cfg.vocab, (2, 4, 32), dtype=np.int32))}
     outer = outer_init(params, n_pods)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         pp = jax.device_put(pp, named(pspecs, mesh))
         inner = jax.jit(lambda p, o, b, s: inner_steps(step_fn, p, o, b, s))
         for s in range(2):

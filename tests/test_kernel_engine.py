@@ -1,0 +1,208 @@
+"""Kernel-backed delivery parity: `use_ell=True` routes local-phase message
+combination through the Pallas ELL kernels (and the whole PageRank local
+phase through the fused `pr_step` kernel); every app on every engine must
+reach the same fixed point as the dense gather/segment path — bit-for-bit
+for min/lexmin combiners, to float-reassociation tolerance for 'sum' — with
+identical iteration counts and paper counters."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (bfs_partition, build_partitioned_graph,
+                        hash_partition, run_am, run_bsp, run_hybrid)
+from repro.core.apps import SSSP, WCC, BipartiteMatching, IncrementalPageRank
+from repro.core.apps.pagerank import pagerank_edge_weights
+from repro.core.runtime import ell_channels
+from repro.data.graphs import bipartite_graph, grid_graph, rmat_graph, symmetrize
+
+RUNNERS = {"bsp": run_bsp, "am": run_am, "hybrid": run_hybrid}
+ENGINES = ["bsp", "am", "hybrid"]
+
+
+def unpack(graph, es, field):
+    gid = np.asarray(graph.vertex_gid).ravel()
+    val = np.asarray(es.state[field]).reshape(gid.shape[0], -1).squeeze(-1)
+    mask = gid >= 0
+    out = np.zeros(graph.n_vertices, dtype=val.dtype)
+    out[gid[mask]] = val[mask]
+    return out
+
+
+def assert_counters_equal(a, b):
+    for f in ("iterations", "net_messages", "net_local_messages",
+              "mem_messages"):
+        assert int(getattr(a.counters, f)) == int(getattr(b.counters, f)), f
+    np.testing.assert_array_equal(np.asarray(a.counters.pseudo_supersteps),
+                                  np.asarray(b.counters.pseudo_supersteps))
+
+
+def run_pair(engine, graph, make_prog, vdata=None, **kw):
+    es_d, it_d = RUNNERS[engine](graph, make_prog(), vdata=vdata,
+                                 use_ell=False, **kw)
+    es_k, it_k = RUNNERS[engine](graph, make_prog(), vdata=vdata,
+                                 use_ell=True, **kw)
+    assert it_d == it_k, (it_d, it_k)
+    return es_d, es_k
+
+
+@pytest.fixture(scope="module")
+def road():
+    edges, w, n = grid_graph(6, 60, seed=3)
+    part = bfs_partition(edges, n, 6, seed=1)
+    return build_partitioned_graph(edges, n, part, weights=w), n
+
+
+@pytest.fixture(scope="module")
+def web():
+    edges, n = rmat_graph(300, avg_degree=6, seed=7)
+    part = hash_partition(n, 6, seed=2)
+    w = pagerank_edge_weights(edges, n)
+    return build_partitioned_graph(edges, n, part, weights=w), n
+
+
+def test_graph_carries_ell_layout(road):
+    graph, _ = road
+    assert graph.has_ell and graph.kl > 0
+    assert graph.ell_idx.shape == (graph.n_partitions, graph.vp, graph.kl)
+    # ELL slots reproduce exactly the local in-edges of the dense arrays
+    n_local = int(jnp.sum(jnp.logical_and(graph.edge_mask, graph.edge_local)))
+    assert int(jnp.sum(graph.ell_msk)) == n_local
+
+
+def test_semiring_channels_are_eligible(road):
+    graph, _ = road
+    prog = SSSP(source=0)
+    out = {"dist": jnp.zeros((graph.n_partitions, graph.vp))}
+    send = jnp.zeros((graph.n_partitions, graph.vp), bool)
+    assert [c.name for c in ell_channels(graph, prog, out, send)] == ["dist"]
+    # bipartite matching declares no semirings -> everything falls back
+    assert ell_channels(graph, BipartiteMatching(), {}, send) == []
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_sssp_parity(road, engine):
+    graph, _ = road
+    es_d, es_k = run_pair(engine, graph, lambda: SSSP(source=0))
+    np.testing.assert_array_equal(unpack(graph, es_d, "dist"),
+                                  unpack(graph, es_k, "dist"))
+    assert_counters_equal(es_d, es_k)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_wcc_parity(engine):
+    rng = np.random.RandomState(0)
+    edges = symmetrize(rng.randint(0, 90, size=(400, 2)))
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    part = hash_partition(90, 5, seed=3)
+    graph = build_partitioned_graph(edges, 90, part)
+    es_d, es_k = run_pair(engine, graph, WCC)
+    np.testing.assert_array_equal(unpack(graph, es_d, "label"),
+                                  unpack(graph, es_k, "label"))
+    assert_counters_equal(es_d, es_k)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_pagerank_parity(web, engine):
+    """'sum' channels reassociate float adds (ELL reduces along slices,
+    segment-sum along edges) so ranks match to tolerance; the integer
+    counters and iteration counts must still agree exactly."""
+    graph, _ = web
+    es_d, es_k = run_pair(engine, graph,
+                          lambda: IncrementalPageRank(tolerance=1e-4))
+    np.testing.assert_allclose(unpack(graph, es_d, "rank"),
+                               unpack(graph, es_k, "rank"),
+                               rtol=1e-5, atol=1e-6)
+    assert_counters_equal(es_d, es_k)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_bipartite_matching_fallback_parity(engine):
+    """No BM channel is semiring-expressible (lexmin handshake, targeted
+    grants) — use_ell must transparently keep the dense path bit-for-bit."""
+    edges, n_left, n = bipartite_graph(50, 40, avg_degree=3, seed=11)
+    part = hash_partition(n, 5, seed=4)
+    graph = build_partitioned_graph(edges, n, part)
+    vdata = {"is_left": graph.vertex_gid < n_left, "degree": graph.out_degree}
+    es_d, es_k = run_pair(engine, graph, lambda: BipartiteMatching(seed=1),
+                          vdata=vdata, max_iters=500)
+    np.testing.assert_array_equal(unpack(graph, es_d, "matched"),
+                                  unpack(graph, es_k, "matched"))
+    assert_counters_equal(es_d, es_k)
+
+
+def test_hybrid_fused_pr_uses_kernel_and_matches(web):
+    """The fused path is actually engaged for PageRank on the hybrid engine
+    (fused_kernel declared + ELL present) and collect_metrics=False leaves
+    the message counters untouched while converging to the same ranks."""
+    from repro.core.engine_hybrid import _use_fused_pr
+    graph, _ = web
+    prog = IncrementalPageRank(tolerance=1e-4)
+    assert _use_fused_pr(graph, prog, use_ell=True, max_local_steps=10)
+    assert not _use_fused_pr(graph, prog, use_ell=False, max_local_steps=10)
+
+    es_ref, it_ref = run_hybrid(graph, IncrementalPageRank(tolerance=1e-4))
+    es_perf, it_perf = run_hybrid(graph, IncrementalPageRank(tolerance=1e-4),
+                                  use_ell=True, collect_metrics=False)
+    assert it_ref == it_perf
+    np.testing.assert_allclose(unpack(graph, es_ref, "rank"),
+                               unpack(graph, es_perf, "rank"),
+                               rtol=1e-5, atol=1e-6)
+    assert int(es_perf.counters.net_messages) == 0
+    assert int(es_perf.counters.mem_messages) == 0
+    assert int(es_ref.counters.mem_messages) > 0
+
+
+def test_no_ell_layout_falls_back(road):
+    """A graph built without the ELL layout keeps use_ell runs on the dense
+    path (kl == 0 -> no eligible channels), same results."""
+    edges, w, n = grid_graph(4, 30, seed=5)
+    part = bfs_partition(edges, n, 4, seed=1)
+    g = build_partitioned_graph(edges, n, part, weights=w, build_ell=False)
+    assert not g.has_ell
+    es_d, it_d = run_hybrid(g, SSSP(source=0))
+    es_k, it_k = run_hybrid(g, SSSP(source=0), use_ell=True)
+    assert it_d == it_k
+    np.testing.assert_array_equal(unpack(g, es_d, "dist"),
+                                  unpack(g, es_k, "dist"))
+
+
+def test_device_loop_matches_host_loop(road):
+    graph, _ = road
+    es_h, it_h = run_hybrid(graph, SSSP(source=0), device_loop=False)
+    es_d, it_d = run_hybrid(graph, SSSP(source=0), device_loop=True)
+    assert it_h == it_d
+    np.testing.assert_array_equal(np.asarray(es_h.state["dist"]),
+                                  np.asarray(es_d.state["dist"]))
+    assert_counters_equal(es_h, es_d)
+
+
+def test_fused_pr_cutoff_parity(web):
+    """A max_local_steps cutoff exits the local phase with the final
+    delivery still pending; the fused kernel has already applied it, so the
+    engine must roll the apply back — otherwise the next iteration's apply
+    double-counts the deltas and ranks diverge from the dense path."""
+    graph, _ = web
+    for steps in (1, 3):
+        es_d, it_d = run_hybrid(graph, IncrementalPageRank(tolerance=1e-4),
+                                max_local_steps=steps)
+        es_k, it_k = run_hybrid(graph, IncrementalPageRank(tolerance=1e-4),
+                                max_local_steps=steps, use_ell=True)
+        assert it_d == it_k, (steps, it_d, it_k)
+        np.testing.assert_allclose(unpack(graph, es_d, "rank"),
+                                   unpack(graph, es_k, "rank"),
+                                   rtol=1e-5, atol=1e-6)
+        assert_counters_equal(es_d, es_k)
+
+
+def test_int_semiring_falls_back_past_f32_exact(road):
+    """Integer payloads (WCC labels) ride the kernel as float32; a graph
+    with >= 2**24 vertices would round labels, so eligibility must drop."""
+    import dataclasses
+    graph, _ = road
+    out = {"label": jnp.zeros((graph.n_partitions, graph.vp), jnp.int32)}
+    send = jnp.zeros((graph.n_partitions, graph.vp), bool)
+    assert [c.name for c in ell_channels(graph, WCC(), out, send)] == ["label"]
+    big = dataclasses.replace(graph, n_vertices=1 << 24)
+    assert ell_channels(big, WCC(), out, send) == []

@@ -3,6 +3,9 @@ against the pure-jnp oracles (interpret mode executes kernel bodies on CPU)."""
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -11,7 +11,13 @@
   * int8 error-feedback quantization error is bounded by scale/2.
 """
 
+import importlib.util
+
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax
@@ -194,6 +200,8 @@ def pytrees(draw):
     return tree
 
 
+@pytest.mark.skipif(importlib.util.find_spec("zstandard") is None,
+                    reason="checkpointing needs the optional zstandard package")
 @settings(max_examples=15, deadline=None)
 @given(pytrees())
 def test_checkpoint_roundtrip_property(tree):

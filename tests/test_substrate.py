@@ -2,10 +2,15 @@
 compression, checkpoint round-trip + elastic restore, data pipeline
 determinism, serving engine, fault-tolerance state machines."""
 
+import importlib.util
 import os
 
 import numpy as np
 import pytest
+
+needs_zstd = pytest.mark.skipif(
+    importlib.util.find_spec("zstandard") is None,
+    reason="checkpointing needs the optional zstandard package")
 
 import jax
 import jax.numpy as jnp
@@ -131,6 +136,7 @@ def test_ef_int8_compression_roundtrip_error_feedback():
 # checkpoint
 # ---------------------------------------------------------------------------
 
+@needs_zstd
 def test_checkpoint_roundtrip(tmp_path):
     cfg, api, params = small_setup()
     opt = adamw_init(params)
@@ -142,6 +148,7 @@ def test_checkpoint_roundtrip(tmp_path):
     assert all(jax.tree.leaves(same))
 
 
+@needs_zstd
 def test_checkpoint_detects_corruption(tmp_path):
     state = {"w": jnp.ones((8, 8))}
     save_checkpoint(str(tmp_path / "c2"), state, step=0)
@@ -153,6 +160,7 @@ def test_checkpoint_detects_corruption(tmp_path):
         load_checkpoint(str(tmp_path / "c2"), state)
 
 
+@needs_zstd
 def test_async_checkpointer(tmp_path):
     ck = AsyncCheckpointer(str(tmp_path / "ck"), keep=2)
     state = {"w": jnp.arange(16.0)}
@@ -282,6 +290,7 @@ def test_straggler_redispatch_and_duplicates():
     assert quorum_ready(3, 4) and not quorum_ready(2, 4)
 
 
+@needs_zstd
 def test_elastic_checkpoint_restore_other_mesh(tmp_path):
     """Save on a 1-device layout, restore with explicit shardings (the
     single CPU device here, but through the resharding code path)."""
