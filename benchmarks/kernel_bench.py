@@ -48,6 +48,23 @@ def bench_ell_spmv(rows=4096, k=128, n=4096, seed=0) -> list[str]:
     return rows_out
 
 
+def _time_staged(stages, args, iters=3):
+    """Time a chain of separately-jitted stages, materializing between each —
+    models the unfused engine path's per-stage HBM round trips, which a
+    single jit would fuse away."""
+    def run():
+        out = args
+        for st in stages:
+            out = st(*out)
+            jax.block_until_ready(out)
+        return out
+    run()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        run()
+    return (time.perf_counter() - t0) / iters
+
+
 def bench_fused_pr_step(rows=4096, k=128, seed=1) -> list[str]:
     from repro.kernels.pr_step import fused_pr_step, fused_pr_step_ref
     rng = np.random.RandomState(seed)
@@ -60,12 +77,43 @@ def bench_fused_pr_step(rows=4096, k=128, seed=1) -> list[str]:
     rank = jnp.asarray(rng.uniform(size=(rows,)).astype(np.float32))
 
     t_ref = _time(jax.jit(fused_pr_step_ref), idx, val, msk, delta, send, rank)
-    # unfused engine path: gather -> segment-sum -> add -> compare (4 HBM trips)
-    def unfused(idx, val, msk, delta, send, rank):
-        contrib = jnp.where(send[idx] & msk, 0.85 * val * delta[idx], 0.0)
-        d_in = jnp.sum(contrib, axis=1)
-        return rank + d_in, d_in, d_in > 1e-4
-    t_unf = _time(jax.jit(unfused), idx, val, msk, delta, send, rank)
+    t_pal = _time(fused_pr_step, idx, val, msk, delta, send, rank)
+    # unfused engine path: gather -> segment-sum -> add -> compare, each its
+    # own dispatch (4 HBM trips)
+    t_unf = _time_staged(
+        [jax.jit(lambda idx, val, msk, delta, send, rank:
+                 (jnp.where(send[idx] & msk, 0.85 * val * delta[idx], 0.0),
+                  rank)),
+         jax.jit(lambda contrib, rank: (jnp.sum(contrib, axis=1), rank)),
+         jax.jit(lambda d_in, rank: (rank + d_in, d_in)),
+         jax.jit(lambda rank_n, d_in: (rank_n, d_in, d_in > 1e-4))],
+        (idx, val, msk, delta, send, rank))
     derived = (f"hbm_trips_fused=1;hbm_trips_unfused=4;"
-               f"unfused_us={t_unf*1e6:.0f}")
+               f"unfused_us={t_unf*1e6:.0f};interp_ratio={t_pal/t_ref:.1f}")
     return [f"kernel/fused_pr_step,{t_ref*1e6:.0f},{derived}"]
+
+
+def bench_fused_min_step(rows=4096, k=128, seed=2) -> list[str]:
+    from repro.kernels.min_step import fused_min_step, fused_min_step_ref
+    rng = np.random.RandomState(seed)
+    n = rows
+    idx = jnp.asarray(rng.randint(0, n, size=(rows, k)).astype(np.int32))
+    val = jnp.asarray(rng.uniform(0.1, 2.0, size=(rows, k)).astype(np.float32))
+    msk = jnp.asarray(rng.uniform(size=(rows, k)) < 0.5)
+    x = jnp.asarray(rng.uniform(0, 50, size=(n,)).astype(np.float32))
+    send = jnp.asarray(rng.uniform(size=(n,)) < 0.5)
+
+    t_ref = _time(jax.jit(fused_min_step_ref), idx, val, msk, x, send)
+    t_pal = _time(fused_min_step, idx, val, msk, x, send)
+    # unfused engine path: gather -> segment-min -> min -> compare, each its
+    # own dispatch (4 HBM trips)
+    t_unf = _time_staged(
+        [jax.jit(lambda idx, val, msk, x, send:
+                 (jnp.where(send[idx] & msk, x[idx] + val, jnp.inf), x)),
+         jax.jit(lambda cand, x: (jnp.min(cand, axis=1), x)),
+         jax.jit(lambda d_in, x: (jnp.minimum(x, d_in), d_in, x)),
+         jax.jit(lambda x_n, d_in, x: (x_n, d_in, d_in < x))],
+        (idx, val, msk, x, send))
+    derived = (f"hbm_trips_fused=1;hbm_trips_unfused=4;"
+               f"unfused_us={t_unf*1e6:.0f};interp_ratio={t_pal/t_ref:.1f}")
+    return [f"kernel/fused_min_step,{t_ref*1e6:.0f},{derived}"]

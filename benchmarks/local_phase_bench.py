@@ -1,16 +1,26 @@
-"""Engine-level A/B benchmark of the GraphHP local-phase hot loop.
+"""Engine-level A/B benchmark of the GraphHP delivery hot loops.
 
 The paper's entire speedup comes from iterating the local phase a lot
-(Algorithm 2), so the metric that matters is the cost of ONE pseudo-superstep
-(apply_phase -> deliver(local)).  Three implementations are timed on the
---fast PageRank and SSSP workloads:
+(Algorithm 2), so the metric that matters most is the cost of ONE
+pseudo-superstep (apply_phase -> deliver(local)); the once-per-iteration
+remote delivery (exchange -> deliver(remote) feeding the global phase) is
+the second hot path.  Implementations timed per workload:
 
-  dense   the seed path: gather over every padded edge + combine_segments,
-          per-channel segment-max message accounting inside the loop,
-  ell     kernel-backed delivery: semiring channels dispatch to the Pallas
-          `ell_spmv` ELL kernel, counters hoisted out (collect_metrics=False),
-  fused   (PageRank only) the whole pseudo-superstep through the fused
-          `pr_step` kernel — deliver + apply in one VMEM-resident pass.
+  dense        the seed path: gather over every padded edge +
+               combine_segments, per-channel segment-max message accounting
+               inside the loop,
+  ell          kernel-backed delivery: semiring channels dispatch to the
+               Pallas `ell_spmv` sliced-ELL kernels, counters hoisted out
+               (collect_metrics=False),
+  fused        the whole pseudo-superstep through the fused `pr_step`
+               (PageRank) / `min_step` (SSSP) kernel — deliver + apply in
+               one VMEM-resident pass,
+  remote_*     deliver(edges='remote') over the halo-fed frontier, dense
+               vs. the halo-encoded remote-ELL kernel path.
+
+The pagerank_skew workload adds hub destinations so the sliced-ELL row
+binning engages (2+ degree bins) — the regime that used to bail out to
+dense past ``ell_max_slices``.
 
 Emits BENCH_local_phase.json (repo root by default) so the perf trajectory
 is tracked per-PR, and returns harness CSV rows.
@@ -21,6 +31,7 @@ is tracked per-PR, and returns harness CSV rows.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -46,10 +57,11 @@ def _time_us(fn, *args, warmup=3, iters=20):
 
 
 def _saturated_state(graph, prog, vdata, payload_value):
-    """EngineState with a full frontier: every vertex sent last step and has
-    one pending message — the steady-state shape of a busy local phase."""
-    import dataclasses
+    """EngineState with a full frontier: every vertex sent last step, has
+    one pending message, and the halo table was filled by a real exchange —
+    the steady-state shape of a busy iteration."""
     from repro.core.engine_hybrid import init_hybrid
+    from repro.core.runtime import exchange
 
     es = init_hybrid(graph, prog, vdata)
     vm = graph.vertex_mask
@@ -57,7 +69,9 @@ def _saturated_state(graph, prog, vdata, payload_value):
     for ch in prog.channels:
         (dt, _), = ch.components
         pending[ch.name] = ((jnp.where(vm, payload_value, 0).astype(dt),), vm)
-    return dataclasses.replace(es, send=vm, pending=pending)
+    es = dataclasses.replace(es, send=vm, pending=pending,
+                             export_out=es.out, export_send=vm)
+    return exchange(graph, es)
 
 
 def _pseudo_superstep(graph, prog, vdata, use_ell, collect_metrics):
@@ -75,25 +89,28 @@ def _pseudo_superstep(graph, prog, vdata, use_ell, collect_metrics):
     return jax.jit(step)
 
 
-def _fused_step(graph, prog):
-    """One fused-loop body (mirrors engine_hybrid._fused_pr_local_phase
-    with collect_metrics=False): kernel + has/running/export bookkeeping."""
-    from repro.core.runtime import flat_ell
-    from repro.kernels.common import default_interpret
-    from repro.kernels.pr_step import fused_pr_step
+def _remote_deliver(graph, prog, use_ell, collect_metrics):
+    from repro.core.runtime import deliver
 
-    p, vp, kl = graph.n_partitions, graph.vp, graph.kl
-    idx, val, msk = flat_ell(graph, p)
-    interpret = default_interpret()
+    def step(es):
+        es, _ = deliver(graph, prog, es, edges="remote", use_ell=use_ell,
+                        collect_metrics=collect_metrics)
+        return es
+
+    return jax.jit(step)
+
+
+def _fused_pr_step_fn(graph, prog):
+    """One fused PageRank loop body: the engine's own fused step
+    (`engine_hybrid.fused_step_fn`, the same closure
+    `_fused_pr_local_phase` iterates) + the collect_metrics=False
+    has/running/export bookkeeping."""
+    from repro.core.engine_hybrid import fused_step_fn
+
+    kstep, _, _ = fused_step_fn(graph, prog, "pr_step", graph.n_partitions)
 
     def step(rank, delta, send, eo, esend):
-        rank_n, d_in, send_n = fused_pr_step(
-            idx, val, msk, delta.reshape(-1), send.reshape(-1),
-            rank.reshape(-1), damping=prog.damping, tol=prog.tol,
-            interpret=interpret)
-        rank_n = rank_n.reshape(p, vp)
-        d_in = d_in.reshape(p, vp)
-        send_n = send_n.reshape(p, vp)
+        rank_n, d_in, send_n = kstep(rank, delta, send)
         eo = eo + jnp.where(send_n, d_in, 0.0)
         esend = jnp.logical_or(esend, send_n)
         running = jnp.any(d_in > 0, axis=1)
@@ -102,8 +119,63 @@ def _fused_step(graph, prog):
     return jax.jit(step)
 
 
+def _fused_min_step_fn(graph, prog):
+    """One fused min-semiring loop body: the engine's own fused step + the
+    collect_metrics=False bookkeeping of `_fused_min_local_phase`."""
+    from repro.core.engine_hybrid import fused_step_fn
+
+    kstep, _, _ = fused_step_fn(graph, prog, "min_step", graph.n_partitions)
+
+    def step(x, send, eo, esend):
+        x_n, d_n, send_n = kstep(x, send)
+        eo = jnp.where(send_n, x_n, eo)
+        esend = jnp.logical_or(esend, send_n)
+        running = jnp.any(d_n < jnp.inf, axis=1)
+        return x_n, send_n, eo, esend, running
+
+    return jax.jit(step)
+
+
+def _bench_workload(results, name, graph, prog, payload_value, fused=None):
+    """Dense/ELL/fused local pseudo-superstep + dense/ELL remote delivery."""
+    es = _saturated_state(graph, prog, None, payload_value)
+    rec = {"graph": graph.shape_summary, "kl": graph.kl,
+           "bins": [len(graph.local_ell), len(graph.remote_ell)]}
+
+    dense = _time_us(_pseudo_superstep(graph, prog, None, False, True), es)
+    ell = _time_us(_pseudo_superstep(graph, prog, None, True, False), es)
+    rec.update(dense_us=dense, ell_us=ell, speedup_ell=dense / ell)
+
+    if fused == "pr_step":
+        fstep = _fused_pr_step_fn(graph, prog)
+        rec["fused_us"] = _time_us(
+            fstep, es.state["rank"],
+            jnp.where(graph.vertex_mask, payload_value, 0.0),
+            graph.vertex_mask, jnp.zeros_like(es.state["rank"]),
+            jnp.zeros_like(graph.vertex_mask))
+    elif fused == "min_step":
+        fstep = _fused_min_step_fn(graph, prog)
+        ch_name = prog.channels[0].name
+        rec["fused_us"] = _time_us(
+            fstep, es.state[ch_name].astype(jnp.float32), graph.vertex_mask,
+            es.state[ch_name].astype(jnp.float32),
+            jnp.zeros_like(graph.vertex_mask))
+    if "fused_us" in rec:
+        rec["speedup_fused"] = dense / rec["fused_us"]
+        rec["speedup_fused_vs_ell"] = ell / rec["fused_us"]
+
+    rdense = _time_us(_remote_deliver(graph, prog, False, True), es)
+    rell = _time_us(_remote_deliver(graph, prog, True, False), es)
+    rec.update(remote_dense_us=rdense, remote_ell_us=rell,
+               speedup_remote=rdense / rell)
+
+    results["workloads"][name] = rec
+    return rec
+
+
 def bench_local_phase(out_path: str = DEFAULT_OUT) -> dict:
-    from repro.core import bfs_partition, build_partitioned_graph
+    from repro.core import (bfs_partition, build_partitioned_graph,
+                            hash_partition)
     from repro.core.apps import SSSP, IncrementalPageRank
     from repro.core.apps.pagerank import pagerank_edge_weights
     from repro.data.graphs import grid_graph, rmat_graph
@@ -118,34 +190,31 @@ def bench_local_phase(out_path: str = DEFAULT_OUT) -> dict:
     w = pagerank_edge_weights(edges, n)
     part = bfs_partition(edges, n, 8, seed=1)
     graph = build_partitioned_graph(edges, n, part, weights=w)
-    prog = IncrementalPageRank(tolerance=1e-4)
-    es = _saturated_state(graph, prog, None, 0.01)
-    dense = _time_us(_pseudo_superstep(graph, prog, None, False, True), es)
-    ell = _time_us(_pseudo_superstep(graph, prog, None, True, False), es)
-    fstep = _fused_step(graph, prog)
-    fused = _time_us(
-        fstep, es.state["rank"],
-        jnp.where(graph.vertex_mask, 0.01, 0.0), graph.vertex_mask,
-        jnp.zeros_like(es.state["rank"]), jnp.zeros_like(graph.vertex_mask))
-    results["workloads"]["pagerank_fast"] = {
-        "graph": graph.shape_summary, "kl": graph.kl,
-        "dense_us": dense, "ell_us": ell, "fused_us": fused,
-        "speedup_ell": dense / ell, "speedup_fused": dense / fused,
-    }
+    _bench_workload(results, "pagerank_fast", graph,
+                    IncrementalPageRank(tolerance=1e-4), 0.01,
+                    fused="pr_step")
+
+    # --- PageRank with hub skew: sliced-ELL binning engaged --------------
+    rng = np.random.RandomState(2)
+    hubs = np.stack([rng.randint(0, n, size=4000),
+                     rng.randint(0, 6, size=4000)], axis=1)
+    edges_sk = np.unique(np.concatenate([edges, hubs]), axis=0)
+    edges_sk = edges_sk[edges_sk[:, 0] != edges_sk[:, 1]]
+    w_sk = pagerank_edge_weights(edges_sk, n)
+    part_sk = hash_partition(n, 8, seed=2)
+    graph_sk = build_partitioned_graph(edges_sk, n, part_sk, weights=w_sk,
+                                       ell_base_slices=32)
+    assert len(graph_sk.local_ell) > 1, "skew workload should spill bins"
+    _bench_workload(results, "pagerank_skew", graph_sk,
+                    IncrementalPageRank(tolerance=1e-4), 0.01,
+                    fused="pr_step")
 
     # --- SSSP, the --fast road workload ----------------------------------
     edges, w, n = grid_graph(8, 110, seed=0)
     part = bfs_partition(edges, n, 8, seed=0)
     graph = build_partitioned_graph(edges, n, part, weights=w)
-    prog = SSSP(source=0)
-    es = _saturated_state(graph, prog, None, 1.0)
-    dense = _time_us(_pseudo_superstep(graph, prog, None, False, True), es)
-    ell = _time_us(_pseudo_superstep(graph, prog, None, True, False), es)
-    results["workloads"]["sssp_fast"] = {
-        "graph": graph.shape_summary, "kl": graph.kl,
-        "dense_us": dense, "ell_us": ell,
-        "speedup_ell": dense / ell,
-    }
+    _bench_workload(results, "sssp_fast", graph, SSSP(source=0), 1.0,
+                    fused="min_step")
 
     if out_path:
         with open(out_path, "w") as f:
@@ -156,13 +225,17 @@ def bench_local_phase(out_path: str = DEFAULT_OUT) -> dict:
 def csv_rows(results: dict) -> list[str]:
     rows = []
     for name, r in results["workloads"].items():
-        for variant in ("dense", "ell", "fused"):
+        meta = f"kl={r['kl']};bins={r['bins']};graph={r['graph']}"
+        for variant in ("dense", "ell", "fused", "remote_dense",
+                        "remote_ell"):
             us = r.get(f"{variant}_us")
             if us is None:
                 continue
-            sp = r.get(f"speedup_{variant}", 1.0)
+            sp = {"remote_ell": r.get("speedup_remote", 1.0),
+                  "remote_dense": 1.0}.get(
+                      variant, r.get(f"speedup_{variant}", 1.0))
             rows.append(f"local_phase/{name}/{variant},{us:.0f},"
-                        f"speedup={sp:.2f};kl={r['kl']};graph={r['graph']}")
+                        f"speedup={sp:.2f};{meta}")
     return rows
 
 

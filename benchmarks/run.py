@@ -53,6 +53,7 @@ def main() -> None:
     if want("kernels"):
         rows += kernel_bench.bench_ell_spmv()
         rows += kernel_bench.bench_fused_pr_step()
+        rows += kernel_bench.bench_fused_min_step()
     if want("local_phase"):
         rows += local_phase_bench.csv_rows(local_phase_bench.bench_local_phase())
     if want("roofline"):

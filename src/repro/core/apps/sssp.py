@@ -18,6 +18,10 @@ class SSSP(VertexProgram):
     channels = (Channel("dist", "min", ((jnp.float32, jnp.inf),),
                         semiring="min_add"),)
     boundary_participates = True
+    # the hybrid engine may run the whole local phase through the fused
+    # `min_step` Pallas kernel: single min_add channel, out == state,
+    # relax-on-improve apply, never self-activating, keep-latest export
+    fused_kernel = "min_step"
 
     def __init__(self, source: int):
         self.source = source

@@ -20,6 +20,10 @@ class WCC(VertexProgram):
     channels = (Channel("label", "min", ((jnp.int32, _IMAX),),
                         semiring="min_add"),)
     boundary_participates = True
+    # min-label propagation fuses through `min_step` like SSSP; the engine
+    # gate keeps integer labels off the float32-resident fused loop past
+    # 2**24 vertices (plain per-bin ELL delivery still applies below that)
+    fused_kernel = "min_step"
 
     def init(self, gid, vmask, vdata):
         label = jnp.where(vmask, gid, _IMAX).astype(jnp.int32)

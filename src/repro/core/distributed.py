@@ -41,7 +41,12 @@ def make_dist_hybrid_step(prog: VertexProgram, mesh: Mesh,
     iteration on a mesh where dim 0 of every array is the partition axis.
     ``wire_dtype=jnp.bfloat16`` halves exchange bytes (§Perf);
     ``use_ell``/``collect_metrics`` select the kernel-backed local phase
-    (the ELL tiles shard on dim 0 like every other partition-major array)."""
+    (the ELL tiles shard on dim 0 like every other partition-major array).
+
+    Unlike the single-host engines, ``use_ell`` defaults to False here: the
+    shard_map kernel path is only validated in interpret mode (see
+    test_distributed_hybrid_kernel_path_matches_host); flip the default
+    once it is exercised on real TPU Mosaic."""
 
     def gather_table(x):
         # local (Pb, X, ...) -> global (P, X, ...): the one exchange
@@ -100,10 +105,27 @@ def _es_specs(es: EngineState, axes) -> Any:
 
 def block_graph_shapes(n_partitions: int, vp: int, ep: int, xp: int, hp: int,
                        gp: int | None = None, kl: int = 0) -> PartitionedGraph:
-    """ShapeDtypeStruct stand-in graph (dry-run; no allocation)."""
+    """ShapeDtypeStruct stand-in graph (dry-run; no allocation).  ``kl`` > 0
+    adds a single dense-base ELL bin of that slice width per side."""
+    from repro.core.graph import EllSlice
+
     gp = gp or vp
     f = jax.ShapeDtypeStruct
     i32, f32, b = jnp.int32, jnp.float32, jnp.bool_
+
+    def ell(stride):
+        if kl == 0:
+            return ()
+        return (EllSlice(
+            rows=f((n_partitions, vp), i32),
+            idx=f((n_partitions, vp, kl), i32),
+            val=f((n_partitions, vp, kl), f32),
+            msk=f((n_partitions, vp, kl), b),
+            flat_rows=f((n_partitions * vp,), i32),
+            flat_idx=f((n_partitions * vp, kl), i32),
+            nb=vp, kb=kl, lo=0, dense=True, stride=stride,
+            payload_bound=n_partitions * vp - 1),)
+
     pg = PartitionedGraph(
         vertex_gid=f((n_partitions, vp), i32),
         vertex_mask=f((n_partitions, vp), b),
@@ -124,11 +146,9 @@ def block_graph_shapes(n_partitions: int, vp: int, ep: int, xp: int, hp: int,
         export_fanout=f((n_partitions, xp), i32),
         halo_ptr=f((n_partitions, hp), i32),
         halo_mask=f((n_partitions, hp), b),
-        ell_idx=f((n_partitions, vp, kl), i32),
-        ell_val=f((n_partitions, vp, kl), f32),
-        ell_msk=f((n_partitions, vp, kl), b),
+        local_ell=ell(vp), remote_ell=ell(vp + hp),
         n_partitions=n_partitions, n_vertices=n_partitions * vp,
-        n_edges=n_partitions * ep, vp=vp, ep=ep, xp=xp, hp=hp, gp=gp, kl=kl,
+        n_edges=n_partitions * ep, vp=vp, ep=ep, xp=xp, hp=hp, gp=gp,
     )
     return pg
 

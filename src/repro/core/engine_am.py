@@ -37,7 +37,7 @@ def am_superstep(
     es: EngineState,
     vdata: Any,
     gather_table: Callable | None = None,
-    use_ell: bool = False,
+    use_ell: bool = True,
     collect_metrics: bool = True,
 ) -> EngineState:
     es = exchange(graph, es, gather_table)
@@ -45,10 +45,10 @@ def am_superstep(
         es, export_out=prog.export_identity(es.export_out),
         export_send=jnp.zeros_like(es.export_send))
     if use_ell and ell_channels(graph, prog, es.out, es.send):
-        # split so the local half rides the ELL kernel (groups never mix
-        # local and remote edges, so counters are unchanged); programs with
-        # no kernel-eligible channel keep the single 'all' delivery
-        es, _ = deliver(graph, prog, es, edges="remote",
+        # split so each half rides its ELL layout (groups never mix local
+        # and remote edges, so counters are unchanged); programs with no
+        # kernel-eligible channel keep the single 'all' delivery
+        es, _ = deliver(graph, prog, es, edges="remote", use_ell=True,
                         collect_metrics=collect_metrics)
         es, _ = deliver(graph, prog, es, edges="local", use_ell=True,
                         collect_metrics=collect_metrics)
@@ -83,7 +83,7 @@ def run_am(
     prog: VertexProgram,
     vdata: Any = None,
     max_iters: int = 100_000,
-    use_ell: bool = False,
+    use_ell: bool = True,
     collect_metrics: bool = True,
 ) -> tuple[EngineState, int]:
     step = jax.jit(partial(am_superstep, graph, prog, vdata=vdata,

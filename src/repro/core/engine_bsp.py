@@ -38,20 +38,21 @@ def bsp_superstep(
     es: EngineState,
     vdata: Any,
     gather_table: Callable | None = None,
-    use_ell: bool = False,
+    use_ell: bool = True,
     collect_metrics: bool = True,
 ) -> EngineState:
     """One Hama superstep: exchange -> deliver(all) -> Compute(all).
 
-    With ``use_ell`` the delivery splits into remote + local halves so the
-    local half can dispatch to the Pallas ELL kernel.  Combine groups never
-    mix local and remote edges, so counters are unchanged; float 'sum'
-    inboxes may differ in the last bit (different reduction order).
+    With ``use_ell`` (the default) the delivery splits into remote + local
+    halves so each half can dispatch to its Pallas ELL layout.  Combine
+    groups never mix local and remote edges, so counters are unchanged;
+    float 'sum' inboxes may differ in the last bit (different reduction
+    order).
     """
     es = exchange(graph, es, gather_table)
     es = _reset_export(prog, es)
     if use_ell and ell_channels(graph, prog, es.out, es.send):
-        es, _ = deliver(graph, prog, es, edges="remote",
+        es, _ = deliver(graph, prog, es, edges="remote", use_ell=True,
                         collect_metrics=collect_metrics)
         es, _ = deliver(graph, prog, es, edges="local", use_ell=True,
                         collect_metrics=collect_metrics)
@@ -73,7 +74,7 @@ def run_bsp(
     prog: VertexProgram,
     vdata: Any = None,
     max_iters: int = 100_000,
-    use_ell: bool = False,
+    use_ell: bool = True,
     collect_metrics: bool = True,
 ) -> tuple[EngineState, int]:
     """Host-driven loop: init superstep + supersteps until quiescence."""

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 
 from repro.core.graph import PartitionedGraph
 from repro.core.runtime import (EngineState, _has_any_pending, apply_phase,
-                                deliver, exchange, init_state, quiescent)
+                                deliver, ell_send_accounting, exchange,
+                                init_state, quiescent)
 from repro.core.vertex_program import StepInfo, VertexProgram
 
 __all__ = ["hybrid_iteration", "run_hybrid", "init_hybrid"]
@@ -58,12 +59,96 @@ def _partition_running(graph, prog, es, participate, vdata) -> jax.Array:
     return jnp.any(jnp.logical_and(need, participate), axis=1)
 
 
-def _use_fused_pr(graph: PartitionedGraph, prog: VertexProgram, use_ell: bool,
-                  max_local_steps: int) -> bool:
-    """Static gate for the fully-fused PageRank local phase."""
-    return (use_ell and graph.has_ell and max_local_steps > 0
-            and getattr(prog, "fused_kernel", None) == "pr_step"
-            and len(prog.channels) == 1 and prog.boundary_participates)
+def _fused_local_kernel(graph: PartitionedGraph, prog: VertexProgram,
+                        use_ell: bool, max_local_steps: int) -> str | None:
+    """Static gate for the fully-fused local phase: the kernel name
+    ('pr_step' | 'min_step') when the program declares one and the graph
+    carries a dense-base sliced-ELL layout, else None (generic loop)."""
+    if not (use_ell and graph.has_ell and max_local_steps > 0
+            and len(prog.channels) == 1 and prog.boundary_participates
+            and graph.local_ell[0].dense):
+        return None
+    kern = getattr(prog, "fused_kernel", None)
+    if kern == "min_step":
+        ch = prog.channels[0]
+        if ch.semiring != "min_add":
+            return None
+        # unlike plain ELL delivery (only *messages* ride float32, judged
+        # per bin), the fused loop keeps the whole vertex state in float32 —
+        # integer states need every vertex id exactly representable
+        (dt, _), = ch.components
+        if (jnp.issubdtype(jnp.dtype(dt), jnp.integer)
+                and graph.n_vertices - 1 > (1 << 24)):
+            return None
+    return kern if kern in ("pr_step", "min_step") else None
+
+
+def _spill_extra(graph: PartitionedGraph, prog, ch, slices, views, out_d,
+                 send, p, interpret):
+    """⊕-combined spill-bin contributions (P*Vp,) for a fused kernel's
+    ``extra`` operand — None when the layout is a single dense bin."""
+    if len(slices) == 1:
+        return None
+    from repro.core.runtime import ell_combine_bins
+    from repro.kernels.ell_spmv.ell_spmv import SEMIRINGS
+
+    _, _, ident = SEMIRINGS[ch.semiring]
+    x = prog.ell_payload(ch, out_d, send).reshape(-1).astype(jnp.float32)
+    extra = jnp.full((p * graph.vp,), ident, jnp.float32)
+    return ell_combine_bins(prog, ch, slices[1:], views[1:], x, extra, p,
+                            interpret)
+
+
+def fused_step_fn(graph: PartitionedGraph, prog: VertexProgram, kind: str,
+                  p: int):
+    """The single fused pseudo-superstep over the graph's sliced-ELL layout
+    — the one implementation both the engine local phases and the A/B
+    benchmark run, so they cannot drift apart.
+
+    'pr_step': ``step(rank, delta, send) -> (rank', d_in, send')``;
+    'min_step': ``step(x, send) -> (x', d_in, send')``.  All arrays are
+    (p, Vp); spill bins beyond the dense base feed the kernel's ``extra``
+    operand through :func:`_spill_extra`.
+    """
+    from repro.core.runtime import slice_flat
+    from repro.kernels.common import default_interpret
+
+    ch = prog.channels[0]
+    vp = graph.vp
+    slices = graph.local_ell
+    views = [slice_flat(s, graph, p) for s in slices]
+    _, idx, msk = views[0]
+    interpret = default_interpret()
+
+    if kind == "pr_step":
+        from repro.kernels.pr_step import fused_pr_step
+
+        val = slices[0].val.reshape(p * slices[0].nb, slices[0].kb)
+
+        def step(rank, delta, send):
+            extra = _spill_extra(graph, prog, ch, slices, views,
+                                 {ch.name: delta}, send, p, interpret)
+            r, d, s = fused_pr_step(
+                idx, val, msk, delta.reshape(-1), send.reshape(-1),
+                rank.reshape(-1), extra, damping=prog.damping, tol=prog.tol,
+                interpret=interpret)
+            return r.reshape(p, vp), d.reshape(p, vp), s.reshape(p, vp)
+    elif kind == "min_step":
+        from repro.kernels.min_step import fused_min_step
+
+        val = prog.ell_edge_values(ch, slices[0].val).reshape(
+            p * slices[0].nb, slices[0].kb)
+
+        def step(x, send):
+            extra = _spill_extra(graph, prog, ch, slices, views,
+                                 {ch.name: x}, send, p, interpret)
+            xn, d, s = fused_min_step(
+                idx, val, msk, x.reshape(-1), send.reshape(-1), extra=extra,
+                interpret=interpret)
+            return xn.reshape(p, vp), d.reshape(p, vp), s.reshape(p, vp)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return step, slices, views
 
 
 def _fused_pr_local_phase(
@@ -92,16 +177,11 @@ def _fused_pr_local_phase(
     while-loop iterates the fused kernel; trip count, pseudo-superstep and
     message counters match the generic path exactly.
     """
-    from repro.core.runtime import flat_ell
-    from repro.kernels.common import default_interpret
-    from repro.kernels.pr_step import fused_pr_step
-
     p = es.send.shape[0]
-    vp, kl = graph.vp, graph.kl
-    idx, val, msk = flat_ell(graph, p)
-    interpret = default_interpret()
-    tol, damping = prog.tol, prog.damping
-    name = prog.channels[0].name
+    ch = prog.channels[0]
+    kstep, slices, views = fused_step_fn(graph, prog, "pr_step", p)
+    tol = prog.tol
+    name = ch.name
 
     (p0,), has0 = es.pending[name]
     # bootstrap: apply_1 consumes the inbox (payload is 0 wherever ~has,
@@ -123,21 +203,15 @@ def _fused_pr_local_phase(
         # pre-step apply state, so a max_local_steps cutoff can roll the
         # final fused apply back to generic-path semantics (see below)
         prev = (rank, out_d, eo, esend, send)
-        rank_n, d_in, send_n = fused_pr_step(
-            idx, val, msk, delta.reshape(-1), send.reshape(-1),
-            rank.reshape(-1), damping=damping, tol=tol, interpret=interpret)
-        rank_n = rank_n.reshape(p, vp)
-        d_in = d_in.reshape(p, vp)
-        send_n = send_n.reshape(p, vp)
+        rank_n, d_in, send_n = kstep(rank, delta, send)
         net_local, mem = metrics
         if collect_metrics:
             # exact parity with the dense accounting: has-flags from the
             # send gather, one combined local group per messaged dst
-            send_tile = jnp.logical_and(
-                send.reshape(-1)[idx].reshape(p, vp, kl), graph.ell_msk)
-            has_n = jnp.any(send_tile, axis=-1)
+            has_n, mem_inc = ell_send_accounting(graph, slices, views,
+                                                 send.reshape(-1), p)
             net_local = net_local + jnp.sum(has_n).astype(jnp.int32)
-            mem = mem + jnp.sum(send_tile).astype(jnp.int32)
+            mem = mem + mem_inc
         else:
             has_n = d_in > 0           # positive-contribution invariant
         out_d = jnp.where(has_n, d_in, out_d)
@@ -181,6 +255,110 @@ def _fused_pr_local_phase(
         counters=counters)
 
 
+def _fused_min_local_phase(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    es: EngineState,
+    running0: jax.Array,
+    max_local_steps: int,
+    collect_metrics: bool,
+) -> EngineState:
+    """Local phase fused through the `min_step` Pallas kernel — the
+    min-semiring twin of :func:`_fused_pr_local_phase` serving SSSP and WCC.
+
+    One kernel call performs deliver(pseudo-superstep s) + apply(s+1): the
+    relax chain gather -> segment-min -> min -> compare collapses into a
+    single VMEM-resident pass per step, with the same cutoff-rollback
+    semantics as the PageRank fusion.
+
+    Kernel contract (asserted by ``prog.fused_kernel == 'min_step'``):
+    single single-component 'min' channel with semiring 'min_add' whose
+    state, out and channel share one name and one value (``out == state``),
+    always-valid emit ``x[src] ⊗ edge_val`` (``ell_payload`` /
+    ``ell_edge_values`` define the factorization), apply is
+    ``new = min(state, msg); send = new < state``, never self-activating,
+    keep-latest SourceCombine (the default ``accumulate_export``), boundary
+    vertices participating.  The whole state rides the loop as float32 and
+    is cast back under the vertex mask on exit (the gate in
+    ``_fused_local_kernel`` guarantees integer states stay exact).
+    """
+    ch = prog.channels[0]
+    name = ch.name
+    dt, ident = ch.components[0]
+    p = es.send.shape[0]
+    kstep, slices, views = fused_step_fn(graph, prog, "min_step", p)
+    vmask = graph.vertex_mask
+
+    (m0,), has0 = es.pending[name]
+    x0 = es.state[name].astype(jnp.float32)
+    eo0 = es.export_out[name]
+    # bootstrap: apply_1 consumes the inbox (payload is +inf wherever ~has,
+    # the min identity, so the mins need no explicit compute mask)
+    m0f = jnp.where(has0, m0.astype(jnp.float32), jnp.inf)
+    x1 = jnp.minimum(x0, m0f)
+    send1 = x1 < x0
+    eo_f = jnp.where(send1, x1, eo0.astype(jnp.float32))
+    esend1 = jnp.logical_or(es.export_send, send1)
+    c0 = es.counters
+
+    def cond(carry):
+        _, _, _, _, _, _, running, _, _, k, _ = carry
+        return jnp.logical_and(jnp.any(running), k < max_local_steps)
+
+    def body(carry):
+        (x, d_in, send, has, eo, esend, running, pseudo, metrics, k,
+         _prev) = carry
+        # pre-step apply state for the max_local_steps cutoff rollback
+        prev = (x, eo, esend, send)
+        x_n, d_n, send_n = kstep(x, send)
+        net_local, mem = metrics
+        if collect_metrics:
+            has_n, mem_inc = ell_send_accounting(graph, slices, views,
+                                                 send.reshape(-1), p)
+            net_local = net_local + jnp.sum(has_n).astype(jnp.int32)
+            mem = mem + mem_inc
+        else:
+            has_n = d_n < jnp.inf      # finite-sender invariant
+        eo = jnp.where(send_n, x_n, eo)
+        esend = jnp.logical_or(esend, send_n)
+        running = jnp.any(has_n, axis=1)
+        pseudo = pseudo + running.astype(jnp.int32)
+        return (x_n, d_n, send_n, has_n, eo, esend, running, pseudo,
+                (net_local, mem), k + 1, prev)
+
+    carry0 = (x1, m0f, send1, has0, eo_f, esend1, running0,
+              c0.pseudo_supersteps,
+              (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)),
+              jnp.zeros((), jnp.int32),
+              (x1, eo_f, esend1, send1))
+    (x, d_in, send, has, eo, esend, _, pseudo, (net_local, mem), _,
+     (x_p, eo_p, esend_p, send_p)) = jax.lax.while_loop(cond, body, carry0)
+
+    # max_local_steps cutoff: roll the final fused apply back so the still-
+    # pending delivery is not applied twice (identity at a quiescent exit)
+    cut = jnp.any(has)
+    x = jnp.where(cut, x_p, x)
+    eo = jnp.where(cut, eo_p, eo)
+    esend = jnp.where(cut, esend_p, esend)
+    send = jnp.where(cut, send_p, send)
+
+    # leave the float32 loop: integer states cast back exactly (gate) under
+    # the vertex mask, so padded sentinel slots keep their original bits
+    state = jnp.where(vmask, x.astype(dt), es.state[name])
+    exp_out = jnp.where(vmask, eo.astype(dt), eo0)
+    payload = jnp.where(has, d_in.astype(dt), jnp.asarray(ident, dt))
+
+    counters = dataclasses.replace(
+        c0, pseudo_supersteps=pseudo,
+        net_local_messages=c0.net_local_messages + net_local,
+        mem_messages=c0.mem_messages + mem)
+    return dataclasses.replace(
+        es, state={name: state}, out={name: state}, send=send,
+        pending={name: ((payload,), has)},
+        export_out={name: exp_out}, export_send=esend,
+        counters=counters)
+
+
 def hybrid_iteration(
     graph: PartitionedGraph,
     prog: VertexProgram,
@@ -189,16 +367,17 @@ def hybrid_iteration(
     gather_table: Callable | None = None,
     max_local_steps: int = 100_000,
     wire_dtype=None,
-    use_ell: bool = False,
+    use_ell: bool = True,
     collect_metrics: bool = True,
 ) -> EngineState:
     """One global iteration: exchange -> global phase -> local phase.
 
-    ``use_ell`` routes local-phase delivery through the Pallas ELL kernels
-    for semiring-declared channels (and the entire local phase through the
-    fused `pr_step` kernel for programs declaring ``fused_kernel``);
-    ``collect_metrics=False`` drops the paper's message accounting from the
-    hot loop (counters other than iterations/pseudo-supersteps stay put).
+    ``use_ell`` (the default) routes remote- and local-phase delivery
+    through the Pallas ELL kernels for semiring-declared channels (and the
+    entire local phase through the fused `pr_step` / `min_step` kernels for
+    programs declaring ``fused_kernel``); ``collect_metrics=False`` drops
+    the paper's message accounting from the hot loop (counters other than
+    iterations/pseudo-supersteps stay put).
     """
     participate = _participation_mask(graph, prog)
     it = es.counters.iterations + 1
@@ -208,7 +387,7 @@ def hybrid_iteration(
     es = dataclasses.replace(
         es, export_out=prog.export_identity(es.export_out),
         export_send=jnp.zeros_like(es.export_send))
-    es, _ = deliver(graph, prog, es, edges="remote",
+    es, _ = deliver(graph, prog, es, edges="remote", use_ell=use_ell,
                     collect_metrics=collect_metrics)
 
     # -- 2. global phase: boundary vertices, exactly once -----------------
@@ -231,9 +410,13 @@ def hybrid_iteration(
     es = dataclasses.replace(es, counters=dataclasses.replace(
         c0, pseudo_supersteps=c0.pseudo_supersteps + running0.astype(jnp.int32)))
 
-    if _use_fused_pr(graph, prog, use_ell, max_local_steps):
+    fused = _fused_local_kernel(graph, prog, use_ell, max_local_steps)
+    if fused == "pr_step":
         es = _fused_pr_local_phase(graph, prog, es, running0,
                                    max_local_steps, collect_metrics)
+    elif fused == "min_step":
+        es = _fused_min_local_phase(graph, prog, es, running0,
+                                    max_local_steps, collect_metrics)
     else:
         def cond(carry):
             es_, running, k = carry
@@ -261,7 +444,7 @@ def hybrid_iteration(
 
 
 def init_hybrid(graph: PartitionedGraph, prog: VertexProgram, vdata: Any,
-                use_ell: bool = False,
+                use_ell: bool = True,
                 collect_metrics: bool = True) -> EngineState:
     """Initialization iteration (iteration 0): same as Hama's first superstep;
     in-partition messages go to pending for iteration 1's phases, crossing
@@ -278,7 +461,7 @@ def run_hybrid(
     vdata: Any = None,
     max_iters: int = 100_000,
     max_local_steps: int = 100_000,
-    use_ell: bool = False,
+    use_ell: bool = True,
     collect_metrics: bool = True,
     device_loop: bool = True,
 ) -> tuple[EngineState, int]:

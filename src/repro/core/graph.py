@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "EllSlice",
     "PartitionedGraph",
     "build_partitioned_graph",
     "hash_partition",
@@ -43,6 +44,41 @@ def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
 
 def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m if n > 0 else m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EllSlice:
+    """One degree bin of a sliced-ELL edge layout (partition-major).
+
+    Row binning keeps power-law graphs on the kernel fast path: bin 0 holds
+    slots [0, K0) of every row (dense — row r is destination slot r), spill
+    bins hold the overflow slots of high-degree rows only, indirected
+    through ``rows``.  A delivery is the ⊕-combination of one `ell_spmv`
+    call per bin.
+
+    The ``flat_*`` views are the single-device fast path, precomputed at
+    build time: row ids offset by p*Vp (sentinel P*Vp on padding, dropped by
+    ``mode='drop'`` scatters) and source ids offset by p*stride so one
+    kernel call covers every partition.  Inside a shard_map block the
+    per-partition arrays are re-offset locally instead (see
+    ``runtime.slice_flat``).
+    """
+
+    rows: jax.Array       # (P, Nb) int32 — destination slot, Vp sentinel pad
+    idx: jax.Array        # (P, Nb, Kb) int32 — source slot, or Vp + halo slot
+    val: jax.Array        # (P, Nb, Kb) float32 — edge weight
+    msk: jax.Array        # (P, Nb, Kb) bool — slot occupancy
+    flat_rows: jax.Array  # (P*Nb,) int32 — p*Vp + row, P*Vp sentinel
+    flat_idx: jax.Array   # (P*Nb, Kb) int32 — idx + p*stride
+    nb: int = dataclasses.field(metadata=dict(static=True))
+    kb: int = dataclasses.field(metadata=dict(static=True))
+    lo: int = dataclasses.field(metadata=dict(static=True))   # first edge slot
+    dense: bool = dataclasses.field(metadata=dict(static=True))
+    stride: int = dataclasses.field(metadata=dict(static=True))  # frontier row pitch
+    # max source *global id* feeding this slice — the per-bin bound deciding
+    # whether integer payloads survive the kernel's float32 carriage exactly
+    payload_bound: int = dataclasses.field(metadata=dict(static=True))
 
 
 @jax.tree_util.register_dataclass
@@ -79,14 +115,14 @@ class PartitionedGraph:
     export_fanout: jax.Array    # (P, X) int32 — #remote partitions consuming
     halo_ptr: jax.Array         # (P, H) int32 — flat index q*X + x into exports
     halo_mask: jax.Array        # (P, H) bool
-    # ---- ELL-packed local in-edges (destination-major) ------------------
-    # The local-phase fast path: row v of partition p holds the sources of
-    # v's same-partition in-edges as dense (idx, val, msk) slices that feed
-    # the Pallas `ell_spmv` / `pr_step` kernels.  Kl = 0 when the layout was
-    # not built (skewed in-degree past `ell_max_slices`, or disabled).
-    ell_idx: jax.Array          # (P, Vp, Kl) int32 — source local slot
-    ell_val: jax.Array          # (P, Vp, Kl) float32 — edge weight
-    ell_msk: jax.Array          # (P, Vp, Kl) bool — slot occupancy
+    # ---- sliced-ELL edge layouts (destination-major degree bins) --------
+    # The kernel fast paths: ``local_ell`` packs each partition's
+    # same-partition in-edges (sources are local slots, frontier stride Vp),
+    # ``remote_ell`` packs its remote in-edges (sources are Vp + halo slot,
+    # frontier stride Vp + H — the concat(out, halo_out) table).  Empty
+    # tuples when the layout was not built.
+    local_ell: tuple[EllSlice, ...]
+    remote_ell: tuple[EllSlice, ...]
     # ---- static metadata (not traced) -----------------------------------
     n_partitions: int = dataclasses.field(metadata=dict(static=True))
     n_vertices: int = dataclasses.field(metadata=dict(static=True))
@@ -96,13 +132,21 @@ class PartitionedGraph:
     xp: int = dataclasses.field(metadata=dict(static=True))
     hp: int = dataclasses.field(metadata=dict(static=True))
     gp: int = dataclasses.field(metadata=dict(static=True))
-    kl: int = dataclasses.field(metadata=dict(static=True))
 
     @property
     def has_ell(self) -> bool:
-        """Whether the ELL local-edge layout is available for kernel-backed
+        """Whether the local-edge ELL layout is available for kernel-backed
         delivery."""
-        return self.kl > 0
+        return len(self.local_ell) > 0
+
+    @property
+    def has_remote_ell(self) -> bool:
+        return len(self.remote_ell) > 0
+
+    @property
+    def kl(self) -> int:
+        """Base-bin slice width of the local layout (0 when not built)."""
+        return self.local_ell[0].kb if self.local_ell else 0
 
     # ------------------------------------------------------------------
     @property
@@ -202,19 +246,20 @@ def build_partitioned_graph(
     pad_multiple: int = 8,
     build_ell: bool = True,
     ell_pad_slices: int = 8,
-    ell_max_slices: int = 2048,
+    ell_base_slices: int = 128,
 ) -> PartitionedGraph:
     """Construct the padded partition-major structure from a global edge list.
 
     ``edges`` is (E, 2) int [src, dst]; ``part`` maps vertex -> partition id.
 
-    ``build_ell`` additionally packs each partition's *local* in-edges into a
-    destination-major ELL layout (the kernel fast path for local-phase
-    delivery).  ``ell_pad_slices`` pads the slice axis (use 128 when
-    targeting TPU lanes; 8 keeps CPU/interpret memory small);
-    ``ell_max_slices`` skips the layout entirely when the local in-degree is
-    too skewed for ELL padding to pay off (engines then fall back to the
-    dense gather/segment path).
+    ``build_ell`` additionally packs each partition's local *and* remote
+    in-edges into destination-major sliced-ELL layouts (the kernel fast
+    paths for both delivery phases).  ``ell_pad_slices`` pads the slice axis
+    (use 128 when targeting TPU lanes; 8 keeps CPU/interpret memory small).
+    ``ell_base_slices`` bounds the dense base bin: rows whose in-degree
+    exceeds it spill into up to two extra degree bins (see
+    ``kernels.common.ell_bin_widths``), so power-law skew widens only the
+    tiny spill bins instead of padding every row to the hub degree.
     """
     edges = np.asarray(edges, dtype=np.int64)
     part = np.asarray(part, dtype=np.int32)
@@ -342,28 +387,18 @@ def build_partitioned_graph(
     halo_ptr = stack(halo_ptrs, (H,), np.int32, 0)
     halo_mask = stack(lambda p: np.ones(len(halo_by_p[p]), bool), (H,), bool, False)
 
-    # --- ELL-packed local in-edges (destination-major fast path) ----------
-    from repro.kernels.common import ell_pack_numpy
-
-    kl_max = 0
+    # --- sliced-ELL in-edge layouts (destination-major fast paths) --------
+    local_ell: tuple[EllSlice, ...] = ()
+    remote_ell: tuple[EllSlice, ...] = ()
     if build_ell:
-        for p in range(P):
-            loc = per_p[p]["local"]
-            if loc.any():
-                indeg = np.bincount(per_p[p]["dst_slot"][loc], minlength=Vp)
-                kl_max = max(kl_max, int(indeg.max()))
-    Kl = _round_up(kl_max, ell_pad_slices) if kl_max else 0
-    if Kl > ell_max_slices:
-        Kl = 0
-    ell_idx = np.zeros((P, Vp, Kl), dtype=np.int32)
-    ell_val = np.zeros((P, Vp, Kl), dtype=np.float32)
-    ell_msk = np.zeros((P, Vp, Kl), dtype=bool)
-    if Kl:
-        for p in range(P):
-            loc = per_p[p]["local"]
-            ell_idx[p], ell_val[p], ell_msk[p] = ell_pack_numpy(
-                per_p[p]["src_enc"][loc], per_p[p]["dst_slot"][loc],
-                per_p[p]["w"][loc], Vp, Kl)
+        local_ell = _build_ell_slices(
+            per_p, sel_key="local", negate=False, P=P, Vp=Vp, stride=Vp,
+            pad=pad_multiple, slice_pad=ell_pad_slices,
+            base_slices=ell_base_slices)
+        remote_ell = _build_ell_slices(
+            per_p, sel_key="local", negate=True, P=P, Vp=Vp, stride=Vp + H,
+            pad=pad_multiple, slice_pad=ell_pad_slices,
+            base_slices=ell_base_slices)
 
     return PartitionedGraph(
         vertex_gid=jnp.asarray(vertex_gid), vertex_mask=jnp.asarray(vertex_mask),
@@ -377,8 +412,84 @@ def build_partitioned_graph(
         export_slot=jnp.asarray(export_slot), export_mask=jnp.asarray(export_mask),
         export_fanout=jnp.asarray(export_fanout),
         halo_ptr=jnp.asarray(halo_ptr), halo_mask=jnp.asarray(halo_mask),
-        ell_idx=jnp.asarray(ell_idx), ell_val=jnp.asarray(ell_val),
-        ell_msk=jnp.asarray(ell_msk),
+        local_ell=local_ell, remote_ell=remote_ell,
         n_partitions=P, n_vertices=int(n_vertices), n_edges=int(n_edges),
-        vp=int(Vp), ep=int(Ep), xp=int(X), hp=int(H), gp=int(Gp), kl=int(Kl),
+        vp=int(Vp), ep=int(Ep), xp=int(X), hp=int(H), gp=int(Gp),
     )
+
+
+def _build_ell_slices(per_p, sel_key: str, negate: bool, P: int, Vp: int,
+                      stride: int, pad: int, slice_pad: int,
+                      base_slices: int) -> tuple[EllSlice, ...]:
+    """Pack one side (local or remote) of every partition's in-edges into
+    shared-width sliced-ELL degree bins, flat views precomputed."""
+    from repro.kernels.common import ell_bin_widths, sliced_ell_pack_numpy
+
+    picks = []
+    kmax = 0
+    for p in range(P):
+        sel = per_p[p][sel_key]
+        if negate:
+            sel = np.logical_not(sel)
+        e = dict(src=per_p[p]["src_enc"][sel], dst=per_p[p]["dst_slot"][sel],
+                 w=per_p[p]["w"][sel], gid=per_p[p]["src_gid"][sel])
+        if len(e["dst"]):
+            kmax = max(kmax, int(np.bincount(e["dst"], minlength=Vp).max()))
+        # per-edge rank within its destination run — computed once, handed
+        # to the packer and shared by every bin's source-gid bound below
+        order = np.argsort(e["dst"], kind="stable")
+        dst_s = e["dst"][order]
+        e["order"] = order
+        e["gid_ranked"] = e["gid"][order]
+        e["rank"] = (np.arange(len(dst_s))
+                     - np.searchsorted(dst_s, dst_s, side="left"))
+        picks.append(e)
+    widths = ell_bin_widths(kmax, base_slices, slice_pad)
+    if not widths:
+        return ()
+
+    packs = [sliced_ell_pack_numpy(e["src"], e["dst"], e["w"], Vp, widths,
+                                   order_rank=(e["order"], e["rank"]))
+             for e in picks]
+    slices = []
+    for b, (lo, kb) in enumerate(widths):
+        dense = lo == 0
+        if dense:
+            Nb = Vp
+        else:
+            Nb = _round_up(max(len(packs[p][b][0]) for p in range(P)), pad)
+        rows = np.full((P, Nb), Vp, dtype=np.int32)
+        idx = np.zeros((P, Nb, kb), dtype=np.int32)
+        val = np.zeros((P, Nb, kb), dtype=np.float32)
+        msk = np.zeros((P, Nb, kb), dtype=bool)
+        flat_rows = np.full((P, Nb), P * Vp, dtype=np.int32)
+        bound = -1
+        for p in range(P):
+            rows_b, idx_b, val_b, msk_b = packs[p][b]
+            if rows_b is None:                      # dense base bin
+                rows[p] = np.arange(Vp, dtype=np.int32)
+            else:
+                rows[p, : len(rows_b)] = rows_b
+            n = idx_b.shape[0]
+            idx[p, :n], val[p, :n], msk[p, :n] = idx_b, val_b, msk_b
+            flat_rows[p] = np.where(rows[p] < Vp, p * Vp + rows[p], P * Vp)
+            bound = max(bound, _bin_src_bound(picks[p], lo, kb))
+        flat_idx = idx + (np.arange(P, dtype=np.int32) * stride)[:, None, None]
+        slices.append(EllSlice(
+            rows=jnp.asarray(rows), idx=jnp.asarray(idx),
+            val=jnp.asarray(val), msk=jnp.asarray(msk),
+            flat_rows=jnp.asarray(flat_rows.reshape(-1)),
+            flat_idx=jnp.asarray(flat_idx.reshape(P * Nb, kb)),
+            nb=int(Nb), kb=int(kb), lo=int(lo), dense=bool(dense),
+            stride=int(stride), payload_bound=int(bound)))
+    return tuple(slices)
+
+
+def _bin_src_bound(e: dict, lo: int, kb: int) -> int:
+    """Max source gid among the edges landing in bin [lo, lo+kb), via the
+    precomputed dst-ranking (mirrors ``sliced_ell_pack_numpy``)."""
+    rank = e["rank"]
+    if not len(rank):
+        return -1
+    sel = (rank >= lo) & (rank < lo + kb)
+    return int(e["gid_ranked"][sel].max()) if sel.any() else -1

@@ -26,13 +26,14 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import PartitionedGraph
+from repro.core.graph import EllSlice, PartitionedGraph
 from repro.core.vertex_program import (Channel, StepInfo, VertexProgram,
                                        combine_segments)
 
 __all__ = ["Counters", "EngineState", "init_state", "exchange", "deliver",
            "apply_phase", "merge_inbox", "quiescent", "gather_per_partition",
-           "ell_channels", "flat_ell"]
+           "ell_channels", "ell_f32_exact", "ell_slices", "slice_flat",
+           "ell_send_accounting"]
 
 
 @jax.tree_util.register_dataclass
@@ -182,82 +183,176 @@ def _lex_lt(pa, pb):
     return jnp.logical_or(lt, eq)  # ties keep a
 
 
-def _ell_f32_exact(graph: PartitionedGraph, ch: Channel) -> bool:
+def ell_f32_exact(ch: Channel, payload_bound: int) -> bool:
     """Integer payloads ride the kernel as float32, which is only exact up
     to 2**24 — past that, vertex-id-valued payloads (WCC labels) would be
-    silently rounded, so the channel falls back to the dense path."""
+    silently rounded.  Judged per ELL degree bin: ``payload_bound`` is the
+    largest source gid feeding the bin, which bounds every monotone
+    min-label payload flowing through it (a HashMin label never exceeds its
+    carrier's own gid)."""
     (dt, _), = ch.components
     if not jnp.issubdtype(jnp.dtype(dt), jnp.integer):
         return True
-    return graph.n_vertices < (1 << 24)
+    return payload_bound <= (1 << 24)
+
+
+def ell_slices(graph: PartitionedGraph, edges: str) -> tuple[EllSlice, ...]:
+    return graph.local_ell if edges == "local" else graph.remote_ell
 
 
 def ell_channels(graph: PartitionedGraph, prog: VertexProgram,
-                 out, send) -> list[Channel]:
-    """Channels eligible for kernel-backed local delivery: the graph carries
-    the ELL layout and the channel declares a matching single-component
-    semiring whose ``ell_payload`` hook is implemented (and whose payloads
-    are exactly float32-representable).  The decision is static (per
-    program/channel, not data-dependent)."""
-    if not graph.has_ell:
+                 out, send, edges: str = "local") -> list[Channel]:
+    """Channels eligible for kernel-backed delivery of ``edges``
+    ('local' | 'remote'): the graph carries that side's sliced-ELL layout
+    and the channel declares a matching single-component semiring whose
+    ``ell_payload`` hook is implemented (and whose payloads survive every
+    bin's float32 carriage exactly — see :func:`ell_f32_exact`).  The
+    decision is static (per program/channel/bin, not data-dependent)."""
+    slices = ell_slices(graph, edges)
+    if not slices:
         return []
     return [ch for ch in prog.channels
             if ch.semiring is not None and len(ch.components) == 1
-            and _ell_f32_exact(graph, ch)
+            and all(ell_f32_exact(ch, s.payload_bound) for s in slices)
             and prog.ell_payload(ch, out, send) is not None]
 
 
-def flat_ell(graph: PartitionedGraph, p: int):
-    """ELL tiles flattened to one (P*Vp, Kl) problem: per-partition source
-    slots are offset by p*Vp so a single kernel call covers every
-    partition (sources of local edges index the flattened (P*Vp,) frontier)."""
-    vp, kl = graph.vp, graph.kl
-    offs = (jnp.arange(p, dtype=jnp.int32) * vp)[:, None, None]
-    idx = (graph.ell_idx + offs).reshape(p * vp, kl)
-    val = graph.ell_val.reshape(p * vp, kl)
-    msk = graph.ell_msk.reshape(p * vp, kl)
-    return idx, val, msk
+def slice_flat(s: EllSlice, graph: PartitionedGraph, p: int):
+    """Flattened (rows, idx, msk) views of one ELL slice for a p-partition
+    block.  The build-time cache serves the host path (the block covers the
+    whole graph); inside a shard_map block the per-partition arrays are
+    re-offset with block-local strides instead."""
+    nb, kb = s.nb, s.kb
+    if p == graph.n_partitions:
+        return s.flat_rows, s.flat_idx, s.msk.reshape(p * nb, kb)
+    offs = (jnp.arange(p, dtype=jnp.int32) * s.stride)[:, None, None]
+    idx = (s.idx + offs).reshape(p * nb, kb)
+    row_offs = (jnp.arange(p, dtype=jnp.int32) * graph.vp)[:, None]
+    rows = jnp.where(s.rows < graph.vp, s.rows + row_offs,
+                     p * graph.vp).reshape(-1)
+    return rows, idx, s.msk.reshape(p * nb, kb)
 
 
-def _ell_deliver(graph, prog, chs, es, pending, delivered, collect_metrics):
-    """Kernel-backed local delivery for semiring channels.
+# ⊕-combination of per-bin partials into the per-destination output; the
+# scatter indices carry an out-of-range sentinel on padded rows, dropped.
+_SCATTER = {
+    "add_mul": lambda y, r, v: y.at[r].add(v, mode="drop"),
+    "min_add": lambda y, r, v: y.at[r].min(v, mode="drop"),
+    "min_mul": lambda y, r, v: y.at[r].min(v, mode="drop"),
+    "max_add": lambda y, r, v: y.at[r].max(v, mode="drop"),
+}
 
-    The per-destination combine runs as one `ell_spmv` Pallas call over the
-    flattened (P*Vp, Kl) tiles; the has-message flags (and, when
-    ``collect_metrics``, the paper counters) come from a cheap masked gather
-    of the send flags through the same layout.
+
+def ell_combine_bins(prog, ch, slices, views, x, y, p: int, interpret: bool):
+    """⊕-combine each bin's ``ell_spmv`` partials onto the flat destination
+    vector ``y`` — the dense base bin via the semiring combine, spill bins
+    via semiring scatter over their row lists.  The single source of truth
+    for `deliver`'s kernel path and the fused local phases' spill operand."""
+    from repro.kernels.ell_spmv import ell_spmv
+    from repro.kernels.ell_spmv.ell_spmv import SEMIRINGS
+
+    combine, _, _ = SEMIRINGS[ch.semiring]
+    for s, (rows, idx, msk) in zip(slices, views):
+        v = prog.ell_edge_values(ch, s.val).reshape(p * s.nb, s.kb)
+        yb = ell_spmv(idx, v, msk, x, semiring=ch.semiring,
+                      interpret=interpret)
+        if s.dense:
+            y = combine(y, yb)
+        else:
+            y = _SCATTER[ch.semiring](y, rows, yb)
+    return y
+
+
+def ell_send_accounting(graph: PartitionedGraph, slices, views, send_flat,
+                        p: int):
+    """Exact parity with the dense local accounting, from the ELL layout:
+    per-destination has-flags (one combined local group per messaged dst)
+    and the raw in-memory message count (every valid sender edge slot).
+    The single source of truth for both `deliver`'s kernel path and the
+    fused local phases."""
+    has = jnp.zeros((p * graph.vp,), bool)
+    mem = jnp.zeros((), jnp.int32)
+    for s, (rows, idx, msk) in zip(slices, views):
+        tile = jnp.logical_and(send_flat[idx], msk)
+        row_has = jnp.any(tile, axis=-1)
+        if s.dense:
+            has = jnp.logical_or(has, row_has)
+        else:
+            has = has.at[rows].max(row_has, mode="drop")
+        mem += jnp.sum(tile).astype(jnp.int32)
+    return has.reshape(p, graph.vp), mem
+
+
+def _ell_deliver(graph, prog, chs, es, pending, delivered, collect_metrics,
+                 edges: str):
+    """Kernel-backed delivery for semiring channels along ``edges``.
+
+    Local deliveries read the (P*Vp,) out-state frontier; remote deliveries
+    read the concat(out, halo_out) frontier of stride Vp + H, with sources
+    halo-encoded as Vp + halo_slot.  Each sliced-ELL degree bin runs one
+    `ell_spmv` Pallas call over its flattened tiles; spill-bin partials are
+    ⊕-scattered onto the dense base bin's output.  The has-message flags
+    (and, when ``collect_metrics``, the paper counters) come from a cheap
+    masked gather of the send flags through the same layout.
     """
     from repro.kernels.common import default_interpret
-    from repro.kernels.ell_spmv import ell_spmv
+    from repro.kernels.ell_spmv.ell_spmv import SEMIRINGS
 
-    p = es.send.shape[0]
-    vp, kl = graph.vp, graph.kl
-    idx, val, msk = flat_ell(graph, p)
-    send_tile = jnp.logical_and(
-        es.send.reshape(-1)[idx].reshape(p, vp, kl), graph.ell_msk)
-    has_fresh = jnp.any(send_tile, axis=-1)
-    delivered = jnp.logical_or(delivered, jnp.any(has_fresh, axis=1))
+    p, vp = es.send.shape
+    slices = ell_slices(graph, edges)
+    if edges == "local":
+        out_tab, send_tab = es.out, es.send
+    else:
+        cat = lambda a, b: jnp.concatenate([a, b], axis=1)
+        out_tab = jax.tree.map(cat, es.out, es.halo_out)
+        send_tab = cat(es.send, es.halo_send)
+    send_flat = send_tab.reshape(-1)
     interpret = default_interpret()
 
+    # has-message flags per destination, shared by every kernel channel
+    views = [slice_flat(s, graph, p) for s in slices]
+    has_fresh, mem_edges = ell_send_accounting(graph, slices, views,
+                                               send_flat, p)
+    delivered = jnp.logical_or(delivered, jnp.any(has_fresh, axis=1))
+
+    net = jnp.zeros((), jnp.int32)
     net_local = jnp.zeros((), jnp.int32)
     mem = jnp.zeros((), jnp.int32)
     for ch in chs:
-        x = prog.ell_payload(ch, es.out, es.send)
-        v = prog.ell_edge_values(ch, val)
-        y = ell_spmv(idx, v, msk.reshape(p * vp, kl),
-                     x.reshape(-1).astype(jnp.float32),
-                     semiring=ch.semiring, interpret=interpret)
+        _, _, ident = SEMIRINGS[ch.semiring]
+        x = prog.ell_payload(ch, out_tab, send_tab)
+        x = x.reshape(-1).astype(jnp.float32)
+        y = jnp.full((p * vp,), ident, jnp.float32)
+        y = ell_combine_bins(prog, ch, slices, views, x, y, p, interpret)
         y = y.reshape(p, vp)
-        dt, ident = ch.components[0]
-        payload = jnp.where(has_fresh, y.astype(dt), jnp.asarray(ident, dt))
+        dt, ident_ch = ch.components[0]
+        payload = jnp.where(has_fresh, y.astype(dt), jnp.asarray(ident_ch, dt))
         pending[ch.name] = merge_inbox(ch, pending[ch.name],
                                        ((payload,), has_fresh))
-        if collect_metrics:
+        if collect_metrics and edges == "local":
             # local deliveries: one combine group per messaged destination
             # (same-partition source), every valid edge an in-memory message
             net_local += jnp.sum(has_fresh).astype(jnp.int32)
-            mem += jnp.sum(send_tile).astype(jnp.int32)
-    return pending, delivered, net_local, mem
+            mem += mem_edges
+
+    if collect_metrics and edges == "remote" and chs:
+        # remote deliveries count per (source-partition, destination) combine
+        # group, exactly like the dense path's accounting; semiring channels
+        # declare an always-valid emit, so one group reduction over the dense
+        # edge arrays covers every kernel channel identically.
+        send_e = gather_per_partition(send_tab, graph.edge_src)
+        valid = jnp.logical_and(
+            jnp.logical_and(graph.edge_mask,
+                            jnp.logical_not(graph.edge_local)), send_e)
+        grp_sent = jax.vmap(
+            lambda v, g: jax.ops.segment_max(v.astype(jnp.int32), g,
+                                             num_segments=graph.gp)
+        )(valid, graph.edge_group) > 0
+        grp_sent = jnp.logical_and(grp_sent, graph.group_mask)
+        net += len(chs) * jnp.sum(
+            jnp.logical_and(grp_sent, graph.group_remote)).astype(jnp.int32)
+
+    return pending, delivered, net, net_local, mem
 
 
 def deliver(
@@ -276,17 +371,18 @@ def deliver(
     (source-partition, destination-vertex) group, i.e. post-``Combine()``),
     local deliveries as in-memory messages.
 
-    ``use_ell`` dispatches semiring-declared channels of a *local* delivery
-    to the Pallas ELL kernel (see :func:`ell_channels`); other channels —
-    and every channel of 'all'/'remote' deliveries — keep the dense
+    ``use_ell`` dispatches semiring-declared channels of a 'local' or
+    'remote' delivery to the Pallas ELL kernels (see :func:`ell_channels`);
+    other channels — and every channel of 'all' deliveries — keep the dense
     gather/segment path.  ``collect_metrics=False`` skips the paper's
     message-accounting reductions entirely (the perf path pays nothing; the
     counters then stay at their previous values).
     """
     vp = graph.vp
 
-    kernel_chs = ell_channels(graph, prog, es.out, es.send) \
-        if (use_ell and edges == "local") else []
+    kernel_chs = ell_channels(graph, prog, es.out, es.send, edges) \
+        if (use_ell and edges in ("local", "remote")
+            and (use_halo or edges == "local")) else []
     dense_chs = [ch for ch in prog.channels if ch not in kernel_chs]
 
     pending = dict(es.pending)
@@ -296,8 +392,10 @@ def deliver(
     mem = jnp.zeros((), jnp.int32)
 
     if kernel_chs:
-        pending, delivered, nl, mm = _ell_deliver(
-            graph, prog, kernel_chs, es, pending, delivered, collect_metrics)
+        pending, delivered, nt, nl, mm = _ell_deliver(
+            graph, prog, kernel_chs, es, pending, delivered, collect_metrics,
+            edges)
+        net += nt
         net_local += nl
         mem += mm
 

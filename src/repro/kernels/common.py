@@ -16,7 +16,7 @@ import jax
 from jax.experimental import pallas as pl
 
 __all__ = ["ell_blocking", "accumulate_k", "default_interpret",
-           "ell_pack_numpy"]
+           "ell_pack_numpy", "ell_bin_widths", "sliced_ell_pack_numpy"]
 
 
 def ell_blocking(r: int, kk: int, block_rows: int, block_slices: int):
@@ -78,3 +78,92 @@ def ell_pack_numpy(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
     val[dst_s, slot] = w_s
     msk[dst_s, slot] = True
     return idx, val, msk
+
+
+def ell_bin_widths(kmax: int, base_slices: int, pad: int,
+                   growth: int = 8, max_bins: int = 3) -> list[tuple[int, int]]:
+    """Slot ranges ``(lo, kb)`` of the sliced-ELL degree bins for a row set
+    whose maximum in-degree is ``kmax``.
+
+    Bin 0 holds slots [0, K0) of *every* row (dense, no row indirection);
+    spill bins hold the overflow slots of the high-degree rows only.  When
+    the padded max degree fits ``base_slices`` this degenerates to the
+    single dense bin of the unbinned layout; otherwise spill widths grow
+    geometrically so at most ``max_bins`` bins cover any skew (the last bin
+    is unbounded — its row count is tiny by construction).
+    """
+    if kmax <= 0:
+        return []
+    rup = lambda n: ((n + pad - 1) // pad) * pad if n > 0 else pad
+    base = rup(base_slices)
+    if rup(kmax) <= base:
+        return [(0, rup(kmax))]
+    bins = [(0, base)]
+    lo = base
+    while kmax > lo:
+        kb = rup(kmax - lo)
+        if len(bins) < max_bins - 1:
+            kb = min(kb, rup(base * growth ** len(bins)))
+        bins.append((lo, kb))
+        lo += kb
+    return bins
+
+
+def sliced_ell_pack_numpy(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+                          n_rows: int, widths: list[tuple[int, int]],
+                          order_rank: tuple[np.ndarray, np.ndarray] | None
+                          = None):
+    """Pack a destination-major edge set into sliced-ELL degree bins.
+
+    ``widths`` comes from :func:`ell_bin_widths`: bin b owns each row's edge
+    slots [lo_b, lo_b + kb_b) in stable dst-sorted order.  Bin 0 (lo == 0)
+    is packed dense over all ``n_rows``; spill bins carry only the rows
+    whose degree exceeds their ``lo``, as a (rows, idx, val, msk) quadruple
+    where ``rows`` lists the destination row ids in ascending order.
+
+    ``order_rank`` optionally supplies the stable dst argsort and the
+    per-edge rank within its destination run, when the caller has already
+    computed them over the same edge set.
+
+    Returns ``[(rows (nb,) int32, idx (nb, kb) int32, val f32, msk bool)]``
+    per bin (``rows`` is None for the dense base bin).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    w = np.asarray(w, dtype=np.float32)
+    if order_rank is None:
+        order = np.argsort(dst, kind="stable")
+        rank = None
+    else:
+        order, rank = order_rank
+    src_s, dst_s, w_s = src[order], dst[order], w[order]
+    if rank is None:
+        rank = (np.arange(len(dst_s))
+                - np.searchsorted(dst_s, dst_s, side="left"))
+    degree = np.zeros(n_rows, dtype=np.int64)
+    if len(dst_s):
+        np.add.at(degree, dst_s, 1)
+
+    out = []
+    for lo, kb in widths:
+        sel = (rank >= lo) & (rank < lo + kb)
+        if lo == 0:
+            rows = None
+            idx = np.zeros((n_rows, kb), dtype=np.int32)
+            val = np.zeros((n_rows, kb), dtype=np.float32)
+            msk = np.zeros((n_rows, kb), dtype=bool)
+            r = dst_s[sel]
+        else:
+            rows = np.nonzero(degree > lo)[0].astype(np.int32)
+            row_of = np.zeros(n_rows, dtype=np.int64)
+            row_of[rows] = np.arange(len(rows))
+            idx = np.zeros((len(rows), kb), dtype=np.int32)
+            val = np.zeros((len(rows), kb), dtype=np.float32)
+            msk = np.zeros((len(rows), kb), dtype=bool)
+            r = row_of[dst_s[sel]]
+        s = rank[sel] - lo
+        idx[r, s] = src_s[sel]
+        val[r, s] = w_s[sel]
+        msk[r, s] = True
+        out.append((rows, idx, val, msk))
+    return out

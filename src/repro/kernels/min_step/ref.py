@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused min-semiring pseudo-superstep."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_min_step_ref(idx, val, msk, x, send, xrow=None, extra=None):
+    if xrow is None:
+        xrow = x
+    cand = jnp.where(jnp.logical_and(msk, send[idx]), x[idx] + val, jnp.inf)
+    d_in = jnp.min(cand, axis=1)
+    if extra is not None:
+        d_in = jnp.minimum(d_in, extra)
+    return jnp.minimum(xrow, d_in), d_in, d_in < xrow

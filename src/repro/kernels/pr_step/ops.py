@@ -5,16 +5,22 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.pr_step.pr_step import fused_pr_step_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("damping", "tol", "block_rows",
                                              "block_slices", "interpret"))
-def fused_pr_step(idx, val, msk, delta, send, rank, *, damping: float = 0.85,
-                  tol: float = 1e-4, block_rows: int = 256,
-                  block_slices: int = 128, interpret: bool = True):
-    return fused_pr_step_pallas(idx, val, msk, delta, send, rank,
+def fused_pr_step(idx, val, msk, delta, send, rank, extra=None, *,
+                  damping: float = 0.85, tol: float = 1e-4,
+                  block_rows: int = 256, block_slices: int = 128,
+                  interpret: bool = True):
+    """``extra`` carries the sliced-ELL spill bins' pre-combined per-row
+    contributions (zeros / omitted when the layout has a single bin)."""
+    if extra is None:
+        extra = jnp.zeros(idx.shape[:1], rank.dtype)
+    return fused_pr_step_pallas(idx, val, msk, delta, send, rank, extra,
                                 damping=damping, tol=tol,
                                 block_rows=block_rows,
                                 block_slices=block_slices,

@@ -27,7 +27,7 @@ from repro.kernels.common import accumulate_k, ell_blocking
 
 
 def _kernel(idx_ref, val_ref, msk_ref, delta_ref, send_ref, rank_ref,
-            acc_ref, rank_out_ref, send_out_ref, *, damping: float,
+            extra_ref, acc_ref, rank_out_ref, send_out_ref, *, damping: float,
             tol: float, n_kblocks: int):
     k = pl.program_id(1)
 
@@ -45,12 +45,15 @@ def _kernel(idx_ref, val_ref, msk_ref, delta_ref, send_ref, rank_ref,
 
     @pl.when(k == n_kblocks - 1)
     def _epilogue():
-        d_in = acc_ref[...]
+        # fold in the sliced-ELL spill bins' pre-combined contributions so
+        # the returned delta_in covers every edge slot of the row
+        d_in = acc_ref[...] + extra_ref[...]
+        acc_ref[...] = d_in
         rank_out_ref[...] = rank_ref[...] + d_in
         send_out_ref[...] = d_in > tol
 
 
-def fused_pr_step_pallas(idx, val, msk, delta, send, rank, *,
+def fused_pr_step_pallas(idx, val, msk, delta, send, rank, extra, *,
                          damping: float = 0.85, tol: float = 1e-4,
                          block_rows: int = 256, block_slices: int = 128,
                          interpret: bool = True):
@@ -69,6 +72,7 @@ def fused_pr_step_pallas(idx, val, msk, delta, send, rank, *,
             pl.BlockSpec((n,), lambda i, k: (0,)),
             pl.BlockSpec((n,), lambda i, k: (0,)),
             pl.BlockSpec((bm,), lambda i, k: (i,)),
+            pl.BlockSpec((bm,), lambda i, k: (i,)),
         ],
         out_specs=[
             pl.BlockSpec((bm,), lambda i, k: (i,)),
@@ -81,5 +85,5 @@ def fused_pr_step_pallas(idx, val, msk, delta, send, rank, *,
             jax.ShapeDtypeStruct((r,), jnp.bool_),
         ],
         interpret=interpret,
-    )(idx, val, msk, delta, send, rank)
+    )(idx, val, msk, delta, send, rank, extra)
     return rank_out, acc, send_out

@@ -5,9 +5,11 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def fused_pr_step_ref(idx, val, msk, delta, send, rank, *,
+def fused_pr_step_ref(idx, val, msk, delta, send, rank, extra=None, *,
                       damping: float = 0.85, tol: float = 1e-4):
     contrib = jnp.where(send[idx], delta[idx], 0.0)
     contrib = jnp.where(msk, damping * val * contrib, 0.0)
     d_in = jnp.sum(contrib, axis=1)
+    if extra is not None:
+        d_in = d_in + extra
     return rank + d_in, d_in, d_in > tol

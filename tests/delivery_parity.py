@@ -1,0 +1,43 @@
+"""Shared parity assertion: kernel-backed remote delivery ≡ dense halo path.
+
+Used by both the deterministic suite (test_kernel_engine) and the
+hypothesis sweep (test_property) so the two assert one delivery contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def assert_remote_delivery_matches(graph, prog, payload, seed):
+    """Randomize out/send, fill the halo with a real exchange, then compare
+    dense vs kernel deliver(edges='remote') bit-exactly: every pending
+    slot, has-flag, delivered flag and paper counter."""
+    from repro.core.runtime import deliver, ell_channels, exchange, init_state
+
+    rng = np.random.RandomState(seed)
+    es = init_state(graph, prog, None)
+    p, vp = graph.n_partitions, graph.vp
+    (name, vals), = payload.items()
+    send = jnp.logical_and(jnp.asarray(rng.uniform(size=(p, vp)) < 0.6),
+                           graph.vertex_mask)
+    es = dataclasses.replace(es, out={name: vals}, send=send,
+                             export_out={name: vals}, export_send=send)
+    es = exchange(graph, es)
+    if graph.has_remote_ell:
+        assert ell_channels(graph, prog, es.out, es.send, "remote"), \
+            "kernel path should engage"
+    es_d, del_d = deliver(graph, prog, es, edges="remote", use_ell=False)
+    es_k, del_k = deliver(graph, prog, es, edges="remote", use_ell=True)
+    (pd,), hd = es_d.pending[name]
+    (pk,), hk = es_k.pending[name]
+    np.testing.assert_array_equal(np.asarray(hd), np.asarray(hk))
+    np.testing.assert_array_equal(np.asarray(pd), np.asarray(pk))
+    np.testing.assert_array_equal(np.asarray(del_d), np.asarray(del_k))
+    for f in ("net_messages", "net_local_messages", "mem_messages"):
+        assert int(getattr(es_d.counters, f)) == \
+            int(getattr(es_k.counters, f)), f

@@ -17,6 +17,9 @@ from repro.core.apps.pagerank import pagerank_edge_weights
 from repro.core.runtime import ell_channels
 from repro.data.graphs import bipartite_graph, grid_graph, rmat_graph, symmetrize
 
+from delivery_parity import assert_remote_delivery_matches as \
+    _assert_remote_delivery_matches
+
 RUNNERS = {"bsp": run_bsp, "am": run_am, "hybrid": run_hybrid}
 ENGINES = ["bsp", "am", "hybrid"]
 
@@ -64,11 +67,46 @@ def web():
 
 def test_graph_carries_ell_layout(road):
     graph, _ = road
-    assert graph.has_ell and graph.kl > 0
-    assert graph.ell_idx.shape == (graph.n_partitions, graph.vp, graph.kl)
-    # ELL slots reproduce exactly the local in-edges of the dense arrays
+    assert graph.has_ell and graph.has_remote_ell and graph.kl > 0
+    base = graph.local_ell[0]
+    assert base.dense and base.lo == 0 and base.stride == graph.vp
+    assert base.idx.shape == (graph.n_partitions, graph.vp, base.kb)
+    assert base.flat_idx.shape == (graph.n_partitions * graph.vp, base.kb)
+    # ELL slots reproduce exactly the local/remote splits of the dense arrays
     n_local = int(jnp.sum(jnp.logical_and(graph.edge_mask, graph.edge_local)))
-    assert int(jnp.sum(graph.ell_msk)) == n_local
+    n_remote = int(jnp.sum(jnp.logical_and(graph.edge_mask,
+                                           jnp.logical_not(graph.edge_local))))
+    assert sum(int(jnp.sum(s.msk)) for s in graph.local_ell) == n_local
+    assert sum(int(jnp.sum(s.msk)) for s in graph.remote_ell) == n_remote
+    # remote sources are halo-encoded past the local slot space
+    rbase = graph.remote_ell[0]
+    assert rbase.stride == graph.vp + graph.hp
+    assert bool(jnp.all(jnp.where(rbase.msk, rbase.idx >= graph.vp, True)))
+
+
+def test_skewed_graph_keeps_fast_path_with_bins():
+    """Power-law in-degree no longer bails out to dense: hub rows spill into
+    extra ELL bins and every engine still reaches the dense fixed point with
+    identical counters."""
+    edges, n = rmat_graph(600, avg_degree=10, seed=11)
+    rng = np.random.RandomState(5)
+    hubs = np.stack([rng.randint(0, n, size=2000),
+                     rng.randint(0, 5, size=2000)], axis=1)
+    edges = np.unique(np.concatenate([edges, hubs]), axis=0)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    part = hash_partition(n, 4, seed=0)
+    w = pagerank_edge_weights(edges, n)
+    graph = build_partitioned_graph(edges, n, part, weights=w,
+                                    ell_base_slices=16)
+    assert len(graph.local_ell) >= 2, "skew should produce spill bins"
+    assert not graph.local_ell[1].dense
+    for engine in ENGINES:
+        es_d, es_k = run_pair(engine, graph,
+                              lambda: IncrementalPageRank(tolerance=1e-4))
+        np.testing.assert_allclose(unpack(graph, es_d, "rank"),
+                                   unpack(graph, es_k, "rank"),
+                                   rtol=1e-5, atol=1e-6)
+        assert_counters_equal(es_d, es_k)
 
 
 def test_semiring_channels_are_eligible(road):
@@ -136,11 +174,13 @@ def test_hybrid_fused_pr_uses_kernel_and_matches(web):
     """The fused path is actually engaged for PageRank on the hybrid engine
     (fused_kernel declared + ELL present) and collect_metrics=False leaves
     the message counters untouched while converging to the same ranks."""
-    from repro.core.engine_hybrid import _use_fused_pr
+    from repro.core.engine_hybrid import _fused_local_kernel
     graph, _ = web
     prog = IncrementalPageRank(tolerance=1e-4)
-    assert _use_fused_pr(graph, prog, use_ell=True, max_local_steps=10)
-    assert not _use_fused_pr(graph, prog, use_ell=False, max_local_steps=10)
+    assert _fused_local_kernel(graph, prog, use_ell=True,
+                               max_local_steps=10) == "pr_step"
+    assert _fused_local_kernel(graph, prog, use_ell=False,
+                               max_local_steps=10) is None
 
     es_ref, it_ref = run_hybrid(graph, IncrementalPageRank(tolerance=1e-4))
     es_perf, it_perf = run_hybrid(graph, IncrementalPageRank(tolerance=1e-4),
@@ -152,6 +192,39 @@ def test_hybrid_fused_pr_uses_kernel_and_matches(web):
     assert int(es_perf.counters.net_messages) == 0
     assert int(es_perf.counters.mem_messages) == 0
     assert int(es_ref.counters.mem_messages) > 0
+
+
+def test_remote_ell_matches_dense_bitexact(road):
+    graph, _ = road
+    rng = np.random.RandomState(21)
+    p, vp = graph.n_partitions, graph.vp
+    dist = jnp.asarray(np.where(rng.uniform(size=(p, vp)) < 0.8,
+                                rng.uniform(0, 50, size=(p, vp)),
+                                np.inf).astype(np.float32))
+    _assert_remote_delivery_matches(graph, SSSP(source=0), {"dist": dist}, 3)
+    labels = jnp.asarray(rng.randint(0, graph.n_vertices,
+                                     size=(p, vp)).astype(np.int32))
+    _assert_remote_delivery_matches(graph, WCC(), {"label": labels}, 4)
+
+
+def test_remote_ell_skewed_bins_engage_and_match():
+    """Deterministic hub graph: the remote layout must actually spill into
+    extra bins (the case the old ``ell_max_slices`` bailout regressed to
+    dense) and still match the dense path bit-exactly."""
+    rng = np.random.RandomState(13)
+    n = 120
+    edges = np.stack([rng.randint(0, n, size=900),
+                      rng.randint(0, 4, size=900)], axis=1)
+    edges = np.concatenate([edges, rng.randint(0, n, size=(300, 2))])
+    edges = np.unique(edges, axis=0)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    part = hash_partition(n, 4, seed=2)
+    graph = build_partitioned_graph(edges, n, part, ell_base_slices=8)
+    assert len(graph.remote_ell) >= 2
+    assert not graph.remote_ell[1].dense
+    p, vp = graph.n_partitions, graph.vp
+    dist = jnp.asarray(rng.uniform(0, 50, size=(p, vp)).astype(np.float32))
+    _assert_remote_delivery_matches(graph, SSSP(source=0), {"dist": dist}, 17)
 
 
 def test_no_ell_layout_falls_back(road):
@@ -196,13 +269,90 @@ def test_fused_pr_cutoff_parity(web):
         assert_counters_equal(es_d, es_k)
 
 
-def test_int_semiring_falls_back_past_f32_exact(road):
-    """Integer payloads (WCC labels) ride the kernel as float32; a graph
-    with >= 2**24 vertices would round labels, so eligibility must drop."""
+def test_int_semiring_f32_exact_judged_per_bin(road):
+    """Integer payloads (WCC labels) ride the kernel as float32, judged per
+    ELL degree bin against the largest source gid feeding the bin: at the
+    2**24 boundary the bin is still exact (2**24 is representable), one past
+    it the channel must fall back to dense — in both delivery directions."""
     import dataclasses
     graph, _ = road
     out = {"label": jnp.zeros((graph.n_partitions, graph.vp), jnp.int32)}
     send = jnp.zeros((graph.n_partitions, graph.vp), bool)
-    assert [c.name for c in ell_channels(graph, WCC(), out, send)] == ["label"]
-    big = dataclasses.replace(graph, n_vertices=1 << 24)
-    assert ell_channels(big, WCC(), out, send) == []
+    prog = WCC()
+    for edges in ("local", "remote"):
+        assert [c.name for c in
+                ell_channels(graph, prog, out, send, edges)] == ["label"]
+
+    def rebound(g, side, bound):
+        slices = tuple(dataclasses.replace(s, payload_bound=bound)
+                       for s in getattr(g, side))
+        return dataclasses.replace(g, **{side: slices})
+
+    for side, edges in (("local_ell", "local"), ("remote_ell", "remote")):
+        at_edge = rebound(graph, side, 1 << 24)
+        past = rebound(graph, side, (1 << 24) + 1)
+        assert [c.name for c in
+                ell_channels(at_edge, prog, out, send, edges)] == ["label"]
+        assert ell_channels(past, prog, out, send, edges) == []
+        # float payloads (SSSP distances) are never bound-limited
+        assert [c.name for c in
+                ell_channels(past, SSSP(source=0),
+                             {"dist": out["label"].astype(jnp.float32)},
+                             send, edges)] == ["dist"]
+    # a poisoned *local* bin must not leak into remote eligibility
+    poisoned_local = rebound(graph, "local_ell", (1 << 24) + 1)
+    assert [c.name for c in
+            ell_channels(poisoned_local, prog, out, send, "remote")] \
+        == ["label"]
+
+
+def test_fused_min_gate_falls_back_past_f32_exact(road):
+    """The fused min_step loop keeps the whole int state in float32, so its
+    gate needs every vertex id representable — stricter than the per-bin
+    message judgment."""
+    import dataclasses
+    from repro.core.engine_hybrid import _fused_local_kernel
+    graph, _ = road
+    assert _fused_local_kernel(graph, WCC(), use_ell=True,
+                               max_local_steps=10) == "min_step"
+    assert _fused_local_kernel(graph, SSSP(source=0), use_ell=True,
+                               max_local_steps=10) == "min_step"
+    big = dataclasses.replace(graph, n_vertices=(1 << 24) + 2)
+    assert _fused_local_kernel(big, WCC(), use_ell=True,
+                               max_local_steps=10) is None
+    # float states (SSSP) stay fused at any graph size
+    assert _fused_local_kernel(big, SSSP(source=0), use_ell=True,
+                               max_local_steps=10) == "min_step"
+
+
+def test_hybrid_fused_min_uses_kernel_and_matches(road):
+    """The fused min_step path engages for SSSP on the hybrid engine and
+    collect_metrics=False leaves the message counters untouched while
+    reaching the identical fixed point."""
+    graph, _ = road
+    es_ref, it_ref = run_hybrid(graph, SSSP(source=0), use_ell=False)
+    es_perf, it_perf = run_hybrid(graph, SSSP(source=0),
+                                  use_ell=True, collect_metrics=False)
+    assert it_ref == it_perf
+    np.testing.assert_array_equal(unpack(graph, es_ref, "dist"),
+                                  unpack(graph, es_perf, "dist"))
+    assert int(es_perf.counters.net_messages) == 0
+    assert int(es_perf.counters.mem_messages) == 0
+    assert int(es_ref.counters.mem_messages) > 0
+
+
+def test_fused_min_cutoff_parity(road):
+    """A max_local_steps cutoff exits the fused min local phase with the
+    final delivery still pending; the kernel has already applied it, so the
+    engine must roll the apply back — distances and counters must match the
+    dense path bit-for-bit at every cutoff."""
+    graph, _ = road
+    for steps in (1, 2, 4):
+        es_d, it_d = run_hybrid(graph, SSSP(source=0),
+                                max_local_steps=steps, use_ell=False)
+        es_k, it_k = run_hybrid(graph, SSSP(source=0),
+                                max_local_steps=steps, use_ell=True)
+        assert it_d == it_k, (steps, it_d, it_k)
+        np.testing.assert_array_equal(unpack(graph, es_d, "dist"),
+                                      unpack(graph, es_k, "dist"))
+        assert_counters_equal(es_d, es_k)

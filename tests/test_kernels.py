@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ell_spmv import ell_spmv, ell_spmv_ref, to_ell
+from repro.kernels.min_step import fused_min_step, fused_min_step_ref
 from repro.kernels.pr_step import fused_pr_step, fused_pr_step_ref
 
 
@@ -132,3 +133,84 @@ def test_fused_pr_step_property(r, k, n, seed):
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=1e-5, atol=1e-6)
+
+
+def test_fused_pr_step_extra_folds_spill_bins():
+    """The ``extra`` operand (sliced-ELL spill contributions) lands in the
+    returned delta_in, rank and send decisions."""
+    rng = np.random.RandomState(7)
+    r, k, n = 64, 16, 64
+    idx = jnp.asarray(rng.randint(0, n, size=(r, k)).astype(np.int32))
+    val = jnp.asarray(rng.uniform(0, 1, size=(r, k)).astype(np.float32))
+    msk = jnp.asarray(rng.uniform(size=(r, k)) < 0.4)
+    delta = jnp.asarray(rng.uniform(0, 0.1, size=(n,)).astype(np.float32))
+    send = jnp.asarray(rng.uniform(size=(n,)) < 0.5)
+    rank = jnp.asarray(rng.uniform(0, 2, size=(r,)).astype(np.float32))
+    extra = jnp.asarray(rng.uniform(0, 0.01, size=(r,)).astype(np.float32))
+    got = fused_pr_step(idx, val, msk, delta, send, rank, extra, tol=1e-3)
+    want = fused_pr_step_ref(idx, val, msk, delta, send, rank, extra,
+                             tol=1e-3)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused min-semiring pseudo-superstep
+# ---------------------------------------------------------------------------
+
+def _random_min_problem(rng, r, k, n, density=0.5):
+    idx = jnp.asarray(rng.randint(0, n, size=(r, k)).astype(np.int32))
+    val = jnp.asarray(rng.uniform(0.1, 2.0, size=(r, k)).astype(np.float32))
+    msk = jnp.asarray(rng.uniform(size=(r, k)) < density)
+    x = jnp.asarray(np.where(rng.uniform(size=n) < 0.8,
+                             rng.uniform(0, 10, size=n),
+                             np.inf).astype(np.float32))
+    send = jnp.asarray(rng.uniform(size=(n,)) < 0.5)
+    return idx, val, msk, x, send
+
+
+@pytest.mark.parametrize("shape", [(16, 8, 16), (128, 128, 128),
+                                   (260, 140, 300)])
+def test_fused_min_step_matches_ref(shape):
+    r, k, n = shape
+    rng = np.random.RandomState(9)
+    idx, val, msk, x, send = _random_min_problem(rng, r, k, n)
+    xrow = jnp.asarray(rng.uniform(0, 10, size=(r,)).astype(np.float32))
+    got = fused_min_step(idx, val, msk, x, send, xrow)
+    want = fused_min_step_ref(idx, val, msk, x, send, xrow)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_fused_min_step_extra_and_defaults():
+    """xrow defaults to the frontier (the engine case: rows == vertex
+    slots) and ``extra`` min-folds spill-bin partials, +inf when absent."""
+    rng = np.random.RandomState(3)
+    r = n = 48
+    idx, val, msk, x, send = _random_min_problem(rng, r, 12, n)
+    extra = jnp.asarray(np.where(rng.uniform(size=r) < 0.3,
+                                 rng.uniform(0, 1, size=r),
+                                 np.inf).astype(np.float32))
+    got = fused_min_step(idx, val, msk, x, send, extra=extra)
+    want = fused_min_step_ref(idx, val, msk, x, send, x, extra)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # no senders at all -> d_in is +inf everywhere, state unchanged
+    x2, d2, s2 = fused_min_step(idx, val, msk, x, jnp.zeros_like(send))
+    assert bool(jnp.all(jnp.isinf(d2)))
+    np.testing.assert_array_equal(np.asarray(x2), np.asarray(x))
+    assert not bool(jnp.any(s2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.integers(1, 64), k=st.integers(1, 96), n=st.integers(1, 128),
+       seed=st.integers(0, 2**16))
+def test_fused_min_step_property(r, k, n, seed):
+    rng = np.random.RandomState(seed)
+    idx, val, msk, x, send = _random_min_problem(rng, r, k, n)
+    xrow = jnp.asarray(rng.uniform(0, 10, size=(r,)).astype(np.float32))
+    got = fused_min_step(idx, val, msk, x, send, xrow)
+    want = fused_min_step_ref(idx, val, msk, x, send, xrow)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
