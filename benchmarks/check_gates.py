@@ -1,0 +1,119 @@
+"""Kernel-regression gates over the committed BENCH_*.json trajectories.
+
+Thresholds live in ``benchmarks/gates.json`` (checked in, reviewed like
+code) instead of an inline CI heredoc; each gate names a benchmark table, a
+workload (or ``"*"`` for every workload in the table), a metric — a dotted /
+indexed path into the workload record, or a list of candidate paths of which
+the best present value counts — and an inclusive ``min`` bar.  Bars are
+deliberately loose relative to the real margins recorded in the JSONs:
+shared CI runners are noisy, and the gate exists to catch the kernel path
+regressing toward dense, not to measure it.
+
+    python benchmarks/check_gates.py [--table local_phase|dist_phase]
+    python benchmarks/check_gates.py --gates path/to/gates.json
+
+Exits non-zero (listing every violated gate) on failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_GATES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "gates.json")
+
+
+def metric_value(record: dict, spec):
+    """Resolve a metric spec against one workload record.
+
+    A list spec means "best of the present candidates" (e.g. a workload may
+    carry a fused variant or not); a string spec is a dotted path with
+    ``[i]`` list indexing.  Returns None when the path is absent.
+    """
+    if isinstance(spec, list):
+        vals = [v for v in (metric_value(record, s) for s in spec)
+                if v is not None]
+        return max(vals) if vals else None
+    cur = record
+    for part in spec.replace("]", "").replace("[", ".").split("."):
+        if isinstance(cur, list):
+            i = int(part)
+            cur = cur[i] if 0 <= i < len(cur) else None
+        elif isinstance(cur, dict):
+            cur = cur.get(part)
+        else:
+            return None
+        if cur is None:
+            return None
+    return cur
+
+
+def check_table(name: str, cfg: dict, root: str = REPO_ROOT) -> list[str]:
+    """Apply one table's gates; returns human-readable failure strings."""
+    path = os.path.join(root, cfg["file"])
+    if not os.path.exists(path):
+        return [f"{name}: benchmark output {cfg['file']} missing "
+                f"(run `python -m benchmarks.run --fast --table {name}`)"]
+    with open(path) as f:
+        workloads = json.load(f)["workloads"]
+    failures = []
+    for gate in cfg["gates"]:
+        names = (sorted(workloads) if gate["workload"] == "*"
+                 else [gate["workload"]])
+        for wl in names:
+            rec = workloads.get(wl)
+            if rec is None:
+                failures.append(f"{name}/{wl}: workload missing from "
+                                f"{cfg['file']}")
+                continue
+            v = metric_value(rec, gate["metric"])
+            tag = (gate["metric"] if isinstance(gate["metric"], str)
+                   else "|".join(gate["metric"]))
+            if v is None:
+                failures.append(f"{name}/{wl}: metric {tag} absent")
+                continue
+            ok = v >= gate["min"]
+            print(f"{'PASS' if ok else 'FAIL'} {name}/{wl} {tag}="
+                  f"{v:.2f} (>= {gate['min']}) — {gate['label']}")
+            if not ok:
+                failures.append(f"{name}/{wl}: {tag}={v:.2f} < "
+                                f"{gate['min']} ({gate['label']})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table", default=None,
+                    help="check a single table (default: every table in the "
+                         "gates spec; a missing BENCH json fails its table)")
+    ap.add_argument("--gates", default=DEFAULT_GATES,
+                    help="path to the gates spec (default: checked-in "
+                         "benchmarks/gates.json)")
+    args = ap.parse_args()
+
+    with open(args.gates) as f:
+        spec = json.load(f)
+    if args.table is not None:
+        if args.table not in spec:
+            print(f"unknown table {args.table!r}; have {sorted(spec)}")
+            return 2
+        spec = {args.table: spec[args.table]}
+
+    failures = []
+    for name, cfg in spec.items():
+        failures += check_table(name, cfg)
+    if failures:
+        print("\nregression gates FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nall regression gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

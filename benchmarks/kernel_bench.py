@@ -37,7 +37,7 @@ def bench_ell_spmv(rows=4096, k=128, n=4096, seed=0) -> list[str]:
     edges = rows * k
     bytes_per_edge = 4 + 4 + 1 + 4          # idx + val + msk + gathered x
     rows_out = []
-    for semiring in ("add_mul", "min_add"):
+    for semiring in ("add_mul", "min_add", "max_add", "min_mul", "max_min"):
         t_ref = _time(jax.jit(lambda *a: ell_spmv_ref(*a, semiring=semiring)),
                       idx, val, msk, x)
         t_pal = _time(lambda *a: ell_spmv(*a, semiring=semiring), idx, val,

@@ -22,10 +22,18 @@ The pagerank_skew workload adds hub destinations so the sliced-ELL row
 binning engages (2+ degree bins) — the regime that used to bail out to
 dense past ``ell_max_slices``.
 
+The ``dist_phase`` table (``bench_dist_phase``) A/Bs the same question one
+level up: a full `make_dist_hybrid_step` global iteration (exchange ->
+global phase -> local convergence loop) under a fake multi-device mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``), dense seed path
+vs the now-default kernel path, with ``collect_metrics=True`` riding the
+ELL tiles.  Emits BENCH_dist_phase.json.
+
 Emits BENCH_local_phase.json (repo root by default) so the perf trajectory
 is tracked per-PR, and returns harness CSV rows.
 
     PYTHONPATH=src python -m benchmarks.local_phase_bench [--out PATH]
+    PYTHONPATH=src python -m benchmarks.run --fast --table dist_phase
 """
 
 from __future__ import annotations
@@ -43,6 +51,7 @@ import jax.numpy as jnp
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_local_phase.json")
+DIST_OUT = os.path.join(REPO_ROOT, "BENCH_dist_phase.json")
 
 
 def _time_us(fn, *args, warmup=3, iters=20):
@@ -56,14 +65,12 @@ def _time_us(fn, *args, warmup=3, iters=20):
     return float(np.median(ts) * 1e6)
 
 
-def _saturated_state(graph, prog, vdata, payload_value):
-    """EngineState with a full frontier: every vertex sent last step, has
-    one pending message, and the halo table was filled by a real exchange —
-    the steady-state shape of a busy iteration."""
-    from repro.core.engine_hybrid import init_hybrid
+def _saturate(graph, prog, es, payload_value):
+    """Fill the frontier: every vertex sent last step, has one pending
+    message, and the halo table was filled by a real exchange — the
+    steady-state shape of a busy iteration."""
     from repro.core.runtime import exchange
 
-    es = init_hybrid(graph, prog, vdata)
     vm = graph.vertex_mask
     pending = {}
     for ch in prog.channels:
@@ -72,6 +79,13 @@ def _saturated_state(graph, prog, vdata, payload_value):
     es = dataclasses.replace(es, send=vm, pending=pending,
                              export_out=es.out, export_send=vm)
     return exchange(graph, es)
+
+
+def _saturated_state(graph, prog, vdata, payload_value):
+    from repro.core.engine_hybrid import init_hybrid
+
+    return _saturate(graph, prog, init_hybrid(graph, prog, vdata),
+                     payload_value)
 
 
 def _pseudo_superstep(graph, prog, vdata, use_ell, collect_metrics):
@@ -220,6 +234,113 @@ def bench_local_phase(out_path: str = DEFAULT_OUT) -> dict:
         with open(out_path, "w") as f:
             json.dump(results, f, indent=1)
     return results
+
+
+# ---------------------------------------------------------------------------
+# dist_phase: the distributed hybrid step under a fake multi-device mesh
+# ---------------------------------------------------------------------------
+
+def _dist_step(graph, prog, mesh, axes, payload_value, use_ell,
+               collect_metrics):
+    """Jitted sharded (graph, es) -> es distributed step + its operands."""
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.core.distributed import (_es_specs, make_dist_hybrid_step,
+                                        shard0_specs)
+    from repro.core.engine_hybrid import init_hybrid
+
+    step = make_dist_hybrid_step(prog, mesh, axes=axes, use_ell=use_ell,
+                                 collect_metrics=collect_metrics)
+    es = init_hybrid(graph, prog, None, use_ell=use_ell,
+                     collect_metrics=collect_metrics)
+    es = _saturate(graph, prog, es, payload_value)
+    gs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      shard0_specs(graph, axes))
+    ess = jax.tree.map(lambda s: NamedSharding(mesh, s), _es_specs(es, axes))
+    graph_d = jax.device_put(graph, gs)
+    es_d = jax.device_put(es, ess)
+    return jax.jit(step, in_shardings=(gs, ess)), graph_d, es_d
+
+
+def bench_dist_phase(out_path: str = DIST_OUT, fast: bool = True) -> dict:
+    """A/B one full distributed global iteration (the `make_dist_hybrid_step`
+    jittable), dense seed path vs the default kernel path, on a mesh over
+    every available device.  Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (benchmarks.run
+    sets it for ``--table dist_phase``); the partition axis shards one
+    partition per device."""
+    import jax
+
+    from repro.core import bfs_partition, build_partitioned_graph
+    from repro.core.apps import SSSP, IncrementalPageRank
+    from repro.core.apps.pagerank import pagerank_edge_weights
+    from repro.data.graphs import grid_graph, rmat_graph
+
+    n_dev = len(jax.devices())
+    assert n_dev >= 2 and n_dev % 2 == 0, \
+        f"dist_phase needs a multi-device mesh, got {n_dev} devices " \
+        "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+    axes = ("data", "model")
+    mesh = jax.make_mesh((2, n_dev // 2), axes)
+
+    results: dict = {"meta": {"backend": jax.default_backend(),
+                              "devices": n_dev,
+                              "mesh": [2, n_dev // 2],
+                              "mode": "interpret" if
+                              jax.default_backend() != "tpu" else "mosaic"},
+                     "workloads": {}}
+
+    n_pr = 1500 if fast else 4000
+    edges, n = rmat_graph(n_pr, avg_degree=8, seed=1)
+    w = pagerank_edge_weights(edges, n)
+    part = bfs_partition(edges, n, n_dev, seed=1)
+    g_pr = build_partitioned_graph(edges, n, part, weights=w)
+
+    rc = (8, 110) if fast else (8, 300)
+    edges, w, n = grid_graph(*rc, seed=0)
+    part = bfs_partition(edges, n, n_dev, seed=0)
+    g_ss = build_partitioned_graph(edges, n, part, weights=w)
+
+    for name, graph, prog, payload in (
+            ("pagerank", g_pr, IncrementalPageRank(tolerance=1e-4), 0.01),
+            ("sssp", g_ss, SSSP(source=0), 1.0)):
+        rec = {"graph": graph.shape_summary,
+               "bins": [len(graph.local_ell), len(graph.remote_ell)]}
+        variants = {
+            # the seed behavior: dense gather/segment everywhere
+            "dense": dict(use_ell=False, collect_metrics=True),
+            # the new default: kernel path, counters riding the tiles
+            "ell": dict(use_ell=True, collect_metrics=True),
+            # the perf configuration: kernel path, accounting dropped
+            "ell_nometrics": dict(use_ell=True, collect_metrics=False),
+        }
+        for vname, kw in variants.items():
+            step, graph_d, es_d = _dist_step(graph, prog, mesh, axes,
+                                             payload, **kw)
+            rec[f"{vname}_us"] = _time_us(step, graph_d, es_d,
+                                          warmup=2, iters=10)
+        rec["speedup_ell"] = rec["dense_us"] / rec["ell_us"]
+        rec["speedup_ell_nometrics"] = rec["dense_us"] / rec["ell_nometrics_us"]
+        results["workloads"][name] = rec
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def dist_csv_rows(results: dict) -> list[str]:
+    rows = []
+    mesh = "x".join(map(str, results["meta"]["mesh"]))
+    for name, r in results["workloads"].items():
+        meta = f"mesh={mesh};bins={r['bins']};graph={r['graph']}"
+        for variant in ("dense", "ell", "ell_nometrics"):
+            sp = {"dense": 1.0, "ell": r["speedup_ell"],
+                  "ell_nometrics": r["speedup_ell_nometrics"]}[variant]
+            rows.append(f"dist_phase/{name}/{variant},"
+                        f"{r[f'{variant}_us']:.0f},speedup={sp:.2f};{meta}")
+    return rows
 
 
 def csv_rows(results: dict) -> list[str]:

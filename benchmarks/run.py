@@ -22,8 +22,16 @@ def main() -> None:
                     help="smaller graphs (CI-sized)")
     ap.add_argument("--table", default=None,
                     help="run a single table: sssp|pagerank|bm|giraphpp|"
-                         "kernels|local_phase|roofline")
+                         "kernels|local_phase|dist_phase|roofline")
     args = ap.parse_args()
+
+    if args.table == "dist_phase":
+        # must land before the first backend touch: the distributed A/B
+        # needs a multi-device mesh, faked on CPU hosts.  Explicit-only
+        # (not part of the default sweep) so the env override never leaks
+        # into the single-device tables.
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
     from benchmarks import kernel_bench, local_phase_bench, paper_tables
 
@@ -56,6 +64,9 @@ def main() -> None:
         rows += kernel_bench.bench_fused_min_step()
     if want("local_phase"):
         rows += local_phase_bench.csv_rows(local_phase_bench.bench_local_phase())
+    if args.table == "dist_phase":
+        rows += local_phase_bench.dist_csv_rows(
+            local_phase_bench.bench_dist_phase(fast=args.fast))
     if want("roofline"):
         rows += roofline_rows()
 

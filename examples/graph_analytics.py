@@ -1,6 +1,7 @@
-"""Graph-analytics walkthrough: all four vertex programs (SSSP, incremental
-PageRank, WCC, bipartite matching) on the hybrid engine, with the Pallas
-ELL-SpMV kernel shown as the local-phase hot-loop equivalent.
+"""Graph-analytics walkthrough: every vertex program (SSSP, incremental
+PageRank, WCC, widest paths, most-likely random walks, bipartite matching)
+on the hybrid engine, with the Pallas ELL-SpMV kernel shown as the
+local-phase hot-loop equivalent.
 
     PYTHONPATH=src python examples/graph_analytics.py
 """
@@ -14,8 +15,10 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp
 
 from repro.core import bfs_partition, build_partitioned_graph, run_hybrid
-from repro.core.apps import SSSP, WCC, BipartiteMatching, IncrementalPageRank
+from repro.core.apps import (SSSP, WCC, BipartiteMatching,
+                             IncrementalPageRank, RandomWalk, WidestPath)
 from repro.core.apps.pagerank import pagerank_edge_weights
+from repro.core.apps.random_walk import random_walk_edge_weights
 from repro.data.graphs import (bipartite_graph, grid_graph, rmat_graph,
                                symmetrize)
 
@@ -48,6 +51,29 @@ def main():
     gid = np.asarray(g.vertex_gid)
     ncomp = len(np.unique(labels[gid >= 0]))
     print(f"WCC: {iters} global iterations, {ncomp} components")
+
+    # ---- widest (bottleneck-capacity) paths -----------------------------
+    rng = np.random.RandomState(4)
+    caps = rng.uniform(1.0, 10.0, size=len(edges)).astype(np.float32)
+    g = build_partitioned_graph(edges, n, bfs_partition(edges, n, 6, seed=1),
+                                weights=caps)
+    es, iters = run_hybrid(g, WidestPath(source=0))
+    cap = np.asarray(es.state["cap"])
+    reach = np.isfinite(cap)              # source sits at +inf, padding at -inf
+    print(f"WidestPath: {iters} global iterations, best bottleneck "
+          f"{cap[reach].max():.2f} over {int(reach.sum())} "
+          f"reachable slots (max_min semiring)")
+
+    # ---- most-likely absorbing random walk ------------------------------
+    wrw = random_walk_edge_weights(edges, n, mode="odds")
+    g = build_partitioned_graph(edges, n, bfs_partition(edges, n, 6, seed=1),
+                                weights=wrw)
+    prog = RandomWalk(source=0, mode="odds")
+    es, iters = run_hybrid(g, prog)
+    probs = np.asarray(prog.probability(es.state["mass"]))
+    print(f"RandomWalk: {iters} global iterations, most-likely-walk mass "
+          f"median {np.median(probs[probs > 0]):.2e} (min_mul semiring; "
+          f"mode='logprob' runs the same closure over max_add)")
 
     # ---- bipartite matching ---------------------------------------------
     edges, nl, n = bipartite_graph(300, 260, avg_degree=3, seed=3)

@@ -2,5 +2,8 @@ from repro.core.apps.sssp import SSSP
 from repro.core.apps.pagerank import IncrementalPageRank
 from repro.core.apps.wcc import WCC
 from repro.core.apps.bipartite_matching import BipartiteMatching
+from repro.core.apps.widest_path import WidestPath
+from repro.core.apps.random_walk import RandomWalk
 
-__all__ = ["SSSP", "IncrementalPageRank", "WCC", "BipartiteMatching"]
+__all__ = ["SSSP", "IncrementalPageRank", "WCC", "BipartiteMatching",
+           "WidestPath", "RandomWalk"]

@@ -1,0 +1,111 @@
+"""Most-likely absorbing random walk: per-vertex best-path probability mass.
+
+A walker starts at ``source`` and steps to a uniformly random out-neighbour;
+the probability of one particular walk is the product of its step
+probabilities ``p(u -> v) = 1 / out_degree(u)``.  Each vertex computes the
+probability of the *most likely* walk reaching it — the Viterbi-style
+fixed point ``P[v] = max over in-edges of P[u] * p(u -> v)`` — which is the
+(max, *) closure.  Two isomorphic monotone formulations exercise both
+dormant kernel semirings; :func:`random_walk_edge_weights` builds the
+matching edge-weight convention host-side (so the device hot loop is pure
+⊗ arithmetic — no runtime log, whose vectorized lowering is not
+bit-deterministic across array shapes):
+
+  * ``mode='odds'``    — weights ``w = out_degree(src)`` (≥ 1); state is
+    the walk's inverse probability ``1/P = Π w``; cycles multiply by ≥ 1,
+    so the *minimum* over walks is the fixed point: the (min, *) semiring
+    (``min_mul``).
+  * ``mode='logprob'`` — weights ``w = log p = -log out_degree(src)``
+    (≤ 0); state is ``log P = Σ w``; the *maximum* over walks is the fixed
+    point: the (max, +) semiring (``max_add``).
+
+Both are adopt-if-better monotone programs (SSSP with the algebra swapped),
+so boundary vertices join local phases and the whole local phase fuses
+through the generalized `min_step` kernel.  ``probability`` converts either
+state back to P for comparison against the oracle (1 at the source,
+0 where unreachable).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vertex_program import Channel, StepInfo, VertexProgram
+
+INF = jnp.float32(jnp.inf)
+
+
+class RandomWalk(VertexProgram):
+    boundary_participates = True
+    # single min/min_mul (or max/max_add) channel, out == state,
+    # adopt-if-better apply, never self-activating, keep-latest export
+    fused_kernel = "min_step"
+
+    def __init__(self, source: int, mode: str = "odds"):
+        if mode not in ("odds", "logprob"):  # pragma: no cover
+            raise ValueError(mode)
+        self.source = source
+        self.mode = mode
+        if mode == "odds":
+            self.channels = (Channel("mass", "min", ((jnp.float32, jnp.inf),),
+                                     semiring="min_mul"),)
+        else:
+            self.channels = (Channel("mass", "max", ((jnp.float32, -jnp.inf),),
+                                     semiring="max_add"),)
+
+    @property
+    def _ident(self):
+        return INF if self.mode == "odds" else -INF
+
+    def init(self, gid, vmask, vdata):
+        is_src = gid == self.source
+        # odds: 1/P = 1 at the source; logprob: log P = 0
+        start = jnp.float32(1.0 if self.mode == "odds" else 0.0)
+        mass = jnp.where(is_src, start, self._ident).astype(jnp.float32)
+        state = {"mass": mass}
+        out = {"mass": mass}
+        send = jnp.logical_and(is_src, vmask)
+        active = jnp.zeros_like(vmask)          # voteToHalt()
+        return state, out, send, active
+
+    def emit(self, ch, out_src, w, src_gid, dst_gid):
+        # the graph carries the mode's weight convention (see module doc)
+        if self.mode == "odds":
+            msg = out_src["mass"] * w
+        else:
+            msg = out_src["mass"] + w
+        return (msg,), jnp.ones(w.shape, bool)
+
+    def ell_payload(self, ch, out, send):
+        # message = mass[src] ⊗ edge_val; non-senders take the ⊕ identity
+        return jnp.where(send, out["mass"], self._ident)
+
+    def apply(self, state, inbox, gid, vmask, vdata, info: StepInfo):
+        (msg,), has = inbox["mass"]
+        masked = jnp.where(has, msg, self._ident)
+        if self.mode == "odds":
+            new = jnp.minimum(state["mass"], masked)
+            send = new < state["mass"]
+        else:
+            new = jnp.maximum(state["mass"], masked)
+            send = new > state["mass"]
+        state = {"mass": new}
+        return state, {"mass": new}, send, jnp.zeros_like(send)
+
+    def probability(self, mass):
+        """Best-walk probability P from either state convention."""
+        if self.mode == "odds":
+            return jnp.where(jnp.isfinite(mass), 1.0 / mass, 0.0)
+        return jnp.where(jnp.isfinite(mass), jnp.exp(mass), 0.0)
+
+
+def random_walk_edge_weights(edges, n_vertices, mode: str = "odds"):
+    """Uniform-transition edge weights in the mode's convention: inverse
+    step probability ``out_degree(src)`` for 'odds' (≥ 1, so the min_mul
+    closure is monotone), ``-log out_degree(src)`` = log p for 'logprob'
+    (≤ 0, so the max_add closure is monotone).  Computed host-side so the
+    device hot loop never evaluates a transcendental."""
+    deg = np.bincount(edges[:, 0], minlength=n_vertices).astype(np.float32)
+    w = deg[edges[:, 0]]
+    return w if mode == "odds" else -np.log(w)

@@ -1,0 +1,58 @@
+"""Single-source widest (maximum-capacity / bottleneck) paths.
+
+The max-min twin of SSSP: the capacity of a path is the *minimum* capacity
+of its edges, and every vertex keeps the *maximum* such bottleneck over all
+paths from the source — the (max, min) semiring.  A vertex raises its
+capacity and re-sends only when it improves; always votes to halt.
+Monotone (max-combine), so boundary vertices participate in local phases
+and the whole local phase fuses through the generalized `min_step` kernel
+with ⊕ = max, ⊗ = min.
+
+This is the network-capacity member of the paper's incremental family
+(§6.1's SSSP argument applies verbatim with the order flipped): maximum
+bandwidth routes, bottleneck throughput, percolation thresholds.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.vertex_program import Channel, StepInfo, VertexProgram
+
+NINF = jnp.float32(-jnp.inf)
+
+
+class WidestPath(VertexProgram):
+    channels = (Channel("cap", "max", ((jnp.float32, -jnp.inf),),
+                        semiring="max_min"),)
+    boundary_participates = True
+    # single max/max_min channel, out == state, adopt-if-better apply,
+    # never self-activating, keep-latest export: the min_step contract
+    fused_kernel = "min_step"
+
+    def __init__(self, source: int):
+        self.source = source
+
+    def init(self, gid, vmask, vdata):
+        is_src = gid == self.source
+        cap = jnp.where(is_src, jnp.inf, NINF).astype(jnp.float32)
+        state = {"cap": cap}
+        out = {"cap": cap}
+        send = jnp.logical_and(is_src, vmask)
+        active = jnp.zeros_like(vmask)          # voteToHalt()
+        return state, out, send, active
+
+    def emit(self, ch, out_src, w, src_gid, dst_gid):
+        # path capacity through this edge: bottleneck of sender and edge
+        return (jnp.minimum(out_src["cap"], w),), jnp.ones(w.shape, bool)
+
+    def ell_payload(self, ch, out, send):
+        # message = min(cap[src], w); non-senders flatten to -inf (max id.)
+        return jnp.where(send, out["cap"], NINF)
+
+    def apply(self, state, inbox, gid, vmask, vdata, info: StepInfo):
+        (msg,), has = inbox["cap"]
+        new = jnp.maximum(state["cap"], jnp.where(has, msg, NINF))
+        send = new > state["cap"]
+        state = {"cap": new}
+        return state, {"cap": new}, send, jnp.zeros_like(send)

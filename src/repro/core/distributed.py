@@ -35,7 +35,7 @@ def shard0_specs(tree, axes) -> Any:
 def make_dist_hybrid_step(prog: VertexProgram, mesh: Mesh,
                           axes: tuple = AXES, vdata: Any = None,
                           max_local_steps: int = 10_000,
-                          wire_dtype=None, use_ell: bool = False,
+                          wire_dtype=None, use_ell: bool = True,
                           collect_metrics: bool = True):
     """Returns a jittable step: (graph, es) -> es, running one global
     iteration on a mesh where dim 0 of every array is the partition axis.
@@ -43,10 +43,12 @@ def make_dist_hybrid_step(prog: VertexProgram, mesh: Mesh,
     ``use_ell``/``collect_metrics`` select the kernel-backed local phase
     (the ELL tiles shard on dim 0 like every other partition-major array).
 
-    Unlike the single-host engines, ``use_ell`` defaults to False here: the
-    shard_map kernel path is only validated in interpret mode (see
-    test_distributed_hybrid_kernel_path_matches_host); flip the default
-    once it is exercised on real TPU Mosaic."""
+    ``use_ell=True`` is the default here exactly as on the single-host
+    engines: the shard_map block path runs the same fused/ELL kernels on
+    block-local partition slices (``runtime.slice_flat`` re-offsets), the
+    multi-device CI matrix pins it bit-exact against the host dense run,
+    and ``collect_metrics=True`` costs no dense fallback — remote group
+    accounting rides the ELL tiles' per-slot group ids."""
 
     def gather_table(x):
         # local (Pb, X, ...) -> global (P, X, ...): the one exchange
@@ -121,6 +123,7 @@ def block_graph_shapes(n_partitions: int, vp: int, ep: int, xp: int, hp: int,
             idx=f((n_partitions, vp, kl), i32),
             val=f((n_partitions, vp, kl), f32),
             msk=f((n_partitions, vp, kl), b),
+            grp=f((n_partitions, vp, kl), i32),
             flat_rows=f((n_partitions * vp,), i32),
             flat_idx=f((n_partitions * vp, kl), i32),
             nb=vp, kb=kl, lo=0, dense=True, stride=stride,

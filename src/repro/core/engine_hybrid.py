@@ -64,6 +64,8 @@ def _fused_local_kernel(graph: PartitionedGraph, prog: VertexProgram,
     """Static gate for the fully-fused local phase: the kernel name
     ('pr_step' | 'min_step') when the program declares one and the graph
     carries a dense-base sliced-ELL layout, else None (generic loop)."""
+    from repro.kernels.common import MONOTONE_SEMIRINGS
+
     if not (use_ell and graph.has_ell and max_local_steps > 0
             and len(prog.channels) == 1 and prog.boundary_participates
             and graph.local_ell[0].dense):
@@ -71,7 +73,10 @@ def _fused_local_kernel(graph: PartitionedGraph, prog: VertexProgram,
     kern = getattr(prog, "fused_kernel", None)
     if kern == "min_step":
         ch = prog.channels[0]
-        if ch.semiring != "min_add":
+        # any monotone semiring fuses, provided the channel's combiner is
+        # that semiring's ⊕ (the kernel's adopt-if-better state update)
+        if (ch.semiring not in MONOTONE_SEMIRINGS
+                or ch.combiner != ch.semiring.split("_")[0]):
             return None
         # unlike plain ELL delivery (only *messages* ride float32, judged
         # per bin), the fused loop keeps the whole vertex state in float32 —
@@ -90,7 +95,7 @@ def _spill_extra(graph: PartitionedGraph, prog, ch, slices, views, out_d,
     if len(slices) == 1:
         return None
     from repro.core.runtime import ell_combine_bins
-    from repro.kernels.ell_spmv.ell_spmv import SEMIRINGS
+    from repro.kernels.common import SEMIRINGS
 
     _, _, ident = SEMIRINGS[ch.semiring]
     x = prog.ell_payload(ch, out_d, send).reshape(-1).astype(jnp.float32)
@@ -144,7 +149,7 @@ def fused_step_fn(graph: PartitionedGraph, prog: VertexProgram, kind: str,
                                  {ch.name: x}, send, p, interpret)
             xn, d, s = fused_min_step(
                 idx, val, msk, x.reshape(-1), send.reshape(-1), extra=extra,
-                interpret=interpret)
+                semiring=ch.semiring, interpret=interpret)
             return xn.reshape(p, vp), d.reshape(p, vp), s.reshape(p, vp)
     else:  # pragma: no cover
         raise ValueError(kind)
@@ -264,27 +269,33 @@ def _fused_min_local_phase(
     collect_metrics: bool,
 ) -> EngineState:
     """Local phase fused through the `min_step` Pallas kernel — the
-    min-semiring twin of :func:`_fused_pr_local_phase` serving SSSP and WCC.
+    monotone-semiring twin of :func:`_fused_pr_local_phase` serving SSSP,
+    WCC, widest-path and random-walk style adopt-if-better programs.
 
     One kernel call performs deliver(pseudo-superstep s) + apply(s+1): the
-    relax chain gather -> segment-min -> min -> compare collapses into a
+    relax chain gather -> segment-⊕ -> ⊕ -> compare collapses into a
     single VMEM-resident pass per step, with the same cutoff-rollback
     semantics as the PageRank fusion.
 
     Kernel contract (asserted by ``prog.fused_kernel == 'min_step'``):
-    single single-component 'min' channel with semiring 'min_add' whose
-    state, out and channel share one name and one value (``out == state``),
-    always-valid emit ``x[src] ⊗ edge_val`` (``ell_payload`` /
-    ``ell_edge_values`` define the factorization), apply is
-    ``new = min(state, msg); send = new < state``, never self-activating,
-    keep-latest SourceCombine (the default ``accumulate_export``), boundary
-    vertices participating.  The whole state rides the loop as float32 and
-    is cast back under the vertex mask on exit (the gate in
-    ``_fused_local_kernel`` guarantees integer states stay exact).
+    single single-component channel whose combiner is the ⊕ of its monotone
+    semiring (min_add/min_mul/max_add/max_min) and whose state, out and
+    channel share one name and one value (``out == state``), always-valid
+    emit ``x[src] ⊗ edge_val`` (``ell_payload`` / ``ell_edge_values`` define
+    the factorization), apply is ``new = state ⊕ msg; send = new improves
+    state``, never self-activating, keep-latest SourceCombine (the default
+    ``accumulate_export``), boundary vertices participating.  The whole
+    state rides the loop as float32 and is cast back under the vertex mask
+    on exit (the gate in ``_fused_local_kernel`` guarantees integer states
+    stay exact).
     """
+    from repro.kernels.common import SEMIRINGS, semiring_improves
+
     ch = prog.channels[0]
     name = ch.name
     dt, ident = ch.components[0]
+    combine, _, sr_ident = SEMIRINGS[ch.semiring]
+    improves = semiring_improves(ch.semiring)
     p = es.send.shape[0]
     kstep, slices, views = fused_step_fn(graph, prog, "min_step", p)
     vmask = graph.vertex_mask
@@ -292,11 +303,11 @@ def _fused_min_local_phase(
     (m0,), has0 = es.pending[name]
     x0 = es.state[name].astype(jnp.float32)
     eo0 = es.export_out[name]
-    # bootstrap: apply_1 consumes the inbox (payload is +inf wherever ~has,
-    # the min identity, so the mins need no explicit compute mask)
-    m0f = jnp.where(has0, m0.astype(jnp.float32), jnp.inf)
-    x1 = jnp.minimum(x0, m0f)
-    send1 = x1 < x0
+    # bootstrap: apply_1 consumes the inbox (payload is the ⊕-identity
+    # wherever ~has, so the combines need no explicit compute mask)
+    m0f = jnp.where(has0, m0.astype(jnp.float32), sr_ident)
+    x1 = combine(x0, m0f)
+    send1 = improves(x1, x0)
     eo_f = jnp.where(send1, x1, eo0.astype(jnp.float32))
     esend1 = jnp.logical_or(es.export_send, send1)
     c0 = es.counters
@@ -318,7 +329,7 @@ def _fused_min_local_phase(
             net_local = net_local + jnp.sum(has_n).astype(jnp.int32)
             mem = mem + mem_inc
         else:
-            has_n = d_n < jnp.inf      # finite-sender invariant
+            has_n = improves(d_n, sr_ident)   # some sender beat the identity
         eo = jnp.where(send_n, x_n, eo)
         esend = jnp.logical_or(esend, send_n)
         running = jnp.any(has_n, axis=1)

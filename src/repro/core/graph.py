@@ -69,6 +69,11 @@ class EllSlice:
     idx: jax.Array        # (P, Nb, Kb) int32 — source slot, or Vp + halo slot
     val: jax.Array        # (P, Nb, Kb) float32 — edge weight
     msk: jax.Array        # (P, Nb, Kb) bool — slot occupancy
+    # per-slot message-accounting group id (the (destination, source
+    # partition) Combine() granularity of `PartitionedGraph.edge_group`),
+    # 0 on padding — lets `collect_metrics=True` counters ride the tiles
+    # instead of re-reducing the dense edge arrays
+    grp: jax.Array        # (P, Nb, Kb) int32
     flat_rows: jax.Array  # (P*Nb,) int32 — p*Vp + row, P*Vp sentinel
     flat_idx: jax.Array   # (P*Nb, Kb) int32 — idx + p*stride
     nb: int = dataclasses.field(metadata=dict(static=True))
@@ -432,7 +437,8 @@ def _build_ell_slices(per_p, sel_key: str, negate: bool, P: int, Vp: int,
         if negate:
             sel = np.logical_not(sel)
         e = dict(src=per_p[p]["src_enc"][sel], dst=per_p[p]["dst_slot"][sel],
-                 w=per_p[p]["w"][sel], gid=per_p[p]["src_gid"][sel])
+                 w=per_p[p]["w"][sel], gid=per_p[p]["src_gid"][sel],
+                 grp=per_p[p]["group"][sel])
         if len(e["dst"]):
             kmax = max(kmax, int(np.bincount(e["dst"], minlength=Vp).max()))
         # per-edge rank within its destination run — computed once, handed
@@ -449,7 +455,8 @@ def _build_ell_slices(per_p, sel_key: str, negate: bool, P: int, Vp: int,
         return ()
 
     packs = [sliced_ell_pack_numpy(e["src"], e["dst"], e["w"], Vp, widths,
-                                   order_rank=(e["order"], e["rank"]))
+                                   order_rank=(e["order"], e["rank"]),
+                                   extras=(e["grp"],))
              for e in picks]
     slices = []
     for b, (lo, kb) in enumerate(widths):
@@ -462,22 +469,25 @@ def _build_ell_slices(per_p, sel_key: str, negate: bool, P: int, Vp: int,
         idx = np.zeros((P, Nb, kb), dtype=np.int32)
         val = np.zeros((P, Nb, kb), dtype=np.float32)
         msk = np.zeros((P, Nb, kb), dtype=bool)
+        grp = np.zeros((P, Nb, kb), dtype=np.int32)
         flat_rows = np.full((P, Nb), P * Vp, dtype=np.int32)
         bound = -1
         for p in range(P):
-            rows_b, idx_b, val_b, msk_b = packs[p][b]
+            rows_b, idx_b, val_b, msk_b, grp_b = packs[p][b]
             if rows_b is None:                      # dense base bin
                 rows[p] = np.arange(Vp, dtype=np.int32)
             else:
                 rows[p, : len(rows_b)] = rows_b
             n = idx_b.shape[0]
             idx[p, :n], val[p, :n], msk[p, :n] = idx_b, val_b, msk_b
+            grp[p, :n] = grp_b
             flat_rows[p] = np.where(rows[p] < Vp, p * Vp + rows[p], P * Vp)
             bound = max(bound, _bin_src_bound(picks[p], lo, kb))
         flat_idx = idx + (np.arange(P, dtype=np.int32) * stride)[:, None, None]
         slices.append(EllSlice(
             rows=jnp.asarray(rows), idx=jnp.asarray(idx),
             val=jnp.asarray(val), msk=jnp.asarray(msk),
+            grp=jnp.asarray(grp),
             flat_rows=jnp.asarray(flat_rows.reshape(-1)),
             flat_idx=jnp.asarray(flat_idx.reshape(P * Nb, kb)),
             nb=int(Nb), kb=int(kb), lo=int(lo), dense=bool(dense),

@@ -33,7 +33,7 @@ from repro.core.vertex_program import (Channel, StepInfo, VertexProgram,
 __all__ = ["Counters", "EngineState", "init_state", "exchange", "deliver",
            "apply_phase", "merge_inbox", "quiescent", "gather_per_partition",
            "ell_channels", "ell_f32_exact", "ell_slices", "slice_flat",
-           "ell_send_accounting"]
+           "ell_send_accounting", "ell_group_accounting"]
 
 
 @jax.tree_util.register_dataclass
@@ -240,6 +240,7 @@ _SCATTER = {
     "min_add": lambda y, r, v: y.at[r].min(v, mode="drop"),
     "min_mul": lambda y, r, v: y.at[r].min(v, mode="drop"),
     "max_add": lambda y, r, v: y.at[r].max(v, mode="drop"),
+    "max_min": lambda y, r, v: y.at[r].max(v, mode="drop"),
 }
 
 
@@ -249,7 +250,7 @@ def ell_combine_bins(prog, ch, slices, views, x, y, p: int, interpret: bool):
     via semiring scatter over their row lists.  The single source of truth
     for `deliver`'s kernel path and the fused local phases' spill operand."""
     from repro.kernels.ell_spmv import ell_spmv
-    from repro.kernels.ell_spmv.ell_spmv import SEMIRINGS
+    from repro.kernels.common import SEMIRINGS
 
     combine, _, _ = SEMIRINGS[ch.semiring]
     for s, (rows, idx, msk) in zip(slices, views):
@@ -283,6 +284,25 @@ def ell_send_accounting(graph: PartitionedGraph, slices, views, send_flat,
     return has.reshape(p, graph.vp), mem
 
 
+def ell_group_accounting(graph: PartitionedGraph, slices, views, send_flat,
+                         p: int) -> jax.Array:
+    """Combined-message count at the paper's Combine() granularity — one per
+    (destination vertex, source partition) group with a sending edge — read
+    straight off the ELL tiles via the per-slot ``grp`` ids.  This is the
+    tile-resident replacement for the dense per-group segment reduction:
+    exact parity, because the tiles hold exactly the delivering edge set and
+    ``grp`` carries the same ids as ``PartitionedGraph.edge_group``.  Padded
+    slots contribute False updates (their grp id is an arbitrary in-range
+    slot), which a boolean ``max`` scatter ignores."""
+    offs = (jnp.arange(p, dtype=jnp.int32) * graph.gp)[:, None, None]
+    sent = jnp.zeros((p * graph.gp,), bool)
+    for s, (_, idx, msk) in zip(slices, views):
+        tile = jnp.logical_and(send_flat[idx], msk)
+        grp = (s.grp + offs).reshape(tile.shape)
+        sent = sent.at[grp].max(tile)
+    return jnp.sum(sent).astype(jnp.int32)
+
+
 def _ell_deliver(graph, prog, chs, es, pending, delivered, collect_metrics,
                  edges: str):
     """Kernel-backed delivery for semiring channels along ``edges``.
@@ -295,8 +315,7 @@ def _ell_deliver(graph, prog, chs, es, pending, delivered, collect_metrics,
     (and, when ``collect_metrics``, the paper counters) come from a cheap
     masked gather of the send flags through the same layout.
     """
-    from repro.kernels.common import default_interpret
-    from repro.kernels.ell_spmv.ell_spmv import SEMIRINGS
+    from repro.kernels.common import SEMIRINGS, default_interpret
 
     p, vp = es.send.shape
     slices = ell_slices(graph, edges)
@@ -337,20 +356,12 @@ def _ell_deliver(graph, prog, chs, es, pending, delivered, collect_metrics,
 
     if collect_metrics and edges == "remote" and chs:
         # remote deliveries count per (source-partition, destination) combine
-        # group, exactly like the dense path's accounting; semiring channels
-        # declare an always-valid emit, so one group reduction over the dense
-        # edge arrays covers every kernel channel identically.
-        send_e = gather_per_partition(send_tab, graph.edge_src)
-        valid = jnp.logical_and(
-            jnp.logical_and(graph.edge_mask,
-                            jnp.logical_not(graph.edge_local)), send_e)
-        grp_sent = jax.vmap(
-            lambda v, g: jax.ops.segment_max(v.astype(jnp.int32), g,
-                                             num_segments=graph.gp)
-        )(valid, graph.edge_group) > 0
-        grp_sent = jnp.logical_and(grp_sent, graph.group_mask)
-        net += len(chs) * jnp.sum(
-            jnp.logical_and(grp_sent, graph.group_remote)).astype(jnp.int32)
+        # group, exactly like the dense path's accounting — but read off the
+        # ELL tiles' per-slot group ids instead of re-reducing the dense edge
+        # arrays; semiring channels declare an always-valid emit, so one
+        # tile pass covers every kernel channel identically.
+        net += len(chs) * ell_group_accounting(graph, slices, views,
+                                               send_flat, p)
 
     return pending, delivered, net, net_local, mem
 

@@ -45,7 +45,8 @@ class Channel:
       expressed without int64 packing.
     components: per-payload-component (dtype, identity) pairs.
     semiring: optional kernel declaration, one of the `ell_spmv` semirings
-      ('add_mul' | 'min_add' | 'max_add' | 'min_mul') or None.  Declaring a
+      ('add_mul' | 'min_add' | 'max_add' | 'min_mul' | 'max_min') or None.
+      Declaring a
       semiring states that this channel's per-edge message factors as
       ``x[src] ⊗ edge_val`` with an always-valid emit, where ``x`` comes
       from :meth:`VertexProgram.ell_payload` (neutralized to the ⊕/⊗

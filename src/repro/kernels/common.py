@@ -1,11 +1,12 @@
-"""Shared ELL kernel plumbing: blocking/grid computation, the
-accumulate-across-K output pattern, backend-dependent interpret default, and
-the vectorized destination-major ELL packer.
+"""Shared ELL kernel plumbing: the semiring table, blocking/grid computation,
+the accumulate-across-K output pattern, backend-dependent interpret default,
+and the vectorized destination-major ELL packer.
 
-Both `ell_spmv` and `pr_step` tile a (R, K) edge array with grid
+Both `ell_spmv` and the fused step kernels tile a (R, K) edge array with grid
 (R/Bm, K/Bk) and revisit the same (Bm,) output block along the K grid axis,
 initializing on the first K step and combining on the rest — the standard TPU
-revisiting-output-block accumulation.  That boilerplate lives here once.
+revisiting-output-block accumulation.  That boilerplate lives here once, as
+does the (⊕, ⊗, identity) table every kernel and dispatch site shares.
 """
 
 from __future__ import annotations
@@ -13,10 +14,38 @@ from __future__ import annotations
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["ell_blocking", "accumulate_k", "default_interpret",
+__all__ = ["SEMIRINGS", "MONOTONE_SEMIRINGS", "semiring_improves",
+           "ell_blocking", "accumulate_k", "default_interpret",
            "ell_pack_numpy", "ell_bin_widths", "sliced_ell_pack_numpy"]
+
+
+# (⊕ combine, ⊗ times, ⊕-identity) per semiring.  The kernels are generic
+# over this table; adding an entry here is all a new semiring needs (plus a
+# `_SCATTER` rule in runtime for its spill bins).
+SEMIRINGS = {
+    "add_mul": (jnp.add, jnp.multiply, 0.0),
+    "min_add": (jnp.minimum, jnp.add, jnp.inf),
+    "max_add": (jnp.maximum, jnp.add, -jnp.inf),
+    "min_mul": (jnp.minimum, jnp.multiply, jnp.inf),
+    "max_min": (jnp.maximum, jnp.minimum, -jnp.inf),
+}
+
+# Semirings whose ⊕ is a selection (min/max) rather than an accumulation:
+# vertex state under these evolves monotonically (new = x ⊕ d_in, re-send on
+# strict improvement), which is exactly the contract the fused `min_step`
+# pseudo-superstep kernel generalizes over.
+MONOTONE_SEMIRINGS = frozenset({"min_add", "min_mul", "max_add", "max_min"})
+
+
+def semiring_improves(semiring: str):
+    """Strict-improvement predicate of a monotone semiring: did ``new``
+    beat ``old`` under ⊕?  (< for the min family, > for the max family.)"""
+    if semiring not in MONOTONE_SEMIRINGS:  # pragma: no cover
+        raise ValueError(f"{semiring} has no improvement direction")
+    return jnp.less if semiring.startswith("min") else jnp.greater
 
 
 def ell_blocking(r: int, kk: int, block_rows: int, block_slices: int):
@@ -112,7 +141,8 @@ def ell_bin_widths(kmax: int, base_slices: int, pad: int,
 def sliced_ell_pack_numpy(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
                           n_rows: int, widths: list[tuple[int, int]],
                           order_rank: tuple[np.ndarray, np.ndarray] | None
-                          = None):
+                          = None,
+                          extras: tuple[np.ndarray, ...] = ()):
     """Pack a destination-major edge set into sliced-ELL degree bins.
 
     ``widths`` comes from :func:`ell_bin_widths`: bin b owns each row's edge
@@ -125,8 +155,12 @@ def sliced_ell_pack_numpy(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
     per-edge rank within its destination run, when the caller has already
     computed them over the same edge set.
 
-    Returns ``[(rows (nb,) int32, idx (nb, kb) int32, val f32, msk bool)]``
-    per bin (``rows`` is None for the dense base bin).
+    ``extras`` are additional per-edge int payloads (e.g. accounting group
+    ids) packed into the same slots, zero on padding; each appends one
+    (nb, kb) int32 array to every bin's tuple.
+
+    Returns ``[(rows (nb,) int32, idx (nb, kb) int32, val f32, msk bool,
+    *extras)]`` per bin (``rows`` is None for the dense base bin).
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
@@ -137,6 +171,7 @@ def sliced_ell_pack_numpy(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
     else:
         order, rank = order_rank
     src_s, dst_s, w_s = src[order], dst[order], w[order]
+    extras_s = tuple(np.asarray(e, dtype=np.int64)[order] for e in extras)
     if rank is None:
         rank = (np.arange(len(dst_s))
                 - np.searchsorted(dst_s, dst_s, side="left"))
@@ -149,21 +184,23 @@ def sliced_ell_pack_numpy(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
         sel = (rank >= lo) & (rank < lo + kb)
         if lo == 0:
             rows = None
-            idx = np.zeros((n_rows, kb), dtype=np.int32)
-            val = np.zeros((n_rows, kb), dtype=np.float32)
-            msk = np.zeros((n_rows, kb), dtype=bool)
+            nb = n_rows
             r = dst_s[sel]
         else:
             rows = np.nonzero(degree > lo)[0].astype(np.int32)
             row_of = np.zeros(n_rows, dtype=np.int64)
             row_of[rows] = np.arange(len(rows))
-            idx = np.zeros((len(rows), kb), dtype=np.int32)
-            val = np.zeros((len(rows), kb), dtype=np.float32)
-            msk = np.zeros((len(rows), kb), dtype=bool)
+            nb = len(rows)
             r = row_of[dst_s[sel]]
+        idx = np.zeros((nb, kb), dtype=np.int32)
+        val = np.zeros((nb, kb), dtype=np.float32)
+        msk = np.zeros((nb, kb), dtype=bool)
+        ext = tuple(np.zeros((nb, kb), dtype=np.int32) for _ in extras_s)
         s = rank[sel] - lo
         idx[r, s] = src_s[sel]
         val[r, s] = w_s[sel]
         msk[r, s] = True
-        out.append((rows, idx, val, msk))
+        for packed, e in zip(ext, extras_s):
+            packed[r, s] = e[sel]
+        out.append((rows, idx, val, msk) + ext)
     return out

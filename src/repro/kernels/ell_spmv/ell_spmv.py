@@ -14,7 +14,9 @@ and one pseudo-superstep's combine is a blocked reduce
 
     y[r] = ⊕_k  msk[r,k] ? (val[r,k] ⊗ x[idx[r,k]]) : identity(⊕)
 
-over semirings (⊕, ⊗) ∈ {(+,*) PageRank, (min,+) SSSP, (max,+), (min,*)}.
+over semirings (⊕, ⊗) ∈ {(+,*) PageRank, (min,+) SSSP, (max,+) best-score
+paths, (min,*) odds propagation, (max,min) bottleneck capacity} — the shared
+table in `kernels.common.SEMIRINGS`.
 
 Blocking: grid = (R/Bm, K/Bk); each step loads a (Bm, Bk) tile of idx/val/msk
 into VMEM plus the whole source vector x (a graph partition's frontier fits
@@ -33,14 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import accumulate_k, ell_blocking
-
-SEMIRINGS = {
-    "add_mul": (jnp.add, jnp.multiply, 0.0),
-    "min_add": (jnp.minimum, jnp.add, jnp.inf),
-    "max_add": (jnp.maximum, jnp.add, -jnp.inf),
-    "min_mul": (jnp.minimum, jnp.multiply, jnp.inf),
-}
+from repro.kernels.common import SEMIRINGS, accumulate_k, ell_blocking
 
 
 def _kernel(idx_ref, val_ref, msk_ref, x_ref, y_ref, *, semiring: str):

@@ -16,6 +16,6 @@ def ell_spmv_ref(idx, val, msk, x, *, semiring: str = "add_mul") -> jax.Array:
         return jnp.sum(prod, axis=1)
     if semiring in ("min_add", "min_mul"):
         return jnp.min(prod, axis=1)
-    if semiring == "max_add":
+    if semiring in ("max_add", "max_min"):
         return jnp.max(prod, axis=1)
     raise ValueError(semiring)

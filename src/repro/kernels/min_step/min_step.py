@@ -1,18 +1,21 @@
-"""Fused GraphHP pseudo-superstep for min-semiring programs (Pallas).
+"""Fused GraphHP pseudo-superstep for monotone-semiring programs (Pallas).
 
-One local-phase pseudo-superstep of the monotone min-propagation family
-(SSSP's relax loop, WCC's HashMin) is, per partition:
+One local-phase pseudo-superstep of the monotone propagation family — SSSP's
+relax loop (min,+), WCC's HashMin (min,+ over zeroed edges), bottleneck /
+widest paths (max,min), odds or log-likelihood walks ((min,*) / (max,+)) —
+is, per partition:
 
-    d_in[r] = min_k  send[s] ? x[s] ⊗ val[r,k] : +inf,   s = idx[r,k]
-    x'[r]   = min(x[r], d_in[r])
-    send'   = d_in < x          (re-send only on improvement)
+    d_in[r] = ⊕_k  send[s] ? x[s] ⊗ val[r,k] : identity(⊕),   s = idx[r,k]
+    x'[r]   = x[r] ⊕ d_in[r]
+    send'   = d_in improves x      (re-send only on strict improvement)
 
-with ⊗ = + (edge weights for SSSP; zeros for label propagation).  The
-unfused engine path runs gather → segment-min → min → compare as four HLO
-ops with HBM round-trips between them; the local phase iterates this chain
-to per-partition convergence, so fusing it into one VMEM-resident kernel
-removes three HBM round-trips per pseudo-superstep — the min-semiring twin
-of `pr_step`.
+with (⊕, ⊗) any `kernels.common.MONOTONE_SEMIRINGS` entry — ⊕ ∈ {min, max}
+is a selection, so the state update is a monotone adopt-if-better and the
+whole family shares one kernel.  The unfused engine path runs gather →
+segment-⊕ → ⊕ → compare as four HLO ops with HBM round-trips between them;
+the local phase iterates this chain to per-partition convergence, so fusing
+it into one VMEM-resident kernel removes three HBM round-trips per
+pseudo-superstep — the monotone twin of `pr_step`.
 
 ``extra`` carries spill-bin contributions of the sliced-ELL layout (the
 ⊕-partials of the high-degree rows' overflow slots, pre-combined outside)
@@ -30,11 +33,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import accumulate_k, ell_blocking
+from repro.kernels.common import (MONOTONE_SEMIRINGS, SEMIRINGS, accumulate_k,
+                                  ell_blocking, semiring_improves)
 
 
 def _kernel(idx_ref, val_ref, msk_ref, x_ref, send_ref, xrow_ref, extra_ref,
-            acc_ref, x_out_ref, send_out_ref, *, n_kblocks: int):
+            acc_ref, x_out_ref, send_out_ref, *, n_kblocks: int,
+            semiring: str):
+    combine, times, ident = SEMIRINGS[semiring]
+    improves = semiring_improves(semiring)
     k = pl.program_id(1)
 
     idx = idx_ref[...]
@@ -43,35 +50,40 @@ def _kernel(idx_ref, val_ref, msk_ref, x_ref, send_ref, xrow_ref, extra_ref,
     x = x_ref[...]
     send = send_ref[...]
 
-    cand = x[idx] + val
+    cand = times(x[idx], val)
     cand = jnp.where(jnp.logical_and(msk, send[idx]),
-                     cand, jnp.asarray(jnp.inf, cand.dtype))
-    partial = jnp.min(cand, axis=1)
+                     cand, jnp.asarray(ident, cand.dtype))
 
-    accumulate_k(acc_ref, partial, jnp.minimum)
+    partial = cand[:, 0]
+    for j in range(1, cand.shape[1]):       # slice-axis fold, as in ell_spmv
+        partial = combine(partial, cand[:, j])
+
+    accumulate_k(acc_ref, partial, combine)
 
     @pl.when(k == n_kblocks - 1)
     def _epilogue():
-        d_in = jnp.minimum(acc_ref[...], extra_ref[...])
+        d_in = combine(acc_ref[...], extra_ref[...])
         acc_ref[...] = d_in
         xr = xrow_ref[...]
-        x_out_ref[...] = jnp.minimum(xr, d_in)
-        send_out_ref[...] = d_in < xr
+        x_out_ref[...] = combine(xr, d_in)
+        send_out_ref[...] = improves(d_in, xr)
 
 
 def fused_min_step_pallas(idx, val, msk, x, send, xrow, extra, *,
+                          semiring: str = "min_add",
                           block_rows: int = 256, block_slices: int = 128,
                           interpret: bool = True):
     """-> (x', d_in, send').  ``x`` is the (N,) frontier, ``xrow`` the (R,)
     per-row state the epilogue compares against (the same array when rows
     and frontier share the vertex slot space), ``extra`` an (R,) pre-combined
-    spill contribution (+inf where none)."""
+    spill contribution (the ⊕-identity where none)."""
+    assert semiring in MONOTONE_SEMIRINGS, semiring
     r, kk = idx.shape
     bm, bk, nkb, grid = ell_blocking(r, kk, block_rows, block_slices)
     n = x.shape[0]
 
     acc, x_out, send_out = pl.pallas_call(
-        functools.partial(_kernel, n_kblocks=nkb),
+        functools.partial(_kernel, n_kblocks=nkb, semiring=semiring),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),

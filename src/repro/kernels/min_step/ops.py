@@ -1,4 +1,4 @@
-"""Jitted wrapper for the fused min-semiring pseudo-superstep kernel."""
+"""Jitted wrapper for the fused monotone-semiring pseudo-superstep kernel."""
 
 from __future__ import annotations
 
@@ -7,24 +7,29 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import SEMIRINGS
 from repro.kernels.min_step.min_step import fused_min_step_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "block_slices",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=("semiring", "block_rows",
+                                             "block_slices", "interpret"))
 def fused_min_step(idx, val, msk, x, send, xrow=None, extra=None, *,
+                   semiring: str = "min_add",
                    block_rows: int = 256, block_slices: int = 128,
                    interpret: bool = True):
-    """Jitted fused min pseudo-superstep -> (x', d_in, send').
+    """Jitted fused monotone pseudo-superstep -> (x', d_in, send').
 
-    ``xrow`` defaults to ``x`` (rows and frontier share the vertex slot
-    space, the engine case); ``extra`` defaults to +inf (no spill bins).
+    ``semiring`` is any ``MONOTONE_SEMIRINGS`` entry (default the historic
+    'min_add'); ``xrow`` defaults to ``x`` (rows and frontier share the
+    vertex slot space, the engine case); ``extra`` defaults to the
+    ⊕-identity (no spill bins).
     """
     if xrow is None:
         xrow = x
     if extra is None:
-        extra = jnp.full(idx.shape[:1], jnp.inf, x.dtype)
+        _, _, ident = SEMIRINGS[semiring]
+        extra = jnp.full(idx.shape[:1], ident, x.dtype)
     return fused_min_step_pallas(idx, val, msk, x, send, xrow, extra,
-                                 block_rows=block_rows,
+                                 semiring=semiring, block_rows=block_rows,
                                  block_slices=block_slices,
                                  interpret=interpret)

@@ -1,15 +1,21 @@
-"""Pure-jnp oracle for the fused min-semiring pseudo-superstep."""
+"""Pure-jnp oracle for the fused monotone-semiring pseudo-superstep."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.common import SEMIRINGS, semiring_improves
 
-def fused_min_step_ref(idx, val, msk, x, send, xrow=None, extra=None):
+
+def fused_min_step_ref(idx, val, msk, x, send, xrow=None, extra=None, *,
+                       semiring: str = "min_add"):
+    combine, times, ident = SEMIRINGS[semiring]
+    improves = semiring_improves(semiring)
     if xrow is None:
         xrow = x
-    cand = jnp.where(jnp.logical_and(msk, send[idx]), x[idx] + val, jnp.inf)
-    d_in = jnp.min(cand, axis=1)
+    cand = jnp.where(jnp.logical_and(msk, send[idx]), times(x[idx], val),
+                     jnp.asarray(ident, x.dtype))
+    d_in = (jnp.min if semiring.startswith("min") else jnp.max)(cand, axis=1)
     if extra is not None:
-        d_in = jnp.minimum(d_in, extra)
-    return jnp.minimum(xrow, d_in), d_in, d_in < xrow
+        d_in = combine(d_in, extra)
+    return combine(xrow, d_in), d_in, improves(d_in, xrow)

@@ -5,12 +5,15 @@ collapse to ~O(partitions) on high-diameter graphs)."""
 import numpy as np
 import pytest
 
+import jax.numpy as jnp
 import networkx as nx
 
 from repro.core import (bfs_partition, build_partitioned_graph,
                         hash_partition, run_am, run_bsp, run_hybrid)
-from repro.core.apps import SSSP, WCC, BipartiteMatching, IncrementalPageRank
+from repro.core.apps import (SSSP, WCC, BipartiteMatching,
+                             IncrementalPageRank, RandomWalk, WidestPath)
 from repro.core.apps.pagerank import pagerank_edge_weights
+from repro.core.apps.random_walk import random_walk_edge_weights
 from repro.data.graphs import (bipartite_graph, grid_graph, path_graph,
                                rmat_graph, symmetrize)
 
@@ -154,6 +157,103 @@ def test_wcc(engine):
     got = unpack(graph, es, "label")
     expect = np.concatenate([np.zeros(40), np.full(33, 40), np.full(27, 73)])
     np.testing.assert_array_equal(got, expect)
+
+
+# ---------------------------------------------------------------------------
+# Widest (maximum-capacity) paths — the max_min semiring
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def capacitated():
+    """Skewed digraph with capacity weights + the numpy max-min oracle."""
+    rng = np.random.RandomState(19)
+    edges, n = rmat_graph(250, avg_degree=5, seed=9)
+    w = rng.uniform(0.5, 8.0, size=len(edges)).astype(np.float32)
+    part = hash_partition(n, 6, seed=1)
+    graph = build_partitioned_graph(edges, n, part, weights=w)
+    cap = np.full(n, -np.inf, dtype=np.float64)
+    cap[0] = np.inf
+    for _ in range(n):                       # Bellman-Ford on (max, min)
+        nc = cap.copy()
+        np.maximum.at(nc, edges[:, 1], np.minimum(cap[edges[:, 0]], w))
+        if np.array_equal(nc, cap):
+            break
+        cap = nc
+    return graph, cap.astype(np.float32), n
+
+
+@pytest.mark.parametrize("engine", ["bsp", "am", "hybrid"])
+def test_widest_path_matches_oracle(capacitated, engine):
+    graph, oracle, n = capacitated
+    es, iters = RUNNERS[engine](graph, WidestPath(source=0))
+    got = unpack(graph, es, "cap")
+    np.testing.assert_array_equal(got, oracle)   # max/min: bit-exact
+    assert iters > 0
+
+
+def test_widest_path_hybrid_fewer_iterations(capacitated):
+    graph, _, _ = capacitated
+    _, it_bsp = run_bsp(graph, WidestPath(source=0))
+    _, it_hyb = run_hybrid(graph, WidestPath(source=0))
+    assert it_hyb <= it_bsp, (it_hyb, it_bsp)
+
+
+# ---------------------------------------------------------------------------
+# Most-likely absorbing random walk — min_mul (odds) / max_add (log-prob)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def walkable():
+    """Digraph + per-mode uniform-transition weight graphs + the numpy
+    oracle for the best-walk probability (Bellman-Ford on (min, *))."""
+    edges, n = rmat_graph(250, avg_degree=5, seed=15)
+    part = bfs_partition(edges, n, 6, seed=2)
+    graphs = {m: build_partitioned_graph(
+        edges, n, part, weights=random_walk_edge_weights(edges, n, m))
+        for m in ("odds", "logprob")}
+    w = random_walk_edge_weights(edges, n)
+    odds = np.full(n, np.inf, dtype=np.float64)
+    odds[0] = 1.0
+    for _ in range(2 * n):
+        no = odds.copy()
+        np.minimum.at(no, edges[:, 1], odds[edges[:, 0]] * w)
+        if np.array_equal(no, odds):
+            break
+        odds = no
+    prob = np.where(np.isfinite(odds), 1.0 / odds, 0.0)
+    return graphs, prob, n
+
+
+@pytest.mark.parametrize("mode", ["odds", "logprob"])
+@pytest.mark.parametrize("engine", ["bsp", "am", "hybrid"])
+def test_random_walk_matches_oracle(walkable, engine, mode):
+    graphs, oracle, n = walkable
+    graph = graphs[mode]
+    prog = RandomWalk(source=0, mode=mode)
+    es, iters = RUNNERS[engine](graph, prog)
+    got = np.asarray(prog.probability(
+        jnp.asarray(unpack(graph, es, "mass"))))
+    # odds are exact products of small-int degrees; log-prob sums logs and
+    # re-enters through exp, so allow float tolerance there
+    if mode == "odds":
+        np.testing.assert_allclose(got, oracle, rtol=1e-6)
+    else:
+        np.testing.assert_allclose(got, oracle, rtol=1e-4, atol=1e-7)
+    assert iters > 0
+
+
+def test_random_walk_modes_agree(walkable):
+    """The two semiring formulations are isomorphic: identical best-walk
+    probabilities from the min_mul and max_add closures."""
+    graphs, _, _ = walkable
+    probs = {}
+    for mode in ("odds", "logprob"):
+        prog = RandomWalk(source=0, mode=mode)
+        es, _ = run_hybrid(graphs[mode], prog)
+        probs[mode] = np.asarray(prog.probability(
+            jnp.asarray(unpack(graphs[mode], es, "mass"))))
+    np.testing.assert_allclose(probs["odds"], probs["logprob"],
+                               rtol=1e-4, atol=1e-7)
 
 
 # ---------------------------------------------------------------------------

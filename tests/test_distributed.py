@@ -78,11 +78,13 @@ def test_distributed_hybrid_engine_matches_host():
 
 
 def test_distributed_hybrid_kernel_path_matches_host():
-    """use_ell=True under shard_map: the ELL kernels (including the fused
-    min_step local phase and remote-ELL delivery over spill bins) run on
-    block-local partition slices, exercising `slice_flat`'s re-offset branch
-    (p != graph.n_partitions).  Fixed point, iteration count and counters
-    must match the host dense run."""
+    """The now-default use_ell=True under shard_map: the ELL kernels
+    (including the fused min_step local phase and remote-ELL delivery over
+    spill bins) run on block-local partition slices, exercising
+    `slice_flat`'s re-offset branch (p != graph.n_partitions), with
+    collect_metrics=True riding the tiles' per-slot group ids (no dense
+    per-group fallback).  Fixed point, iteration count and every paper
+    counter must match the host dense run bit-exactly."""
     run_sub("""
     import numpy as np
     import jax, jax.numpy as jnp
@@ -114,8 +116,9 @@ def test_distributed_hybrid_kernel_path_matches_host():
 
     mesh = jax.make_mesh((2, 4), ('data', 'model'))
     axes = ('data', 'model')
-    step = make_dist_hybrid_step(prog, mesh, axes=axes, use_ell=True)
-    es = init_hybrid(graph, prog, None, use_ell=True)
+    # kernel path + collect_metrics=True are the defaults now — no kwargs
+    step = make_dist_hybrid_step(prog, mesh, axes=axes)
+    es = init_hybrid(graph, prog, None)
     gs = jax.tree.map(lambda s: NamedSharding(mesh, s), shard0_specs(graph, axes))
     ess = jax.tree.map(lambda s: NamedSharding(mesh, s), _es_specs(es, axes))
     graph_d = jax.device_put(graph, gs)
@@ -133,6 +136,65 @@ def test_distributed_hybrid_kernel_path_matches_host():
         assert int(getattr(es_d.counters, f)) == \\
             int(getattr(es_ref.counters, f)), f
     print('DIST ELL OK', iters, int(es_d.counters.net_messages))
+    """)
+
+
+def test_distributed_new_semiring_apps_match_host():
+    """WidestPath (max_min) and RandomWalk (min_mul / max_add) through the
+    default-kernel distributed step: fixed point and paper counters
+    bit-exact against the host dense run for every app."""
+    run_sub("""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.launch.mesh import set_mesh
+    from jax.sharding import NamedSharding
+    from repro.core import build_partitioned_graph, hash_partition, run_hybrid
+    from repro.core.apps import RandomWalk, WidestPath
+    from repro.core.apps.random_walk import random_walk_edge_weights
+    from repro.core.distributed import make_dist_hybrid_step, _es_specs, shard0_specs
+    from repro.core.engine_hybrid import init_hybrid
+    from repro.core.runtime import quiescent
+    from repro.data.graphs import rmat_graph
+
+    edges, n = rmat_graph(240, avg_degree=5, seed=9)
+    part = hash_partition(n, 8, seed=1)
+    rng = np.random.RandomState(7)
+    w_cap = rng.uniform(0.5, 8.0, size=len(edges)).astype(np.float32)
+    g_cap = build_partitioned_graph(edges, n, part, weights=w_cap)
+    g_rw = {m: build_partitioned_graph(
+        edges, n, part, weights=random_walk_edge_weights(edges, n, m))
+        for m in ('odds', 'logprob')}
+
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    axes = ('data', 'model')
+    cases = [('widest', g_cap, WidestPath(source=0), 'cap'),
+             ('rw_odds', g_rw['odds'], RandomWalk(source=0, mode='odds'),
+              'mass'),
+             ('rw_logp', g_rw['logprob'],
+              RandomWalk(source=0, mode='logprob'), 'mass')]
+    for name, graph, prog, field in cases:
+        es_ref, iters_ref = run_hybrid(graph, prog, use_ell=False)
+        step = make_dist_hybrid_step(prog, mesh, axes=axes)
+        es = init_hybrid(graph, prog, None)
+        gs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          shard0_specs(graph, axes))
+        ess = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           _es_specs(es, axes))
+        graph_d = jax.device_put(graph, gs)
+        es_d = jax.device_put(es, ess)
+        with set_mesh(mesh):
+            jitted = jax.jit(step, in_shardings=(gs, ess))
+            iters = 0
+            while not bool(quiescent(prog, es_d)) and iters < 500:
+                es_d = jitted(graph_d, es_d)
+                iters += 1
+        got = np.asarray(jax.device_get(es_d.state[field]))
+        np.testing.assert_array_equal(got, np.asarray(es_ref.state[field]))
+        assert iters == iters_ref, (name, iters, iters_ref)
+        for f in ('net_messages', 'net_local_messages', 'mem_messages'):
+            assert int(getattr(es_d.counters, f)) == \\
+                int(getattr(es_ref.counters, f)), (name, f)
+        print('DIST', name, 'OK', iters)
     """)
 
 

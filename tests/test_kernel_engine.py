@@ -12,12 +12,14 @@ import jax.numpy as jnp
 
 from repro.core import (bfs_partition, build_partitioned_graph,
                         hash_partition, run_am, run_bsp, run_hybrid)
-from repro.core.apps import SSSP, WCC, BipartiteMatching, IncrementalPageRank
+from repro.core.apps import (SSSP, WCC, BipartiteMatching,
+                             IncrementalPageRank, RandomWalk, WidestPath)
 from repro.core.apps.pagerank import pagerank_edge_weights
+from repro.core.apps.random_walk import random_walk_edge_weights
 from repro.core.runtime import ell_channels
 from repro.data.graphs import bipartite_graph, grid_graph, rmat_graph, symmetrize
 
-from delivery_parity import assert_remote_delivery_matches as \
+from test_delivery_parity import assert_remote_delivery_matches as \
     _assert_remote_delivery_matches
 
 RUNNERS = {"bsp": run_bsp, "am": run_am, "hybrid": run_hybrid}
@@ -168,6 +170,69 @@ def test_bipartite_matching_fallback_parity(engine):
     np.testing.assert_array_equal(unpack(graph, es_d, "matched"),
                                   unpack(graph, es_k, "matched"))
     assert_counters_equal(es_d, es_k)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_widest_path_parity(road, engine):
+    """max_min delivery (and the generalized fused local phase on hybrid)
+    matches the dense path bit-for-bit — max/min never reassociates."""
+    graph, _ = road
+    es_d, es_k = run_pair(engine, graph, lambda: WidestPath(source=0))
+    np.testing.assert_array_equal(unpack(graph, es_d, "cap"),
+                                  unpack(graph, es_k, "cap"))
+    assert_counters_equal(es_d, es_k)
+
+
+@pytest.mark.parametrize("mode", ["odds", "logprob"])
+@pytest.mark.parametrize("engine", ENGINES)
+def test_random_walk_parity(engine, mode):
+    """min_mul (odds) and max_add (log-prob) deliveries match the dense
+    path bit-for-bit: ⊗ is evaluated identically on both paths and ⊕ is a
+    selection."""
+    edges, n = rmat_graph(220, avg_degree=5, seed=3)
+    w = random_walk_edge_weights(edges, n, mode)
+    part = hash_partition(n, 5, seed=1)
+    graph = build_partitioned_graph(edges, n, part, weights=w)
+    es_d, es_k = run_pair(engine, graph,
+                          lambda: RandomWalk(source=0, mode=mode))
+    np.testing.assert_array_equal(unpack(graph, es_d, "mass"),
+                                  unpack(graph, es_k, "mass"))
+    assert_counters_equal(es_d, es_k)
+
+
+def test_new_apps_fuse_through_min_step(road):
+    """The generalized fused gate engages for every monotone-semiring app
+    and stays off when the channel combiner doesn't match the semiring ⊕."""
+    from repro.core.engine_hybrid import _fused_local_kernel
+    from repro.core.vertex_program import Channel
+    graph, _ = road
+    for prog in (WidestPath(source=0), RandomWalk(source=0, mode="odds"),
+                 RandomWalk(source=0, mode="logprob")):
+        assert _fused_local_kernel(graph, prog, use_ell=True,
+                                   max_local_steps=10) == "min_step"
+        assert _fused_local_kernel(graph, prog, use_ell=False,
+                                   max_local_steps=10) is None
+    # mismatched combiner/⊕ (min channel over a max semiring) must not fuse
+    bad = WidestPath(source=0)
+    bad.channels = (Channel("cap", "min", ((jnp.float32, -jnp.inf),),
+                            semiring="max_min"),)
+    assert _fused_local_kernel(graph, bad, use_ell=True,
+                               max_local_steps=10) is None
+
+
+def test_widest_path_fused_cutoff_parity(road):
+    """max_local_steps cutoff rollback holds for the generalized (max, min)
+    fusion exactly as for SSSP's (min, +)."""
+    graph, _ = road
+    for steps in (1, 3):
+        es_d, it_d = run_hybrid(graph, WidestPath(source=0),
+                                max_local_steps=steps, use_ell=False)
+        es_k, it_k = run_hybrid(graph, WidestPath(source=0),
+                                max_local_steps=steps, use_ell=True)
+        assert it_d == it_k, (steps, it_d, it_k)
+        np.testing.assert_array_equal(unpack(graph, es_d, "cap"),
+                                      unpack(graph, es_k, "cap"))
+        assert_counters_equal(es_d, es_k)
 
 
 def test_hybrid_fused_pr_uses_kernel_and_matches(web):

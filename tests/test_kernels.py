@@ -26,7 +26,8 @@ def _random_ell(rng, r, k, n, density=0.5, dtype=np.float32):
 
 SHAPES = [(8, 16, 32), (64, 128, 100), (256, 130, 511), (300, 257, 1024),
           (1024, 128, 64)]
-SEMIRINGS = ["add_mul", "min_add", "max_add", "min_mul"]
+SEMIRINGS = ["add_mul", "min_add", "max_add", "min_mul", "max_min"]
+MONOTONE = ["min_add", "min_mul", "max_add", "max_min"]
 
 
 @pytest.mark.parametrize("semiring", SEMIRINGS)
@@ -212,5 +213,61 @@ def test_fused_min_step_property(r, k, n, seed):
     xrow = jnp.asarray(rng.uniform(0, 10, size=(r,)).astype(np.float32))
     got = fused_min_step(idx, val, msk, x, send, xrow)
     want = fused_min_step_ref(idx, val, msk, x, send, xrow)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def _random_monotone_problem(rng, r, k, n, semiring, density=0.5):
+    """Frontier/state draws matching the semiring's domain: unreached
+    vertices sit at the ⊕ identity, edge values in the app's range."""
+    idx = jnp.asarray(rng.randint(0, n, size=(r, k)).astype(np.int32))
+    lo, hi = (1.0, 3.0) if semiring == "min_mul" else (0.1, 2.0)
+    val = jnp.asarray(rng.uniform(lo, hi, size=(r, k)).astype(np.float32))
+    msk = jnp.asarray(rng.uniform(size=(r, k)) < density)
+    ident = np.inf if semiring.startswith("min") else -np.inf
+    sign = -1.0 if semiring == "max_add" else 1.0
+    x = jnp.asarray(np.where(rng.uniform(size=n) < 0.8,
+                             sign * rng.uniform(0.1, 10, size=n),
+                             ident).astype(np.float32))
+    send = jnp.asarray(rng.uniform(size=(n,)) < 0.5)
+    xrow = jnp.asarray((sign * rng.uniform(0.1, 10, size=r))
+                       .astype(np.float32))
+    return idx, val, msk, x, send, xrow
+
+
+@pytest.mark.parametrize("semiring", MONOTONE)
+@pytest.mark.parametrize("shape", [(16, 8, 16), (260, 140, 300)])
+def test_fused_step_generalized_semirings(shape, semiring):
+    """The fused pseudo-superstep kernel is one implementation for the whole
+    monotone family: every (⊕, ⊗) pair matches its oracle bit-exactly,
+    including the extra (spill) operand and the send'-improvement flags."""
+    r, k, n = shape
+    rng = np.random.RandomState(17)
+    idx, val, msk, x, send, xrow = _random_monotone_problem(
+        rng, r, k, n, semiring)
+    got = fused_min_step(idx, val, msk, x, send, xrow, semiring=semiring)
+    want = fused_min_step_ref(idx, val, msk, x, send, xrow,
+                              semiring=semiring)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # an explicit ⊕-identity extra must be a no-op (the no-spill-bins case)
+    ident = np.inf if semiring.startswith("min") else -np.inf
+    extra = jnp.full((r,), ident, jnp.float32)
+    got2 = fused_min_step(idx, val, msk, x, send, xrow, extra=extra,
+                          semiring=semiring)
+    for g, w in zip(got2, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@settings(max_examples=12, deadline=None)
+@given(r=st.integers(1, 48), k=st.integers(1, 64), n=st.integers(1, 96),
+       semiring=st.sampled_from(MONOTONE), seed=st.integers(0, 2**16))
+def test_fused_step_generalized_property(r, k, n, semiring, seed):
+    rng = np.random.RandomState(seed)
+    idx, val, msk, x, send, xrow = _random_monotone_problem(
+        rng, r, k, n, semiring)
+    got = fused_min_step(idx, val, msk, x, send, xrow, semiring=semiring)
+    want = fused_min_step_ref(idx, val, msk, x, send, xrow,
+                              semiring=semiring)
     for g, w in zip(got, want):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))

@@ -161,7 +161,7 @@ def powerlaw_digraphs(draw, max_n=60):
     return edges, w, n, part, seed
 
 
-from delivery_parity import assert_remote_delivery_matches as \
+from test_delivery_parity import assert_remote_delivery_matches as \
     _assert_remote_delivery_matches  # noqa: E402  (shared with kernel suite)
 
 
