@@ -4,7 +4,8 @@ Thresholds live in ``benchmarks/gates.json`` (checked in, reviewed like
 code) instead of an inline CI heredoc; each gate names a benchmark table, a
 workload (or ``"*"`` for every workload in the table), a metric — a dotted /
 indexed path into the workload record, or a list of candidate paths of which
-the best present value counts — and an inclusive ``min`` bar.  Bars are
+the best present value counts — and an inclusive ``min`` and/or ``max``
+bar (booleans count as 0/1, so ``min: 1`` gates a flag).  Bars are
 deliberately loose relative to the real margins recorded in the JSONs:
 shared CI runners are noisy, and the gate exists to catch the kernel path
 regressing toward dense, not to measure it.
@@ -27,17 +28,19 @@ DEFAULT_GATES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "gates.json")
 
 
-def metric_value(record: dict, spec):
+def metric_value(record: dict, spec, prefer: str = "max"):
     """Resolve a metric spec against one workload record.
 
     A list spec means "best of the present candidates" (e.g. a workload may
-    carry a fused variant or not); a string spec is a dotted path with
-    ``[i]`` list indexing.  Returns None when the path is absent.
+    carry a fused variant or not) — best in the direction of the bound, so
+    ``prefer='min'`` for ceiling-only gates; a string spec is a dotted path
+    with ``[i]`` list indexing.  Returns None when the path is absent.
     """
     if isinstance(spec, list):
         vals = [v for v in (metric_value(record, s) for s in spec)
                 if v is not None]
-        return max(vals) if vals else None
+        best = min if prefer == "min" else max
+        return best(vals) if vals else None
     cur = record
     for part in spec.replace("]", "").replace("[", ".").split("."):
         if isinstance(cur, list):
@@ -70,18 +73,23 @@ def check_table(name: str, cfg: dict, root: str = REPO_ROOT) -> list[str]:
                 failures.append(f"{name}/{wl}: workload missing from "
                                 f"{cfg['file']}")
                 continue
-            v = metric_value(rec, gate["metric"])
+            prefer = ("min" if ("max" in gate and "min" not in gate)
+                      else "max")
+            v = metric_value(rec, gate["metric"], prefer=prefer)
             tag = (gate["metric"] if isinstance(gate["metric"], str)
                    else "|".join(gate["metric"]))
             if v is None:
                 failures.append(f"{name}/{wl}: metric {tag} absent")
                 continue
-            ok = v >= gate["min"]
+            lo, hi = gate.get("min"), gate.get("max")
+            ok = ((lo is None or v >= lo) and (hi is None or v <= hi))
+            bar = " ".join(([f">= {lo}"] if lo is not None else [])
+                           + ([f"<= {hi}"] if hi is not None else []))
             print(f"{'PASS' if ok else 'FAIL'} {name}/{wl} {tag}="
-                  f"{v:.2f} (>= {gate['min']}) — {gate['label']}")
+                  f"{v:.2f} ({bar}) — {gate['label']}")
             if not ok:
-                failures.append(f"{name}/{wl}: {tag}={v:.2f} < "
-                                f"{gate['min']} ({gate['label']})")
+                failures.append(f"{name}/{wl}: {tag}={v:.2f} not {bar} "
+                                f"({gate['label']})")
     return failures
 
 

@@ -1,0 +1,238 @@
+"""Partitioner A/B benchmark: the quality ladder on the paper's counters.
+
+GraphHP's headline metric — network messages M — is a direct function of
+how many in-edges the partitioner keeps internal, so this table A/Bs the
+whole ladder (``hash`` / ``bfs`` / ``fennel`` / ``multilevel``) end-to-end
+on the three graph families × apps the paper pairs them with:
+
+  rmat_pagerank   — R-MAT power-law web graph, IncrementalPageRank,
+  grid_sssp       — road lattice, SSSP,
+  geometric_wcc   — random geometric graph (symmetrized), WCC.
+
+Per (workload × partitioner) it records the static quality report
+(edge-cut fraction, boundary fraction, replication H/V, balance, estimated
+exchange bytes off the built graph's ``export_fanout``), the partitioner's
+own build time, the paper counters from a full ``run_hybrid`` to
+quiescence (``net_messages``, iterations), and the wall time of one jitted
+distributed step (exchange -> global phase -> local convergence) from a
+saturated frontier.  Every fixed point is oracle-checked (Bellman-Ford /
+union-find / power iteration); SSSP and WCC are additionally pinned
+**bit-exact across partitioners** — the partitioner may only move the
+traffic, never the answer.
+
+Emits BENCH_partition.json (committed, trajectory-tracked) and harness CSV
+rows; ``benchmarks/gates.json`` gates multilevel-vs-hash ratios and
+balance in CI.
+
+    PYTHONPATH=src python -m benchmarks.run --fast --table partition
+    PYTHONPATH=src python -m benchmarks.partition_bench [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_partition.json")
+
+N_PARTITIONS = 8
+
+
+# ---------------------------------------------------------------------------
+# numpy oracles
+# ---------------------------------------------------------------------------
+
+def _sssp_oracle(edges, w, n, src=0):
+    dist = np.full(n, np.inf)
+    dist[src] = 0.0
+    for _ in range(n):
+        nd = dist.copy()
+        np.minimum.at(nd, edges[:, 1], dist[edges[:, 0]] + w)
+        if np.array_equal(nd, dist, equal_nan=True):
+            break
+        dist = nd
+    return dist
+
+
+def _wcc_oracle(edges, n):
+    parent = np.arange(n)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in edges:
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    return np.array([find(i) for i in range(n)])
+
+
+def _pagerank_oracle(edges, n, iters=300):
+    deg = np.bincount(edges[:, 0], minlength=n).astype(np.float64)
+    r = np.full(n, 0.15)
+    for _ in range(iters):
+        contrib = np.zeros(n)
+        np.add.at(contrib, edges[:, 1],
+                  0.85 * r[edges[:, 0]] / np.maximum(deg[edges[:, 0]], 1))
+        r = 0.15 + contrib
+    return r
+
+
+# ---------------------------------------------------------------------------
+# the A/B sweep
+# ---------------------------------------------------------------------------
+
+def _dist_step_us(graph, prog, payload_value):
+    """One jitted hybrid global iteration from a saturated frontier — the
+    partition-dependent cost of exchange + global phase + local phase."""
+    from benchmarks.local_phase_bench import _saturate, _time_us
+    from repro.core.engine_hybrid import hybrid_iteration, init_hybrid
+
+    es = _saturate(graph, prog, init_hybrid(graph, prog, None), payload_value)
+    step = jax.jit(lambda e: hybrid_iteration(graph, prog, e, None))
+    return _time_us(step, es, warmup=2, iters=5)
+
+
+def _workloads(fast: bool):
+    from repro.core.apps import SSSP, WCC, IncrementalPageRank
+    from repro.core.apps.pagerank import pagerank_edge_weights
+    from repro.data.graphs import geometric_graph, grid_graph, rmat_graph, \
+        symmetrize
+
+    n_rmat = 3000 if fast else 20000
+    rc = (10, 120) if fast else (30, 400)
+    n_geo = 4000 if fast else 50000
+
+    # (name, edges, n, weights, make_prog, field, payload, make_oracle,
+    #  compare, want_bitexact) — make_oracle runs ONCE per workload (the
+    # oracle is partition-invariant), compare judges each fixed point
+    edges, n = rmat_graph(n_rmat, avg_degree=8, seed=1)
+    wpr = pagerank_edge_weights(edges, n)
+    yield ("rmat_pagerank", edges, n, wpr,
+           lambda: IncrementalPageRank(tolerance=1e-4), "rank", 0.01,
+           lambda e=edges, nn=n: _pagerank_oracle(e, nn),
+           lambda got, ora: bool(np.allclose(got, ora, rtol=2e-2,
+                                             atol=2e-2)), False)
+
+    edges, w, n = grid_graph(*rc, seed=0)
+    yield ("grid_sssp", edges, n, w, lambda: SSSP(source=0), "dist", 1.0,
+           lambda e=edges, ww=w, nn=n: _sssp_oracle(e, ww, nn),
+           lambda got, ora: bool(np.allclose(got, ora, rtol=1e-5,
+                                             equal_nan=True)), True)
+
+    edges, n = geometric_graph(n_geo, seed=2)
+    edges = symmetrize(edges)
+    yield ("geometric_wcc", edges, n, None, WCC, "label", 1.0,
+           lambda e=edges, nn=n: _wcc_oracle(e, nn),
+           lambda got, ora: bool(np.array_equal(got, ora)), True)
+
+
+def bench_partitioners(out_path: str = DEFAULT_OUT, fast: bool = True) -> dict:
+    from repro.core import build_partitioned_graph, run_hybrid
+    from repro.core.graph import unpack_vertex
+    from repro.partition import PARTITIONERS, make_partition, partition_report
+
+    results: dict = {"meta": {"backend": jax.default_backend(),
+                              "n_partitions": N_PARTITIONS,
+                              "fast": bool(fast),
+                              "mode": "interpret" if
+                              jax.default_backend() != "tpu" else "mosaic"},
+                     "workloads": {}}
+
+    for (name, edges, n, w, make_prog, field, payload, make_oracle,
+         compare, want_bitexact) in _workloads(fast):
+        rec: dict = {"app": make_prog().__class__.__name__,
+                     "graph": f"V={n} E={len(edges)} k={N_PARTITIONS}",
+                     "partitioners": {}}
+        oracle = make_oracle()
+        fixed_points = {}
+        for pname in PARTITIONERS:
+            t0 = time.perf_counter()
+            part = make_partition(pname, edges, n, N_PARTITIONS, seed=0)
+            build_s = time.perf_counter() - t0
+            graph = build_partitioned_graph(edges, n, part, weights=w)
+            rep = partition_report(edges, n, part, graph=graph,
+                                   n_partitions=N_PARTITIONS)
+            es, iters = run_hybrid(graph, make_prog())
+            got = unpack_vertex(graph, es.state[field])
+            fixed_points[pname] = got
+            rec["partitioners"][pname] = {
+                "shape": graph.shape_summary,
+                "build_s": round(build_s, 4),
+                "edge_cut_frac": round(rep.edge_cut_frac, 4),
+                "boundary_frac": round(rep.boundary_frac, 4),
+                "replication": round(rep.replication, 4),
+                "balance": round(rep.balance, 4),
+                "exchange_bytes": rep.exchange_bytes,
+                "net_messages": int(es.counters.net_messages),
+                "net_local_messages": int(es.counters.net_local_messages),
+                "iterations": int(iters),
+                "dist_step_us": round(_dist_step_us(graph, make_prog(),
+                                                    payload)),
+                "oracle_ok": compare(got, oracle),
+            }
+        ps = rec["partitioners"]
+        rec["ratios"] = {
+            "net_messages_hash_over_multilevel":
+                ps["hash"]["net_messages"]
+                / max(ps["multilevel"]["net_messages"], 1),
+            "edge_cut_hash_over_multilevel":
+                ps["hash"]["edge_cut_frac"]
+                / max(ps["multilevel"]["edge_cut_frac"], 1e-9),
+        }
+        if want_bitexact:
+            base = fixed_points["hash"]
+            rec["bitexact_across_partitioners"] = bool(all(
+                np.array_equal(base, fp, equal_nan=True)
+                for fp in fixed_points.values()))
+        results["workloads"][name] = rec
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def csv_rows(results: dict) -> list[str]:
+    rows = []
+    for name, r in results["workloads"].items():
+        for pname, p in r["partitioners"].items():
+            derived = (f"cut={p['edge_cut_frac']:.3f};"
+                       f"net={p['net_messages']};iters={p['iterations']};"
+                       f"balance={p['balance']:.2f};"
+                       f"xbytes={p['exchange_bytes']};"
+                       f"build_s={p['build_s']:.3f};"
+                       f"oracle_ok={p['oracle_ok']}")
+            rows.append(f"partition/{name}/{pname},{p['dist_step_us']:.0f},"
+                        f"{derived}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="where to write BENCH_partition.json")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized graphs (default: CI-sized --fast)")
+    args = ap.parse_args()
+    results = bench_partitioners(args.out, fast=not args.full)
+    print("name,us_per_call,derived")
+    for row in csv_rows(results):
+        print(row)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, REPO_ROOT)
+    sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+    main()

@@ -22,7 +22,7 @@ def main() -> None:
                     help="smaller graphs (CI-sized)")
     ap.add_argument("--table", default=None,
                     help="run a single table: sssp|pagerank|bm|giraphpp|"
-                         "kernels|local_phase|dist_phase|roofline")
+                         "kernels|local_phase|dist_phase|partition|roofline")
     args = ap.parse_args()
 
     if args.table == "dist_phase":
@@ -67,6 +67,12 @@ def main() -> None:
     if args.table == "dist_phase":
         rows += local_phase_bench.dist_csv_rows(
             local_phase_bench.bench_dist_phase(fast=args.fast))
+    if args.table == "partition":
+        # explicit-only (full run_hybrid sweeps per partitioner; not part
+        # of the default table sweep)
+        from benchmarks import partition_bench
+        rows += partition_bench.csv_rows(
+            partition_bench.bench_partitioners(fast=args.fast))
     if want("roofline"):
         rows += roofline_rows()
 

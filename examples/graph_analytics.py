@@ -1,9 +1,11 @@
 """Graph-analytics walkthrough: every vertex program (SSSP, incremental
 PageRank, WCC, widest paths, most-likely random walks, bipartite matching)
-on the hybrid engine, with the Pallas ELL-SpMV kernel shown as the
-local-phase hot-loop equivalent.
+on the hybrid engine, partitioner choice wired through
+``build_partitioned_graph`` (pass a ``repro.partition`` name as ``part``),
+with the Pallas ELL-SpMV kernel shown as the local-phase hot-loop
+equivalent.
 
-    PYTHONPATH=src python examples/graph_analytics.py
+    PYTHONPATH=src python examples/graph_analytics.py [partitioner]
 """
 
 import sys
@@ -14,29 +16,43 @@ sys.path.insert(0, "src")
 
 import jax.numpy as jnp
 
-from repro.core import bfs_partition, build_partitioned_graph, run_hybrid
+from repro.core import build_partitioned_graph, run_hybrid
 from repro.core.apps import (SSSP, WCC, BipartiteMatching,
                              IncrementalPageRank, RandomWalk, WidestPath)
 from repro.core.apps.pagerank import pagerank_edge_weights
 from repro.core.apps.random_walk import random_walk_edge_weights
 from repro.data.graphs import (bipartite_graph, grid_graph, rmat_graph,
                                symmetrize)
+from repro.partition import PARTITIONERS, make_partition, partition_report
 
 
 def main():
-    # ---- SSSP on a road grid -------------------------------------------
+    # the partitioner every workload below runs on (default: multilevel,
+    # the closest stand-in for the paper's Metis partitions)
+    partitioner = sys.argv[1] if len(sys.argv) > 1 else "multilevel"
+
+    # ---- the partitioner ladder on one graph ----------------------------
     edges, w, n = grid_graph(10, 60, seed=0)
-    part = bfs_partition(edges, n, 6, seed=0)
-    g = build_partitioned_graph(edges, n, part, weights=w)
+    print(f"partition quality on a 10x60 road grid (6 parts):")
+    for name in PARTITIONERS:
+        rep = partition_report(edges, n, make_partition(name, edges, n, 6),
+                               n_partitions=6)
+        print(f"  {name:10s} {rep.summary()}")
+
+    # ---- SSSP on a road grid -------------------------------------------
+    g = build_partitioned_graph(edges, n, partitioner, weights=w,
+                                n_partitions=6)
     es, iters = run_hybrid(g, SSSP(source=0))
     finite = np.isfinite(np.asarray(es.state["dist"])).sum()
-    print(f"SSSP: {iters} global iterations, {finite} reachable slots")
+    print(f"SSSP [{partitioner}]: {iters} global iterations, "
+          f"{finite} reachable slots, "
+          f"{int(es.counters.net_messages)} net messages")
 
     # ---- incremental PageRank on a web-ish graph ------------------------
     edges, n = rmat_graph(1200, avg_degree=6, seed=1)
     wpr = pagerank_edge_weights(edges, n)
-    g = build_partitioned_graph(edges, n, bfs_partition(edges, n, 6, seed=1),
-                                weights=wpr)
+    g = build_partitioned_graph(edges, n, partitioner, weights=wpr,
+                                n_partitions=6, partition_seed=1)
     es, iters = run_hybrid(g, IncrementalPageRank(tolerance=1e-4))
     ranks = np.asarray(es.state["rank"])
     print(f"PageRank: {iters} global iterations, top rank "
@@ -45,7 +61,8 @@ def main():
 
     # ---- WCC -------------------------------------------------------------
     e2 = symmetrize(edges)
-    g = build_partitioned_graph(e2, n, bfs_partition(e2, n, 6, seed=2))
+    g = build_partitioned_graph(e2, n, partitioner, n_partitions=6,
+                                partition_seed=2)
     es, iters = run_hybrid(g, WCC())
     labels = np.asarray(es.state["label"])
     gid = np.asarray(g.vertex_gid)
@@ -55,8 +72,8 @@ def main():
     # ---- widest (bottleneck-capacity) paths -----------------------------
     rng = np.random.RandomState(4)
     caps = rng.uniform(1.0, 10.0, size=len(edges)).astype(np.float32)
-    g = build_partitioned_graph(edges, n, bfs_partition(edges, n, 6, seed=1),
-                                weights=caps)
+    g = build_partitioned_graph(edges, n, partitioner, weights=caps,
+                                n_partitions=6, partition_seed=1)
     es, iters = run_hybrid(g, WidestPath(source=0))
     cap = np.asarray(es.state["cap"])
     reach = np.isfinite(cap)              # source sits at +inf, padding at -inf
@@ -66,8 +83,8 @@ def main():
 
     # ---- most-likely absorbing random walk ------------------------------
     wrw = random_walk_edge_weights(edges, n, mode="odds")
-    g = build_partitioned_graph(edges, n, bfs_partition(edges, n, 6, seed=1),
-                                weights=wrw)
+    g = build_partitioned_graph(edges, n, partitioner, weights=wrw,
+                                n_partitions=6, partition_seed=1)
     prog = RandomWalk(source=0, mode="odds")
     es, iters = run_hybrid(g, prog)
     probs = np.asarray(prog.probability(es.state["mass"]))
@@ -77,7 +94,8 @@ def main():
 
     # ---- bipartite matching ---------------------------------------------
     edges, nl, n = bipartite_graph(300, 260, avg_degree=3, seed=3)
-    g = build_partitioned_graph(edges, n, bfs_partition(edges, n, 6, seed=3))
+    g = build_partitioned_graph(edges, n, partitioner, n_partitions=6,
+                                partition_seed=3)
     vdata = {"is_left": g.vertex_gid < nl, "degree": g.out_degree}
     es, iters = run_hybrid(g, BipartiteMatching(seed=1), vdata=vdata,
                            max_iters=300)

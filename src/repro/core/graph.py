@@ -27,13 +27,28 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+# the partitioners grew into their own subsystem (repro.partition: hash/bfs
+# plus fennel streaming and multilevel); re-exported here for compatibility
+from repro.partition import bfs_partition, hash_partition
+
 __all__ = [
     "EllSlice",
     "PartitionedGraph",
     "build_partitioned_graph",
     "hash_partition",
     "bfs_partition",
+    "unpack_vertex",
 ]
+
+
+def unpack_vertex(graph: "PartitionedGraph", values) -> np.ndarray:
+    """Scatter a per-slot (P, Vp) array back to global vertex-id order —
+    the inverse of the builder's slot assignment (padding slots dropped)."""
+    gid = np.asarray(graph.vertex_gid).ravel()
+    val = np.asarray(values).ravel()
+    out = np.zeros(graph.n_vertices, dtype=val.dtype)
+    out[gid[gid >= 0]] = val[gid >= 0]
+    return out
 
 
 def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
@@ -162,100 +177,25 @@ class PartitionedGraph:
         )
 
 
-def hash_partition(n_vertices: int, n_partitions: int, seed: int = 0) -> np.ndarray:
-    """Hama's default placement: hash(id) mod k (random cut, many crossings)."""
-    rng = np.random.RandomState(seed)
-    perm = rng.permutation(n_vertices).astype(np.int64)
-    return (perm % n_partitions).astype(np.int32)
-
-
-def bfs_partition(edges: np.ndarray, n_vertices: int, n_partitions: int,
-                  seed: int = 0) -> np.ndarray:
-    """Locality-preserving partitioner standing in for (Par)Metis.
-
-    Multi-source BFS growth: seeds spread round-robin, each frontier step
-    claims unvisited neighbours for the smallest partition, which tracks the
-    Metis objective (balanced parts, few cut edges) well enough for the
-    paper's comparative experiments.
-    """
-    rng = np.random.RandomState(seed)
-    # undirected adjacency for growth
-    adj_idx = np.concatenate([edges[:, 0], edges[:, 1]])
-    adj_val = np.concatenate([edges[:, 1], edges[:, 0]])
-    order = np.argsort(adj_idx, kind="stable")
-    adj_idx, adj_val = adj_idx[order], adj_val[order]
-    starts = np.searchsorted(adj_idx, np.arange(n_vertices + 1))
-
-    part = np.full(n_vertices, -1, dtype=np.int32)
-    sizes = np.zeros(n_partitions, dtype=np.int64)
-    target = (n_vertices + n_partitions - 1) // n_partitions
-    frontiers: list[list[int]] = [[] for _ in range(n_partitions)]
-    unvisited = rng.permutation(n_vertices).tolist()
-    uptr = 0
-
-    def next_seed() -> int | None:
-        nonlocal uptr
-        while uptr < len(unvisited):
-            v = unvisited[uptr]
-            uptr += 1
-            if part[v] < 0:
-                return v
-        return None
-
-    for p in range(n_partitions):
-        s = next_seed()
-        if s is None:
-            break
-        part[s] = p
-        sizes[p] += 1
-        frontiers[p].append(s)
-
-    active = True
-    while active:
-        active = False
-        for p in range(n_partitions):
-            if sizes[p] >= target:
-                continue
-            new_frontier: list[int] = []
-            budget = target - sizes[p]
-            for v in frontiers[p]:
-                for u in adj_val[starts[v]:starts[v + 1]]:
-                    if part[u] < 0 and budget > 0:
-                        part[u] = p
-                        sizes[p] += 1
-                        budget -= 1
-                        new_frontier.append(int(u))
-            if not new_frontier and sizes[p] < target:
-                s = next_seed()
-                if s is not None:
-                    part[s] = p
-                    sizes[p] += 1
-                    new_frontier.append(s)
-            frontiers[p] = new_frontier
-            active = active or bool(new_frontier)
-
-    # sweep leftovers (isolated vertices) to the smallest partitions
-    for v in range(n_vertices):
-        if part[v] < 0:
-            p = int(np.argmin(sizes))
-            part[v] = p
-            sizes[p] += 1
-    return part
-
-
 def build_partitioned_graph(
     edges: np.ndarray,
     n_vertices: int,
-    part: np.ndarray,
+    part: np.ndarray | str,
     weights: np.ndarray | None = None,
     pad_multiple: int = 8,
     build_ell: bool = True,
     ell_pad_slices: int = 8,
     ell_base_slices: int = 128,
+    n_partitions: int | None = None,
+    partition_seed: int = 0,
 ) -> PartitionedGraph:
     """Construct the padded partition-major structure from a global edge list.
 
-    ``edges`` is (E, 2) int [src, dst]; ``part`` maps vertex -> partition id.
+    ``edges`` is (E, 2) int [src, dst]; ``part`` maps vertex -> partition id
+    — either a precomputed (V,) labeling, or a partitioner name from
+    ``repro.partition.PARTITIONERS`` ('hash' | 'bfs' | 'fennel' |
+    'multilevel'), in which case ``n_partitions`` (and optionally
+    ``partition_seed``) choose how the labeling is computed.
 
     ``build_ell`` additionally packs each partition's local *and* remote
     in-edges into destination-major sliced-ELL layouts (the kernel fast
@@ -267,6 +207,12 @@ def build_partitioned_graph(
     tiny spill bins instead of padding every row to the hub degree.
     """
     edges = np.asarray(edges, dtype=np.int64)
+    if isinstance(part, str):
+        if n_partitions is None:
+            raise ValueError("partitioner-by-name needs n_partitions")
+        from repro.partition import make_partition
+        part = make_partition(part, edges, n_vertices, n_partitions,
+                              seed=partition_seed)
     part = np.asarray(part, dtype=np.int32)
     n_edges = edges.shape[0]
     if weights is None:

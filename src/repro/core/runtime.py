@@ -138,9 +138,13 @@ def exchange(
         exports = gather_table(exports)
         exp_send = gather_table(exp_send)
     if wire_dtype is not None:
+        # decode iff the ORIGINAL leaf was floating (the saved dtypes tree
+        # drives the decision): keying on the carrier dtype would also
+        # bitcast channels whose genuine payload dtype is uint16/uint8 and
+        # corrupt them on the way back
         exports = jax.tree.map(
             lambda l, dt: jax.lax.bitcast_convert_type(l, wire_dtype)
-            .astype(dt) if l.dtype in (jnp.uint16, jnp.uint8) else l,
+            .astype(dt) if jnp.issubdtype(dt, jnp.floating) else l,
             exports, dtypes)
 
     def pull(leaf):

@@ -1,0 +1,58 @@
+"""Partitioners + partition-quality reporting for the GraphHP engines.
+
+The paper runs on (Par)Metis partitions; this package is the repo's
+partitioner ladder, cheapest to best:
+
+  * ``hash``        — Hama's default placement (random cut, the baseline),
+  * ``bfs``         — multi-source BFS growth (locality on a budget; also
+                      the multilevel coarse-level seed),
+  * ``fennel``      — Fennel-style streaming: one greedy pass, degree-
+                      scaled balance penalty, hard capacity,
+  * ``multilevel``  — heavy-edge coarsening -> bfs coarse seed -> greedy
+                      boundary refinement (the Metis recipe).
+
+All partitioners share one signature through :func:`make_partition`:
+``(edges (E,2), n_vertices, n_partitions, seed) -> (V,) int32 labels``.
+``build_partitioned_graph`` accepts a partitioner *name* for ``part`` and
+resolves it here, so callers pick a partitioner with a string.
+:func:`~repro.partition.quality.partition_report` scores any labeling
+(edge-cut fraction, boundary fraction, replication H/V, balance, estimated
+exchange bytes); ``benchmarks/partition_bench.py`` A/Bs the ladder
+end-to-end on the paper's counters.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.partition.seed import bfs_partition, hash_partition
+from repro.partition.streaming import fennel_partition
+from repro.partition.multilevel import multilevel_partition
+from repro.partition.quality import PartitionReport, partition_report
+
+__all__ = [
+    "hash_partition", "bfs_partition", "fennel_partition",
+    "multilevel_partition", "PartitionReport", "partition_report",
+    "PARTITIONERS", "make_partition",
+]
+
+# uniform signature: (edges, n_vertices, n_partitions, seed, **kw) -> labels
+PARTITIONERS = {
+    "hash": lambda edges, n, k, seed=0, **kw: hash_partition(n, k, seed=seed),
+    "bfs": lambda edges, n, k, seed=0, **kw: bfs_partition(
+        edges, n, k, seed=seed),
+    "fennel": fennel_partition,
+    "multilevel": multilevel_partition,
+}
+
+
+def make_partition(name: str, edges: np.ndarray, n_vertices: int,
+                   n_partitions: int, seed: int = 0, **kw) -> np.ndarray:
+    """Resolve a partitioner by name and run it."""
+    try:
+        fn = PARTITIONERS[name]
+    except KeyError:
+        raise ValueError(f"unknown partitioner {name!r}; "
+                         f"have {sorted(PARTITIONERS)}") from None
+    return np.asarray(fn(edges, n_vertices, n_partitions, seed=seed, **kw),
+                      dtype=np.int32)

@@ -315,6 +315,45 @@ def test_message_counters_ordering(road):
     assert m_hama > m_am >= m_hyb > 0, (m_hama, m_am, m_hyb)
 
 
+def test_wire_dtype_decodes_only_float_payloads():
+    """Regression: channels whose *genuine* payload dtype is uint16/uint8
+    must ride a ``wire_dtype=bf16`` exchange untouched.  The decode used to
+    key on the carrier dtype (``l.dtype in (uint16, uint8)``), which also
+    bitcast real integer payloads to bf16 and corrupted them on the way
+    back; it now decides from the saved dtypes tree (decode iff the
+    original leaf was floating)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.runtime import Counters, EngineState, exchange
+
+    edges, n = path_graph(16)
+    part = np.repeat(np.arange(2), 8).astype(np.int32)
+    g = build_partitioned_graph(edges, n, part)
+    p, vp, h = g.n_partitions, g.vp, g.hp
+    rng = np.random.RandomState(0)
+    out = {"flag16": jnp.asarray(rng.randint(0, 2**16, (p, vp)), jnp.uint16),
+           "flag8": jnp.asarray(rng.randint(0, 2**8, (p, vp)), jnp.uint8),
+           "val": jnp.asarray(rng.randn(p, vp), jnp.float32)}
+    ones = jnp.ones((p, vp), bool)
+    es = EngineState(
+        state=out, out=out, send=ones, active=ones,
+        export_out=out, export_send=ones, pending={},
+        halo_out=jax.tree.map(lambda l: jnp.zeros((p, h), l.dtype), out),
+        halo_send=jnp.zeros((p, h), bool),
+        counters=Counters.zeros(p))
+
+    ref = exchange(g, es)                               # exact wire
+    got = exchange(g, es, wire_dtype=jnp.bfloat16)      # quantized wire
+    hm = np.asarray(g.halo_mask)
+    for name in ("flag16", "flag8"):                    # ints: bit-exact
+        np.testing.assert_array_equal(np.asarray(got.halo_out[name])[hm],
+                                      np.asarray(ref.halo_out[name])[hm])
+    expect = np.asarray(ref.halo_out["val"].astype(jnp.bfloat16)
+                        .astype(jnp.float32))           # floats: quantized
+    np.testing.assert_array_equal(np.asarray(got.halo_out["val"])[hm],
+                                  expect[hm])
+
+
 def test_hybrid_wire_bf16_quantized_exchange(road):
     """§Perf optimization: bf16-quantized exchange payloads keep SSSP
     convergent and within quantization tolerance of the exact run."""

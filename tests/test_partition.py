@@ -1,0 +1,263 @@
+"""Partition subsystem tests.
+
+  * builder invariants under *arbitrary* vertex->partition labelings
+    (including every real partitioner's output): each input edge appears
+    exactly once across partitions, ``halo_ptr`` resolves to the correct
+    exporter slot, ``is_boundary`` matches a numpy oracle — exercised both
+    by a seeded sweep (always) and a hypothesis property test (when
+    hypothesis is installed);
+  * ``PartitionReport`` oracle checks on path/cycle graphs where the
+    optimal cut is known, and numpy-vs-built-graph agreement;
+  * partitioner ladder validity + quality ordering (fennel/multilevel beat
+    the hash cut, respect the balance cap; bfs stays count-balanced);
+  * hybrid-engine fixed points are bit-exact across partitioners for
+    SSSP/WCC and oracle-correct throughout — partitioning may move the
+    traffic, never the answer;
+  * the vectorized ``geometric_graph`` equals the O(n²) brute force.
+"""
+
+import importlib.util
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import build_partitioned_graph, run_hybrid
+from repro.core.graph import unpack_vertex
+from repro.core.apps import SSSP, WCC
+from repro.data.graphs import (cycle_graph, geometric_graph, grid_graph,
+                               path_graph, rmat_graph, symmetrize)
+from repro.partition import (PARTITIONERS, bfs_partition, make_partition,
+                             partition_report)
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+# ---------------------------------------------------------------------------
+# builder invariants for arbitrary labelings
+# ---------------------------------------------------------------------------
+
+def _random_labeled_digraph(n, m, seed, k, how):
+    rng = np.random.RandomState(seed)
+    edges = rng.randint(0, n, size=(m, 2))
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    if len(edges) == 0:
+        edges = np.array([[0, 1]])
+    edges = np.unique(edges, axis=0)
+    if how == "arbitrary":
+        part = rng.randint(0, k, size=n).astype(np.int32)
+    else:
+        part = make_partition(how, edges, n, k, seed=seed % 97)
+    w = rng.uniform(0.5, 3.0, size=len(edges)).astype(np.float32)
+    return edges, w, n, part
+
+
+def _check_builder_invariants(edges, w, n, part):
+    graph = build_partitioned_graph(edges, n, part, weights=w)
+    P, Vp, X = graph.n_partitions, graph.vp, graph.xp
+
+    em = np.asarray(graph.edge_mask)
+    sg = np.asarray(graph.edge_src_gid)
+    dg = np.asarray(graph.edge_dst_gid)
+
+    # every input edge appears exactly once across partitions
+    got = np.stack([sg[em], dg[em]], axis=1)
+    got = got[np.lexsort((got[:, 1], got[:, 0]))]
+    np.testing.assert_array_equal(got, edges)   # np.unique output is sorted
+
+    # is_boundary == "has an in-edge from another partition" (numpy oracle)
+    oracle_b = np.zeros(n, dtype=bool)
+    cross = part[edges[:, 0]] != part[edges[:, 1]]
+    oracle_b[edges[cross, 1]] = True
+    vm = np.asarray(graph.vertex_mask)
+    gid = np.asarray(graph.vertex_gid)
+    np.testing.assert_array_equal(np.asarray(graph.is_boundary)[vm],
+                                  oracle_b[gid[vm]])
+
+    # halo_ptr resolves every remote edge source to the correct exporter slot
+    esrc = np.asarray(graph.edge_src)
+    elocal = np.asarray(graph.edge_local)
+    halo_ptr = np.asarray(graph.halo_ptr)
+    halo_mask = np.asarray(graph.halo_mask)
+    export_slot = np.asarray(graph.export_slot)
+    export_mask = np.asarray(graph.export_mask)
+    for p in range(P):
+        sel = em[p] & ~elocal[p]
+        if not sel.any():
+            continue
+        hs = esrc[p, sel] - Vp
+        assert (hs >= 0).all() and (hs < graph.hp).all()
+        assert halo_mask[p, hs].all()
+        flat = halo_ptr[p, hs]
+        q, x = flat // X, flat % X
+        assert export_mask[q, x].all()
+        exporter_gid = gid[q, export_slot[q, x]]
+        np.testing.assert_array_equal(exporter_gid, sg[p, sel])
+        np.testing.assert_array_equal(q, part[sg[p, sel]])
+
+    # the numpy quality report and the built halo plan agree
+    assert partition_report(edges, n, part, graph=graph) == \
+        partition_report(edges, n, part)
+
+
+@pytest.mark.parametrize("how", ["arbitrary"] + sorted(PARTITIONERS))
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_builder_invariants_seeded_sweep(how, seed):
+    rng = np.random.RandomState(seed + 99)
+    n = int(rng.randint(4, 29))
+    m = int(rng.randint(n, 3 * n + 1))
+    k = int(rng.randint(2, min(6, n) + 1))
+    _check_builder_invariants(
+        *_random_labeled_digraph(n, m, seed, k, how))
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def labeled_digraphs(draw, max_n=28, max_e=80):
+        """Random digraph + labeling from {arbitrary, each partitioner}."""
+        n = draw(st.integers(4, max_n))
+        m = draw(st.integers(n, max_e))
+        seed = draw(st.integers(0, 2**16))
+        k = draw(st.integers(2, min(6, n)))
+        how = draw(st.sampled_from(["arbitrary"] + sorted(PARTITIONERS)))
+        return _random_labeled_digraph(n, m, seed, k, how)
+
+    @settings(max_examples=25, deadline=None)
+    @given(labeled_digraphs())
+    def test_builder_invariants_any_labeling(g):
+        _check_builder_invariants(*g)
+
+
+# ---------------------------------------------------------------------------
+# PartitionReport oracles
+# ---------------------------------------------------------------------------
+
+def test_report_path_graph_contiguous_chunks():
+    """Contiguous chunking is the optimal k-cut of a path: k-1 cut edges,
+    one boundary vertex (the chunk head) and one halo entry per cut."""
+    edges, n = path_graph(64)
+    part = (np.arange(n) * 4 // n).astype(np.int32)
+    rep = partition_report(edges, n, part)
+    assert rep.edge_cut == 3
+    assert rep.edge_cut_frac == 3 / 63
+    assert rep.boundary_vertices == 3
+    assert rep.boundary_frac == 3 / 64
+    assert rep.halo_entries == 3
+    assert rep.replication == 3 / 64
+    assert rep.balance == 1.0
+    assert rep.exchange_bytes == 3 * 4
+
+    # the built graph's export_fanout plan agrees with the numpy route
+    g = build_partitioned_graph(edges, n, part)
+    assert partition_report(edges, n, part, graph=g) == rep
+
+
+def test_report_cycle_graph_contiguous_chunks():
+    edges, n = cycle_graph(60)
+    part = (np.arange(n) * 4 // n).astype(np.int32)
+    rep = partition_report(edges, n, part)
+    assert rep.edge_cut == 4            # one wrap per chunk boundary
+    assert rep.boundary_vertices == 4
+    assert rep.halo_entries == 4
+    assert rep.balance == 1.0
+    g = build_partitioned_graph(edges, n, part)
+    assert partition_report(edges, n, part, graph=g) == rep
+
+
+# ---------------------------------------------------------------------------
+# partitioner ladder quality + validity
+# ---------------------------------------------------------------------------
+
+def test_partitioner_ladder_on_grid():
+    edges, w, n = grid_graph(20, 40, seed=0)
+    reports = {}
+    for name in PARTITIONERS:
+        part = make_partition(name, edges, n, 6, seed=0)
+        assert part.shape == (n,) and part.dtype == np.int32
+        assert part.min() >= 0 and part.max() < 6
+        reports[name] = partition_report(edges, n, part, n_partitions=6)
+    assert reports["fennel"].edge_cut < reports["hash"].edge_cut
+    assert reports["multilevel"].edge_cut < reports["hash"].edge_cut
+    assert reports["bfs"].edge_cut < reports["hash"].edge_cut
+    assert reports["fennel"].balance <= 1.1 + 1e-9
+    assert reports["multilevel"].balance <= 1.1 + 1e-9
+
+
+def test_multilevel_beats_hash_on_powerlaw():
+    edges, n = rmat_graph(1000, avg_degree=6, seed=3)
+    hash_rep = partition_report(
+        edges, n, make_partition("hash", edges, n, 8, seed=0),
+        n_partitions=8)
+    ml_rep = partition_report(
+        edges, n, make_partition("multilevel", edges, n, 8, seed=0),
+        n_partitions=8)
+    assert ml_rep.edge_cut_frac < hash_rep.edge_cut_frac / 1.1
+    assert ml_rep.balance <= 1.1 + 1e-9
+
+
+def test_bfs_partition_stays_count_balanced():
+    """The smallest-first growth order keeps every partition at or below
+    the ceil(n/k) target (the old fixed-order claiming biased early
+    partitions; the leftover sweep could then overfill)."""
+    for rows, cols, k, seed in ((16, 16, 5, 0), (10, 37, 7, 3)):
+        edges, _, n = grid_graph(rows, cols, seed=seed)
+        part = bfs_partition(edges, n, k, seed=seed)
+        sizes = np.bincount(part, minlength=k)
+        assert sizes.max() <= -(-n // k), sizes
+
+
+# ---------------------------------------------------------------------------
+# the engine answer is partitioner-invariant
+# ---------------------------------------------------------------------------
+
+def test_sssp_fixed_point_bitexact_across_partitioners():
+    edges, w, n = grid_graph(8, 40, seed=2)
+    dist = np.full(n, np.inf)
+    dist[0] = 0.0
+    for _ in range(n):                       # Bellman-Ford oracle
+        nd = dist.copy()
+        np.minimum.at(nd, edges[:, 1], dist[edges[:, 0]] + w)
+        if np.array_equal(nd, dist, equal_nan=True):
+            break
+        dist = nd
+    outs = {}
+    for name in PARTITIONERS:
+        g = build_partitioned_graph(edges, n, name, weights=w,
+                                    n_partitions=5)
+        es, _ = run_hybrid(g, SSSP(source=0))
+        outs[name] = unpack_vertex(g, es.state["dist"])
+        np.testing.assert_allclose(outs[name], dist, rtol=1e-5)
+    base = outs.pop("hash")
+    for name, got in outs.items():
+        np.testing.assert_array_equal(base, got, err_msg=name)
+
+
+def test_wcc_fixed_point_bitexact_across_partitioners():
+    edges, n = rmat_graph(300, avg_degree=4, seed=5)
+    e2 = symmetrize(edges)
+    outs = {}
+    for name in PARTITIONERS:
+        g = build_partitioned_graph(e2, n, name, n_partitions=4)
+        es, _ = run_hybrid(g, WCC())
+        outs[name] = unpack_vertex(g, es.state["label"])
+    base = outs.pop("hash")
+    for name, got in outs.items():
+        np.testing.assert_array_equal(base, got, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# vectorized geometric_graph == brute force
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,seed", [(200, 0), (350, 5)])
+def test_geometric_graph_matches_bruteforce(n, seed):
+    edges, _ = geometric_graph(n, seed=seed)
+    rng = np.random.RandomState(seed)
+    r = np.sqrt(6.0 / (np.pi * n))
+    pts = rng.uniform(size=(n, 2))
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    ref = np.argwhere((d2 < r * r) & ~np.eye(n, dtype=bool)).astype(np.int64)
+    np.testing.assert_array_equal(edges, ref)
