@@ -22,7 +22,8 @@ def main() -> None:
                     help="smaller graphs (CI-sized)")
     ap.add_argument("--table", default=None,
                     help="run a single table: sssp|pagerank|bm|giraphpp|"
-                         "kernels|local_phase|dist_phase|partition|roofline")
+                         "kernels|local_phase|dist_phase|partition|ingest|"
+                         "roofline")
     args = ap.parse_args()
 
     if args.table == "dist_phase":
@@ -73,6 +74,12 @@ def main() -> None:
         from benchmarks import partition_bench
         rows += partition_bench.csv_rows(
             partition_bench.bench_partitioners(fast=args.fast))
+    if args.table == "ingest":
+        # explicit-only (spawns a fresh subprocess per measured build;
+        # --fast drops the gated 10^7-edge workload, so CI runs it full)
+        from benchmarks import ingest_bench
+        rows += ingest_bench.csv_rows(
+            ingest_bench.bench_ingest(fast=args.fast))
     if want("roofline"):
         rows += roofline_rows()
 

@@ -205,6 +205,11 @@ def build_partitioned_graph(
     exceeds it spill into up to two extra degree bins (see
     ``kernels.common.ell_bin_widths``), so power-law skew widens only the
     tiny spill bins instead of padding every row to the hub degree.
+
+    For graphs too large to hold as one in-memory edge array, the same
+    structure — bit-identical — is produced out-of-core by
+    ``repro.io.build_partitioned_graph_from_path``, which shares every
+    per-partition helper below.
     """
     edges = np.asarray(edges, dtype=np.int64)
     if isinstance(part, str):
@@ -218,14 +223,81 @@ def build_partitioned_graph(
     if weights is None:
         weights = np.ones(n_edges, dtype=np.float32)
     weights = np.asarray(weights, dtype=np.float32)
-    P = int(part.max()) + 1 if part.size else 1
 
     src, dst = edges[:, 0], edges[:, 1]
     psrc, pdst = part[src], part[dst]
 
     out_degree = np.bincount(src, minlength=n_vertices).astype(np.int32)
 
-    # --- vertex slots per partition --------------------------------------
+    P, verts_by_p, slot_of, Vp = _vertex_slots(part, n_vertices, pad_multiple)
+
+    # --- boundary classification -----------------------------------------
+    is_boundary_g = np.zeros(n_vertices, dtype=bool)
+    cross = psrc != pdst
+    is_boundary_g[dst[cross]] = True
+
+    # --- halo: remote sources needed per partition (sorted unique) --------
+    halo_by_p = [np.unique(src[cross & (pdst == p)]) for p in range(P)]
+
+    # --- exporters: vertices with >= 1 crossing out-edge ------------------
+    exp_pairs = np.unique(
+        np.stack([src[cross], pdst[cross].astype(np.int64)], axis=1), axis=0
+    )
+    exporters_by_p, fanout_by_p, export_idx_of = _export_tables(
+        exp_pairs[:, 0], part, n_vertices, P)
+    X = _round_up(max((len(v) for v in exporters_by_p), default=1), pad_multiple)
+    H = _round_up(max((len(h) for h in halo_by_p), default=1), pad_multiple)
+
+    # --- per-partition in-edge arrays sorted by destination slot ----------
+    per_p: list[dict[str, np.ndarray]] = []
+    for p in range(P):
+        sel = pdst == p
+        per_p.append(_partition_edges(src[sel], dst[sel], weights[sel],
+                                      psrc[sel], p, slot_of, halo_by_p[p],
+                                      Vp, P))
+    Ep = _round_up(max((len(d["w"]) for d in per_p), default=0), pad_multiple)
+    Gp = _round_up(max((len(d["group_remote"]) for d in per_p), default=1),
+                   pad_multiple)
+
+    # --- assemble padded arrays -------------------------------------------
+    arrs = _alloc_core(P, Vp, Ep, X, H, Gp)
+    for p in range(P):
+        _fill_core_partition(
+            arrs, p, per_p[p], verts_by_p[p], is_boundary_g, out_degree,
+            slot_of, exporters_by_p[p], fanout_by_p[p],
+            _halo_ptrs(halo_by_p[p], part, export_idx_of, X))
+
+    # --- sliced-ELL in-edge layouts (destination-major fast paths) --------
+    local_ell: tuple[EllSlice, ...] = ()
+    remote_ell: tuple[EllSlice, ...] = ()
+    if build_ell:
+        picks_l = [_ell_pick(d, negate=False) for d in per_p]
+        picks_r = [_ell_pick(d, negate=True) for d in per_p]
+        local_ell = _build_ell_slices(
+            picks_l.__getitem__, P=P, Vp=Vp, stride=Vp,
+            pad=pad_multiple, slice_pad=ell_pad_slices,
+            base_slices=ell_base_slices)
+        remote_ell = _build_ell_slices(
+            picks_r.__getitem__, P=P, Vp=Vp, stride=Vp + H,
+            pad=pad_multiple, slice_pad=ell_pad_slices,
+            base_slices=ell_base_slices)
+
+    return _finalize_graph(arrs, local_ell, remote_ell, n_partitions=P,
+                           n_vertices=int(n_vertices), n_edges=int(n_edges),
+                           vp=int(Vp), ep=int(Ep), xp=int(X), hp=int(H),
+                           gp=int(Gp))
+
+
+# ---------------------------------------------------------------------------
+# shared build helpers — `repro.io`'s out-of-core builder calls these same
+# functions one partition shard at a time, which is what keeps the two
+# builders bit-identical by construction rather than by test alone
+# ---------------------------------------------------------------------------
+
+def _vertex_slots(part: np.ndarray, n_vertices: int, pad_multiple: int):
+    """Partition-major vertex slot assignment: vertices of partition p in
+    ascending global-id order.  Returns (P, verts_by_p, slot_of, Vp)."""
+    P = int(part.max()) + 1 if part.size else 1
     order_v = np.argsort(part, kind="stable")
     verts_by_p: list[np.ndarray] = []
     slot_of = np.zeros(n_vertices, dtype=np.int64)
@@ -237,208 +309,281 @@ def build_partitioned_graph(
         verts_by_p.append(vs)
         slot_of[vs] = np.arange(len(vs))
     Vp = _round_up(int(counts.max()) if counts.size else 1, pad_multiple)
+    return P, verts_by_p, slot_of, Vp
 
-    # --- boundary classification -----------------------------------------
-    is_boundary_g = np.zeros(n_vertices, dtype=bool)
-    cross = psrc != pdst
-    is_boundary_g[dst[cross]] = True
 
-    # --- exporters: vertices with >= 1 crossing out-edge ------------------
-    # fanout = number of *distinct* remote partitions consuming the export
-    exp_pairs = np.unique(
-        np.stack([src[cross], pdst[cross].astype(np.int64)], axis=1), axis=0
-    )
+def _export_tables(pair_src: np.ndarray, part: np.ndarray, n_vertices: int,
+                   P: int):
+    """Exporter tables from the *unique* (source vertex, destination
+    partition) cross pairs — ``pair_src`` is the source column; fanout is
+    the number of distinct remote partitions consuming each export."""
+    pair_src = np.asarray(pair_src)        # int32 or int64, preserved
     exporters_by_p: list[np.ndarray] = []
     fanout_by_p: list[np.ndarray] = []
-    export_idx_of = np.full(n_vertices, -1, dtype=np.int64)  # slot in own export buf
+    export_idx_of = np.full(n_vertices, -1, dtype=np.int64)
+    psrc_pair = part[pair_src] if pair_src.size else pair_src
     for p in range(P):
-        rows = exp_pairs[part[exp_pairs[:, 0]] == p]
-        vs, fan = (np.unique(rows[:, 0], return_counts=True)
-                   if rows.size else (np.zeros(0, np.int64), np.zeros(0, np.int64)))
+        rows = pair_src[psrc_pair == p]
+        vs, fan = (np.unique(rows, return_counts=True)
+                   if rows.size else (np.zeros(0, np.int64),
+                                      np.zeros(0, np.int64)))
         exporters_by_p.append(vs)
         fanout_by_p.append(fan)
         export_idx_of[vs] = np.arange(len(vs))
-    X = _round_up(max((len(v) for v in exporters_by_p), default=1), pad_multiple)
+    return exporters_by_p, fanout_by_p, export_idx_of
 
-    # --- halo: remote sources needed per partition ------------------------
-    halo_by_p: list[np.ndarray] = []      # global vertex ids (unique) needed
-    halo_slot_of: list[dict[int, int]] = []
-    for p in range(P):
-        need = np.unique(src[cross & (pdst == p)])
-        halo_by_p.append(need)
-        halo_slot_of.append({int(v): i for i, v in enumerate(need)})
-    H = _round_up(max((len(h) for h in halo_by_p), default=1), pad_multiple)
 
-    # --- per-partition in-edge arrays sorted by destination slot ----------
-    Ep = 0
-    per_p: list[dict[str, np.ndarray]] = []
-    for p in range(P):
-        sel = pdst == p
-        es, ed, ew = src[sel], dst[sel], weights[sel]
-        eps = psrc[sel]
-        d_slot = slot_of[ed]
-        # encode source: local slot, or Vp + halo slot
-        s_enc = np.where(
-            eps == p,
-            slot_of[es],
-            Vp + np.array([halo_slot_of[p].get(int(v), 0) for v in es],
-                          dtype=np.int64),
-        )
-        order_e = np.argsort(d_slot, kind="stable")
-        es, ed, ew, eps = es[order_e], ed[order_e], ew[order_e], eps[order_e]
-        d_slot, s_enc = d_slot[order_e], s_enc[order_e]
-        # (dst vertex, src partition) combine groups, dense ids
-        gkey = d_slot * P + eps
-        _, ginv = np.unique(gkey, return_inverse=True)
-        gremote = np.zeros(int(ginv.max()) + 1 if ginv.size else 1, dtype=bool)
-        np.maximum.at(gremote, ginv, eps != p)
-        per_p.append(dict(src_enc=s_enc, dst_slot=d_slot, w=ew,
-                          local=(eps == p), src_gid=es, dst_gid=ed,
-                          group=ginv, group_remote=gremote))
-        Ep = max(Ep, len(es))
-    Ep = _round_up(Ep, pad_multiple)
-    Gp = _round_up(max((len(d["group_remote"]) for d in per_p), default=1),
-                   pad_multiple)
+def _halo_ptrs(halo_need: np.ndarray, part: np.ndarray,
+               export_idx_of: np.ndarray, X: int) -> np.ndarray:
+    """Flat q*X + x pointers into the exporters' buffers for one
+    partition's halo table."""
+    qs = part[halo_need].astype(np.int64)
+    xs = export_idx_of[halo_need]
+    assert (xs >= 0).all(), "halo source must be an exporter"
+    return (qs * X + xs).astype(np.int32)
 
-    # --- assemble padded arrays -------------------------------------------
-    def stack(fn, shape, dtype, fill):
-        out = np.full((P,) + shape, fill, dtype=dtype)
-        for p in range(P):
-            v = fn(p)
-            out[p, : len(v)] = v
-        return out
 
-    vertex_gid = stack(lambda p: verts_by_p[p].astype(np.int32), (Vp,), np.int32, -1)
-    vertex_mask = vertex_gid >= 0
-    is_boundary = stack(lambda p: is_boundary_g[verts_by_p[p]], (Vp,), bool, False)
-    out_deg = stack(lambda p: out_degree[verts_by_p[p]], (Vp,), np.int32, 0)
+def _partition_edges(es: np.ndarray, ed: np.ndarray, ew: np.ndarray,
+                     eps: np.ndarray, p: int, slot_of: np.ndarray,
+                     halo_need: np.ndarray, Vp: int, P: int
+                     ) -> dict[str, np.ndarray]:
+    """One partition's in-edge arrays, sorted by destination slot.
 
-    edge_src = stack(lambda p: per_p[p]["src_enc"].astype(np.int32), (Ep,), np.int32, 0)
-    edge_dst = stack(lambda p: per_p[p]["dst_slot"].astype(np.int32), (Ep,), np.int32, 0)
-    edge_w = stack(lambda p: per_p[p]["w"], (Ep,), np.float32, 0.0)
-    edge_mask = stack(lambda p: np.ones(len(per_p[p]["w"]), bool), (Ep,), bool, False)
-    edge_local = stack(lambda p: per_p[p]["local"], (Ep,), bool, False)
-    edge_src_gid = stack(lambda p: per_p[p]["src_gid"].astype(np.int32), (Ep,), np.int32, -1)
-    edge_dst_gid = stack(lambda p: per_p[p]["dst_gid"].astype(np.int32), (Ep,), np.int32, -1)
-    edge_group = stack(lambda p: per_p[p]["group"].astype(np.int32), (Ep,), np.int32, 0)
-    group_remote = stack(lambda p: per_p[p]["group_remote"], (Gp,), bool, False)
-    group_mask = stack(lambda p: np.ones(len(per_p[p]["group_remote"]), bool), (Gp,), bool, False)
+    ``es``/``ed``/``ew``/``eps`` are the src/dst/weight/src-partition of
+    every edge whose destination lives in partition ``p``, in original
+    edge-list order; ``halo_need`` is the partition's sorted unique remote
+    source list (the halo slot of a remote source is its position there).
+    """
+    d_slot = slot_of[ed]
+    # encode source: local slot, or Vp + halo slot (searchsorted over the
+    # sorted unique halo list; the local branch's lookup value is unused)
+    s_enc = np.where(eps == p, slot_of[es],
+                     Vp + np.searchsorted(halo_need, es))
+    order_e = np.argsort(d_slot, kind="stable")
+    es, ed, ew, eps = es[order_e], ed[order_e], ew[order_e], eps[order_e]
+    d_slot, s_enc = d_slot[order_e], s_enc[order_e]
+    # (dst vertex, src partition) combine groups, dense ids
+    gkey = d_slot * P + eps
+    _, ginv = np.unique(gkey, return_inverse=True)
+    gremote = np.zeros(int(ginv.max()) + 1 if ginv.size else 1, dtype=bool)
+    np.maximum.at(gremote, ginv, eps != p)
+    return dict(src_enc=s_enc, dst_slot=d_slot, w=ew, local=(eps == p),
+                src_gid=es, dst_gid=ed, group=ginv, group_remote=gremote)
 
-    export_slot = stack(lambda p: slot_of[exporters_by_p[p]].astype(np.int32), (X,), np.int32, 0)
-    export_mask = stack(lambda p: np.ones(len(exporters_by_p[p]), bool), (X,), bool, False)
-    export_fanout = stack(lambda p: fanout_by_p[p].astype(np.int32), (X,), np.int32, 0)
 
-    def halo_ptrs(p: int) -> np.ndarray:
-        vs = halo_by_p[p]
-        qs = part[vs].astype(np.int64)
-        xs = export_idx_of[vs]
-        assert (xs >= 0).all(), "halo source must be an exporter"
-        return (qs * X + xs).astype(np.int32)
+_CORE_SPEC = {
+    # name -> (per-partition shape axis, dtype, fill)
+    "vertex_gid": ("Vp", np.int32, -1),
+    "is_boundary": ("Vp", bool, False),
+    "out_degree": ("Vp", np.int32, 0),
+    "edge_src": ("Ep", np.int32, 0),
+    "edge_dst": ("Ep", np.int32, 0),
+    "edge_w": ("Ep", np.float32, 0.0),
+    "edge_mask": ("Ep", bool, False),
+    "edge_local": ("Ep", bool, False),
+    "edge_src_gid": ("Ep", np.int32, -1),
+    "edge_dst_gid": ("Ep", np.int32, -1),
+    "edge_group": ("Ep", np.int32, 0),
+    "group_remote": ("Gp", bool, False),
+    "group_mask": ("Gp", bool, False),
+    "export_slot": ("X", np.int32, 0),
+    "export_mask": ("X", bool, False),
+    "export_fanout": ("X", np.int32, 0),
+    "halo_ptr": ("H", np.int32, 0),
+    "halo_mask": ("H", bool, False),
+}
 
-    halo_ptr = stack(halo_ptrs, (H,), np.int32, 0)
-    halo_mask = stack(lambda p: np.ones(len(halo_by_p[p]), bool), (H,), bool, False)
 
-    # --- sliced-ELL in-edge layouts (destination-major fast paths) --------
-    local_ell: tuple[EllSlice, ...] = ()
-    remote_ell: tuple[EllSlice, ...] = ()
-    if build_ell:
-        local_ell = _build_ell_slices(
-            per_p, sel_key="local", negate=False, P=P, Vp=Vp, stride=Vp,
-            pad=pad_multiple, slice_pad=ell_pad_slices,
-            base_slices=ell_base_slices)
-        remote_ell = _build_ell_slices(
-            per_p, sel_key="local", negate=True, P=P, Vp=Vp, stride=Vp + H,
-            pad=pad_multiple, slice_pad=ell_pad_slices,
-            base_slices=ell_base_slices)
+def _alloc_core(P: int, Vp: int, Ep: int, X: int, H: int, Gp: int
+                ) -> dict[str, np.ndarray]:
+    dims = {"Vp": Vp, "Ep": Ep, "X": X, "H": H, "Gp": Gp}
+    return {name: np.full((P, dims[axis]), fill, dtype=dtype)
+            for name, (axis, dtype, fill) in _CORE_SPEC.items()}
+
+
+def _fill_core_partition(arrs: dict[str, np.ndarray], p: int,
+                         e: dict[str, np.ndarray], verts: np.ndarray,
+                         is_boundary_g: np.ndarray, out_degree: np.ndarray,
+                         slot_of: np.ndarray, exporters: np.ndarray,
+                         fanout: np.ndarray, halo_ptrs: np.ndarray) -> None:
+    """Write one partition's row of every padded core array."""
+    nv = len(verts)
+    arrs["vertex_gid"][p, :nv] = verts.astype(np.int32)
+    arrs["is_boundary"][p, :nv] = is_boundary_g[verts]
+    arrs["out_degree"][p, :nv] = out_degree[verts]
+    ne = len(e["w"])
+    arrs["edge_src"][p, :ne] = e["src_enc"].astype(np.int32)
+    arrs["edge_dst"][p, :ne] = e["dst_slot"].astype(np.int32)
+    arrs["edge_w"][p, :ne] = e["w"]
+    arrs["edge_mask"][p, :ne] = True
+    arrs["edge_local"][p, :ne] = e["local"]
+    arrs["edge_src_gid"][p, :ne] = e["src_gid"].astype(np.int32)
+    arrs["edge_dst_gid"][p, :ne] = e["dst_gid"].astype(np.int32)
+    arrs["edge_group"][p, :ne] = e["group"].astype(np.int32)
+    ng = len(e["group_remote"])
+    arrs["group_remote"][p, :ng] = e["group_remote"]
+    arrs["group_mask"][p, :ng] = True
+    nx = len(exporters)
+    arrs["export_slot"][p, :nx] = slot_of[exporters].astype(np.int32)
+    arrs["export_mask"][p, :nx] = True
+    arrs["export_fanout"][p, :nx] = fanout.astype(np.int32)
+    nh = len(halo_ptrs)
+    arrs["halo_ptr"][p, :nh] = halo_ptrs
+    arrs["halo_mask"][p, :nh] = True
+
+
+def _finalize_graph(arrs: dict[str, np.ndarray],
+                    local_ell: tuple[EllSlice, ...],
+                    remote_ell: tuple[EllSlice, ...], *, n_partitions: int,
+                    n_vertices: int, n_edges: int, vp: int, ep: int, xp: int,
+                    hp: int, gp: int) -> PartitionedGraph:
+    """Convert the filled numpy arrays to the on-device pytree, dropping
+    each host copy as soon as it is converted (the out-of-core path's peak
+    memory is the final structure, not twice it)."""
+    vertex_mask = arrs["vertex_gid"] >= 0
+
+    def take(name: str):
+        return jnp.asarray(arrs.pop(name))
 
     return PartitionedGraph(
-        vertex_gid=jnp.asarray(vertex_gid), vertex_mask=jnp.asarray(vertex_mask),
-        is_boundary=jnp.asarray(is_boundary), out_degree=jnp.asarray(out_deg),
-        edge_src=jnp.asarray(edge_src), edge_dst=jnp.asarray(edge_dst),
-        edge_w=jnp.asarray(edge_w), edge_mask=jnp.asarray(edge_mask),
-        edge_local=jnp.asarray(edge_local),
-        edge_src_gid=jnp.asarray(edge_src_gid), edge_dst_gid=jnp.asarray(edge_dst_gid),
-        edge_group=jnp.asarray(edge_group), group_remote=jnp.asarray(group_remote),
-        group_mask=jnp.asarray(group_mask),
-        export_slot=jnp.asarray(export_slot), export_mask=jnp.asarray(export_mask),
-        export_fanout=jnp.asarray(export_fanout),
-        halo_ptr=jnp.asarray(halo_ptr), halo_mask=jnp.asarray(halo_mask),
+        vertex_gid=take("vertex_gid"), vertex_mask=jnp.asarray(vertex_mask),
+        is_boundary=take("is_boundary"), out_degree=take("out_degree"),
+        edge_src=take("edge_src"), edge_dst=take("edge_dst"),
+        edge_w=take("edge_w"), edge_mask=take("edge_mask"),
+        edge_local=take("edge_local"),
+        edge_src_gid=take("edge_src_gid"), edge_dst_gid=take("edge_dst_gid"),
+        edge_group=take("edge_group"), group_remote=take("group_remote"),
+        group_mask=take("group_mask"),
+        export_slot=take("export_slot"), export_mask=take("export_mask"),
+        export_fanout=take("export_fanout"),
+        halo_ptr=take("halo_ptr"), halo_mask=take("halo_mask"),
         local_ell=local_ell, remote_ell=remote_ell,
-        n_partitions=P, n_vertices=int(n_vertices), n_edges=int(n_edges),
-        vp=int(Vp), ep=int(Ep), xp=int(X), hp=int(H), gp=int(Gp),
+        n_partitions=n_partitions, n_vertices=n_vertices, n_edges=n_edges,
+        vp=vp, ep=ep, xp=xp, hp=hp, gp=gp,
     )
 
 
-def _build_ell_slices(per_p, sel_key: str, negate: bool, P: int, Vp: int,
-                      stride: int, pad: int, slice_pad: int,
-                      base_slices: int) -> tuple[EllSlice, ...]:
-    """Pack one side (local or remote) of every partition's in-edges into
-    shared-width sliced-ELL degree bins, flat views precomputed."""
-    from repro.kernels.common import ell_bin_widths, sliced_ell_pack_numpy
+def _ell_pick(e: dict[str, np.ndarray], negate: bool) -> dict[str, np.ndarray]:
+    """Select one side (local or remote) of a partition's in-edges and
+    precompute the stable dst argsort + per-edge rank within its
+    destination run, shared by the packer and the per-bin source-gid
+    bound."""
+    sel = e["local"]
+    if negate:
+        sel = np.logical_not(sel)
+    pick = dict(src=e["src_enc"][sel], dst=e["dst_slot"][sel],
+                w=e["w"][sel], gid=e["src_gid"][sel], grp=e["group"][sel])
+    order = np.argsort(pick["dst"], kind="stable")
+    dst_s = pick["dst"][order]
+    pick["order"] = order
+    pick["gid_ranked"] = pick["gid"][order]
+    pick["rank"] = (np.arange(len(dst_s))
+                    - np.searchsorted(dst_s, dst_s, side="left"))
+    return pick
 
-    picks = []
-    kmax = 0
-    for p in range(P):
-        sel = per_p[p][sel_key]
-        if negate:
-            sel = np.logical_not(sel)
-        e = dict(src=per_p[p]["src_enc"][sel], dst=per_p[p]["dst_slot"][sel],
-                 w=per_p[p]["w"][sel], gid=per_p[p]["src_gid"][sel],
-                 grp=per_p[p]["group"][sel])
-        if len(e["dst"]):
-            kmax = max(kmax, int(np.bincount(e["dst"], minlength=Vp).max()))
-        # per-edge rank within its destination run — computed once, handed
-        # to the packer and shared by every bin's source-gid bound below
-        order = np.argsort(e["dst"], kind="stable")
-        dst_s = e["dst"][order]
-        e["order"] = order
-        e["gid_ranked"] = e["gid"][order]
-        e["rank"] = (np.arange(len(dst_s))
-                     - np.searchsorted(dst_s, dst_s, side="left"))
-        picks.append(e)
+
+def _ell_plan(slot_degrees: list[np.ndarray], Vp: int, pad: int,
+              slice_pad: int, base_slices: int):
+    """Bin widths + per-bin row counts from the per-partition destination-
+    slot in-degree histograms.  Returns (widths, nbs); ([], []) when the
+    edge side is empty."""
+    from repro.kernels.common import ell_bin_widths
+
+    kmax = max((int(d.max()) for d in slot_degrees if len(d)), default=0)
     widths = ell_bin_widths(kmax, base_slices, slice_pad)
-    if not widths:
-        return ()
+    nbs = [Vp if lo == 0 else
+           _round_up(max(int((d > lo).sum()) for d in slot_degrees), pad)
+           for lo, kb in widths]
+    return widths, nbs
 
-    packs = [sliced_ell_pack_numpy(e["src"], e["dst"], e["w"], Vp, widths,
-                                   order_rank=(e["order"], e["rank"]),
-                                   extras=(e["grp"],))
-             for e in picks]
-    slices = []
+
+def _ell_alloc(widths, nbs, P: int, Vp: int) -> list[dict[str, np.ndarray]]:
+    arrs = []
+    for (lo, kb), Nb in zip(widths, nbs):
+        arrs.append(dict(
+            rows=np.full((P, Nb), Vp, dtype=np.int32),
+            idx=np.zeros((P, Nb, kb), dtype=np.int32),
+            val=np.zeros((P, Nb, kb), dtype=np.float32),
+            msk=np.zeros((P, Nb, kb), dtype=bool),
+            grp=np.zeros((P, Nb, kb), dtype=np.int32),
+            flat_rows=np.full((P, Nb), P * Vp, dtype=np.int32)))
+    return arrs
+
+
+def _ell_fill_partition(arrs: list[dict[str, np.ndarray]], widths, p: int,
+                        pick: dict[str, np.ndarray], P: int, Vp: int
+                        ) -> list[int]:
+    """Pack one partition's picked edge side and write its rows into every
+    bin's arrays; returns the per-bin max-source-gid contributions."""
+    from repro.kernels.common import sliced_ell_pack_numpy
+
+    packs = sliced_ell_pack_numpy(pick["src"], pick["dst"], pick["w"], Vp,
+                                  widths,
+                                  order_rank=(pick["order"], pick["rank"]),
+                                  extras=(pick["grp"],))
+    bounds = []
     for b, (lo, kb) in enumerate(widths):
-        dense = lo == 0
-        if dense:
-            Nb = Vp
+        rows_b, idx_b, val_b, msk_b, grp_b = packs[b]
+        a = arrs[b]
+        if rows_b is None:                      # dense base bin
+            a["rows"][p] = np.arange(Vp, dtype=np.int32)
         else:
-            Nb = _round_up(max(len(packs[p][b][0]) for p in range(P)), pad)
-        rows = np.full((P, Nb), Vp, dtype=np.int32)
-        idx = np.zeros((P, Nb, kb), dtype=np.int32)
-        val = np.zeros((P, Nb, kb), dtype=np.float32)
-        msk = np.zeros((P, Nb, kb), dtype=bool)
-        grp = np.zeros((P, Nb, kb), dtype=np.int32)
-        flat_rows = np.full((P, Nb), P * Vp, dtype=np.int32)
-        bound = -1
-        for p in range(P):
-            rows_b, idx_b, val_b, msk_b, grp_b = packs[p][b]
-            if rows_b is None:                      # dense base bin
-                rows[p] = np.arange(Vp, dtype=np.int32)
-            else:
-                rows[p, : len(rows_b)] = rows_b
-            n = idx_b.shape[0]
-            idx[p, :n], val[p, :n], msk[p, :n] = idx_b, val_b, msk_b
-            grp[p, :n] = grp_b
-            flat_rows[p] = np.where(rows[p] < Vp, p * Vp + rows[p], P * Vp)
-            bound = max(bound, _bin_src_bound(picks[p], lo, kb))
-        flat_idx = idx + (np.arange(P, dtype=np.int32) * stride)[:, None, None]
+            a["rows"][p, : len(rows_b)] = rows_b
+        n = idx_b.shape[0]
+        a["idx"][p, :n], a["val"][p, :n], a["msk"][p, :n] = idx_b, val_b, msk_b
+        a["grp"][p, :n] = grp_b
+        a["flat_rows"][p] = np.where(a["rows"][p] < Vp, p * Vp + a["rows"][p],
+                                     P * Vp)
+        bounds.append(_bin_src_bound(pick, lo, kb))
+    return bounds
+
+
+def _ell_finalize(arrs: list[dict[str, np.ndarray]], widths, bounds: list[int],
+                  P: int, Vp: int, stride: int) -> tuple[EllSlice, ...]:
+    slices = []
+    for (lo, kb), a, bound in zip(widths, arrs, bounds):
+        Nb = a["rows"].shape[1]
+        # the out-of-core row spill precomputes flat_idx per committed row
+        # (same int32 arithmetic); everyone else derives it here
+        flat_idx = a.pop("flat_idx", None)
+        if flat_idx is None:
+            flat_idx = a["idx"] + (np.arange(P, dtype=np.int32)
+                                   * stride)[:, None, None]
         slices.append(EllSlice(
-            rows=jnp.asarray(rows), idx=jnp.asarray(idx),
-            val=jnp.asarray(val), msk=jnp.asarray(msk),
-            grp=jnp.asarray(grp),
-            flat_rows=jnp.asarray(flat_rows.reshape(-1)),
+            rows=jnp.asarray(a.pop("rows")), idx=jnp.asarray(a.pop("idx")),
+            val=jnp.asarray(a.pop("val")), msk=jnp.asarray(a.pop("msk")),
+            grp=jnp.asarray(a.pop("grp")),
+            flat_rows=jnp.asarray(a.pop("flat_rows").reshape(-1)),
             flat_idx=jnp.asarray(flat_idx.reshape(P * Nb, kb)),
-            nb=int(Nb), kb=int(kb), lo=int(lo), dense=bool(dense),
+            nb=int(Nb), kb=int(kb), lo=int(lo), dense=bool(lo == 0),
             stride=int(stride), payload_bound=int(bound)))
     return tuple(slices)
+
+
+def _build_ell_slices(make_pick, P: int, Vp: int, stride: int, pad: int,
+                      slice_pad: int, base_slices: int
+                      ) -> tuple[EllSlice, ...]:
+    """Pack one side (local or remote) of every partition's in-edges into
+    shared-width sliced-ELL degree bins, flat views precomputed.
+
+    ``make_pick(p)`` returns partition p's pick dict (see ``_ell_pick``);
+    it is called twice per partition — once for the degree histograms that
+    fix the bin widths, once for the fill — so callers that cannot hold
+    every pick at once (the out-of-core builder) stay memory-bounded.
+    """
+    degs = []
+    for p in range(P):
+        e = make_pick(p)
+        degs.append(np.bincount(e["dst"], minlength=Vp))
+    widths, nbs = _ell_plan(degs, Vp, pad, slice_pad, base_slices)
+    if not widths:
+        return ()
+    arrs = _ell_alloc(widths, nbs, P, Vp)
+    bounds = [-1] * len(widths)
+    for p in range(P):
+        contrib = _ell_fill_partition(arrs, widths, p, make_pick(p), P, Vp)
+        bounds = [max(b, c) for b, c in zip(bounds, contrib)]
+    return _ell_finalize(arrs, widths, bounds, P, Vp, stride)
 
 
 def _bin_src_bound(e: dict, lo: int, kb: int) -> int:

@@ -18,7 +18,20 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = ["grid_graph", "rmat_graph", "bipartite_graph", "geometric_graph",
-           "path_graph", "cycle_graph", "symmetrize", "ensure_no_dangling"]
+           "path_graph", "cycle_graph", "symmetrize", "ensure_no_dangling",
+           "materialize"]
+
+
+def materialize(path: str, kind: str, **params):
+    """Stage a synthetic graph on disk as a binary edge directory that the
+    ``repro.io`` out-of-core pipeline (and ``python -m repro.io.convert``)
+    consumes — how benchmarks put a 10^7-edge R-MAT on disk once instead
+    of re-synthesizing it per consumer.  ``kind`` is one of 'rmat' |
+    'grid' | 'geometric' | 'bipartite' | 'path' | 'cycle'; ``params`` pass
+    through to the generator (plus ``symmetrize=True``).  Returns the
+    opened :class:`repro.io.StagedEdgeSource`."""
+    from repro.io.stage import materialize as _materialize
+    return _materialize(path, kind, **params)
 
 
 def symmetrize(edges: np.ndarray) -> np.ndarray:

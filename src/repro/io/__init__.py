@@ -1,0 +1,41 @@
+"""Graph I/O subsystem: chunked readers, the sharded ``.ghp`` on-disk
+format, and the out-of-core partition/build pipeline.
+
+The in-memory path (``repro.data.graphs`` -> ``build_partitioned_graph``)
+caps the platform at one host's RAM; this package is the disk-backed
+on-ramp for everything bigger:
+
+  * :mod:`repro.io.readers` — bounded ``(chunk, 2)`` int64 blocks from
+    SNAP-style text (gzip-aware), staged binary, or in-memory arrays;
+  * :mod:`repro.io.stage`   — binary staging + ``materialize`` for
+    putting synthetic graphs on disk;
+  * :mod:`repro.io.format`  — the ``.ghp`` sharded format:
+    ``meta.json`` + per-partition mmap-loadable ``.npy`` edge shards,
+    ``save_graph``/``load_graph`` round-trip, validated errors;
+  * :mod:`repro.io.pipeline` — streaming degree pass, external-CSR
+    fennel, destination-partition spill, and the out-of-core builder
+    behind :func:`build_partitioned_graph_from_path` (bit-identical to
+    the in-memory builder, peak memory O(chunk + largest partition));
+  * ``python -m repro.io.convert`` — edge list -> ``.ghp`` CLI.
+"""
+
+from repro.io.digest import graph_digest
+from repro.io.format import (GraphFormatError, ShardedGraph, load_graph,
+                             save_graph)
+from repro.io.pipeline import (build_from_sharded,
+                               build_partitioned_graph_from_path,
+                               degree_pass, external_undirected_csr,
+                               spill_to_ghp)
+from repro.io.readers import (ArrayEdgeSource, EdgeSource, StagedEdgeSource,
+                              TextEdgeSource, open_edge_source)
+from repro.io.stage import materialize, stage_arrays, stage_edges
+
+__all__ = [
+    "GraphFormatError", "ShardedGraph", "save_graph", "load_graph",
+    "graph_digest",
+    "build_from_sharded", "build_partitioned_graph_from_path",
+    "degree_pass", "external_undirected_csr", "spill_to_ghp",
+    "EdgeSource", "ArrayEdgeSource", "TextEdgeSource", "StagedEdgeSource",
+    "open_edge_source",
+    "materialize", "stage_arrays", "stage_edges",
+]

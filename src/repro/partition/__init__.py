@@ -26,14 +26,14 @@ from __future__ import annotations
 import numpy as np
 
 from repro.partition.seed import bfs_partition, hash_partition
-from repro.partition.streaming import fennel_partition
+from repro.partition.streaming import fennel_partition, fennel_partition_csr
 from repro.partition.multilevel import multilevel_partition
 from repro.partition.quality import PartitionReport, partition_report
 
 __all__ = [
     "hash_partition", "bfs_partition", "fennel_partition",
-    "multilevel_partition", "PartitionReport", "partition_report",
-    "PARTITIONERS", "make_partition",
+    "fennel_partition_csr", "multilevel_partition", "PartitionReport",
+    "partition_report", "PARTITIONERS", "make_partition",
 ]
 
 # uniform signature: (edges, n_vertices, n_partitions, seed, **kw) -> labels

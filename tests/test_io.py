@@ -1,0 +1,384 @@
+"""Graph I/O subsystem tests.
+
+  * ``save_graph``/``load_graph`` round-trip: arbitrary random edge lists
+    (both int dtypes, weighted and not) reproduce the original edge array
+    exactly through the sharded ``.ghp`` format — via a seeded sweep
+    always, and a hypothesis property test when hypothesis is installed;
+  * chunk-size invariance: ``build_partitioned_graph_from_path`` is
+    bit-identical to the in-memory ``build_partitioned_graph`` for every
+    partitioner name and wildly different chunk sizes (the acceptance bar
+    of the out-of-core pipeline), including ELL layouts and spill bins;
+  * truncated / corrupt / inconsistent ``meta.json`` and shard files
+    raise :class:`GraphFormatError` instead of building a wrong graph;
+  * the chunked gzip text reader parses SNAP-style files (comments,
+    optional weight column) identically across chunk boundaries;
+  * the external-CSR fennel path labels exactly like the in-memory one,
+    and the blocked scorer is deterministic per seed;
+  * the checked-in ``tests/data/web_toy.tsv.gz`` fixture converts
+    end-to-end (the same flow CI drives through the convert CLI).
+"""
+
+import gzip
+import importlib.util
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import build_partitioned_graph, run_hybrid
+from repro.core.apps import SSSP
+from repro.core.graph import unpack_vertex
+from repro.data.graphs import grid_graph, materialize, rmat_graph
+from repro.io import (ArrayEdgeSource, GraphFormatError, TextEdgeSource,
+                      build_partitioned_graph_from_path, graph_digest,
+                      load_graph, open_edge_source, save_graph)
+from repro.io.pipeline import degree_pass, external_undirected_csr
+from repro.io.stage import stage_arrays, stage_edges
+from repro.partition import (PARTITIONERS, fennel_partition,
+                             fennel_partition_csr, make_partition)
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "web_toy.tsv.gz")
+
+
+def _random_graph(seed, weighted=True, dtype=np.int64):
+    rng = np.random.RandomState(seed)
+    n = int(rng.randint(5, 40))
+    m = int(rng.randint(n, 4 * n))
+    edges = rng.randint(0, n, size=(m, 2))
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    if len(edges) == 0:
+        edges = np.array([[0, 1]])
+    edges = np.unique(edges, axis=0).astype(dtype)
+    w = (rng.uniform(0.1, 5.0, len(edges)).astype(np.float32)
+         if weighted else None)
+    return edges, n, w
+
+
+# ---------------------------------------------------------------------------
+# save/load round trip
+# ---------------------------------------------------------------------------
+
+def _check_roundtrip(tmp_path, edges, n, w, k, seed):
+    part = make_partition("hash", edges, n, k, seed=seed)
+    path = os.path.join(tmp_path, "g.ghp")
+    shutil.rmtree(path, ignore_errors=True)
+    sg = save_graph(path, edges, n, part, weights=w)
+    lg = load_graph(path)
+    assert lg.n_vertices == n and lg.n_edges == len(edges)
+    assert np.array_equal(lg.part, part)
+    got_e, got_w = lg.edges()
+    assert got_e.dtype == edges.dtype
+    np.testing.assert_array_equal(got_e, edges)
+    if w is None:
+        assert got_w is None
+    else:
+        np.testing.assert_array_equal(got_w, w)
+    # each shard holds exactly its partition's in-edges, in original order
+    for p in range(lg.n_partitions):
+        se, _, pos = lg.shard(p)
+        sel = part[edges[:, 1]] == p
+        np.testing.assert_array_equal(np.asarray(se), edges[sel])
+        np.testing.assert_array_equal(np.asarray(pos), np.nonzero(sel)[0])
+
+
+@pytest.mark.parametrize("dtype", [np.int64, np.int32])
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_roundtrip_seeded_sweep(tmp_path, dtype, seed):
+    edges, n, w = _random_graph(seed, weighted=seed % 2 == 0, dtype=dtype)
+    _check_roundtrip(str(tmp_path), edges, n, w, k=3 + seed % 3,
+                     seed=seed % 17)
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16), dtype=st.sampled_from([np.int64,
+                                                              np.int32]),
+           weighted=st.booleans(), k=st.integers(1, 6))
+    def test_roundtrip_any_graph(tmp_path_factory, seed, dtype, weighted, k):
+        tmp = tmp_path_factory.mktemp("ghp")
+        edges, n, w = _random_graph(seed, weighted=weighted, dtype=dtype)
+        _check_roundtrip(str(tmp), edges, n, w, k=k, seed=seed % 97)
+
+
+# ---------------------------------------------------------------------------
+# chunk-size invariance: out-of-core build == in-memory build, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pname", sorted(PARTITIONERS))
+def test_from_path_bitexact_per_partitioner(tmp_path, pname):
+    edges, n = rmat_graph(260, avg_degree=5, seed=2)
+    w = np.random.RandomState(1).uniform(0.5, 2.0,
+                                         len(edges)).astype(np.float32)
+    staged = str(tmp_path / "staged")
+    stage_arrays(staged, edges, weights=w, n_vertices=n)
+    ref = graph_digest(build_partitioned_graph(
+        edges, n, pname, weights=w, n_partitions=4, partition_seed=0))
+    for chunk in (11, 97, 1 << 20):
+        g = build_partitioned_graph_from_path(staged, pname, 4,
+                                              chunk_edges=chunk,
+                                              partition_seed=0)
+        assert graph_digest(g) == ref, f"{pname} chunk={chunk}"
+
+
+def test_from_path_bitexact_with_spill_bins(tmp_path):
+    """Hub-heavy graph with a tiny base bin: the sliced-ELL spill bins of
+    the out-of-core build must match the in-memory ones exactly too."""
+    rng = np.random.RandomState(4)
+    hub = np.concatenate([
+        np.stack([rng.randint(0, 150, 700), np.full(700, 3)], axis=1),
+        rng.randint(0, 150, (350, 2))])
+    hub = np.unique(hub[hub[:, 0] != hub[:, 1]].astype(np.int64), axis=0)
+    staged = str(tmp_path / "staged")
+    stage_arrays(staged, hub, n_vertices=150)
+    ref = build_partitioned_graph(hub, 150, "fennel", n_partitions=3,
+                                  ell_base_slices=8)
+    assert len(ref.local_ell) > 1            # binning actually engaged
+    g = build_partitioned_graph_from_path(staged, "fennel", 3,
+                                          chunk_edges=64, ell_base_slices=8)
+    assert graph_digest(g) == graph_digest(ref)
+
+
+def test_from_path_runs_the_engine(tmp_path):
+    """The out-of-core graph is not just byte-equal — it runs."""
+    edges, w, n = grid_graph(6, 18, seed=0)
+    staged = str(tmp_path / "staged")
+    stage_arrays(staged, edges, weights=w, n_vertices=n)
+    g = build_partitioned_graph_from_path(staged, "bfs", 3)
+    g_ref = build_partitioned_graph(edges, n, "bfs", weights=w,
+                                    n_partitions=3)
+    es, it = run_hybrid(g, SSSP(source=0))
+    es_ref, it_ref = run_hybrid(g_ref, SSSP(source=0))
+    assert it == it_ref
+    np.testing.assert_array_equal(unpack_vertex(g, es.state["dist"]),
+                                  unpack_vertex(g_ref,
+                                                es_ref.state["dist"]))
+
+
+def test_from_path_ghp_input_and_ghp_out(tmp_path):
+    edges, n = rmat_graph(150, avg_degree=4, seed=6)
+    part = make_partition("multilevel", edges, n, 3, seed=0)
+    ghp = str(tmp_path / "g.ghp")
+    save_graph(ghp, edges, n, part)
+    ref = graph_digest(build_partitioned_graph(edges, n, part))
+    assert graph_digest(build_partitioned_graph_from_path(ghp)) == ref
+    with pytest.raises(ValueError):
+        build_partitioned_graph_from_path(ghp, "hash", 3)
+    # ghp_out keeps the sharded intermediate, and it rebuilds identically
+    staged = str(tmp_path / "staged")
+    stage_arrays(staged, edges, n_vertices=n)
+    kept = str(tmp_path / "kept.ghp")
+    g = build_partitioned_graph_from_path(staged, part, ghp_out=kept)
+    assert graph_digest(g) == ref
+    assert graph_digest(build_partitioned_graph_from_path(kept)) == ref
+
+
+# ---------------------------------------------------------------------------
+# corrupt / truncated metadata error paths
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def ghp_dir(tmp_path):
+    edges, n = rmat_graph(80, avg_degree=4, seed=9)
+    path = str(tmp_path / "g.ghp")
+    save_graph(path, edges, n, make_partition("hash", edges, n, 3))
+    return path
+
+
+def _rewrite_meta(path, fn):
+    mp = os.path.join(path, "meta.json")
+    with open(mp) as f:
+        meta = json.load(f)
+    out = fn(meta)
+    with open(mp, "w") as f:
+        f.write(out if isinstance(out, str) else json.dumps(out))
+
+
+def test_missing_meta(ghp_dir):
+    os.remove(os.path.join(ghp_dir, "meta.json"))
+    with pytest.raises(GraphFormatError, match="missing"):
+        load_graph(ghp_dir)
+
+
+def test_truncated_meta(ghp_dir):
+    raw = open(os.path.join(ghp_dir, "meta.json")).read()
+    _rewrite_meta(ghp_dir, lambda m: raw[: len(raw) // 2])
+    with pytest.raises(GraphFormatError, match="corrupt or truncated"):
+        load_graph(ghp_dir)
+
+
+def test_wrong_format_tag(ghp_dir):
+    _rewrite_meta(ghp_dir, lambda m: {**m, "format": "parquet"})
+    with pytest.raises(GraphFormatError, match="format tag"):
+        load_graph(ghp_dir)
+
+
+def test_unsupported_version(ghp_dir):
+    _rewrite_meta(ghp_dir, lambda m: {**m, "version": 99})
+    with pytest.raises(GraphFormatError, match="version"):
+        load_graph(ghp_dir)
+
+
+def test_missing_meta_keys(ghp_dir):
+    _rewrite_meta(ghp_dir, lambda m: {k: v for k, v in m.items()
+                                      if k != "n_edges"})
+    with pytest.raises(GraphFormatError, match="missing keys"):
+        load_graph(ghp_dir)
+
+
+def test_shard_range_sum_mismatch(ghp_dir):
+    def bump(m):
+        m["shards"][0]["n_edges"] += 1
+        return m
+    _rewrite_meta(ghp_dir, bump)
+    with pytest.raises(GraphFormatError, match="shard ranges sum"):
+        load_graph(ghp_dir)
+
+
+def test_missing_shard_file(ghp_dir):
+    os.remove(os.path.join(ghp_dir, "shards", "part00001.edges.npy"))
+    with pytest.raises(GraphFormatError, match="shard file missing"):
+        load_graph(ghp_dir).shard(1)
+
+
+def test_shard_shape_mismatch(ghp_dir):
+    p = os.path.join(ghp_dir, "shards", "part00000.edges.npy")
+    arr = np.load(p)
+    np.save(p, arr[:-1])
+    with pytest.raises(GraphFormatError, match="meta says"):
+        load_graph(ghp_dir).shard(0)
+
+
+def test_part_length_mismatch(ghp_dir):
+    part = np.load(os.path.join(ghp_dir, "part.npy"))
+    np.save(os.path.join(ghp_dir, "part.npy"), part[:-2])
+    with pytest.raises(GraphFormatError, match="meta says"):
+        load_graph(ghp_dir)
+
+
+def test_out_of_range_ids_rejected(tmp_path):
+    """Ids the target dtype cannot hold — and negative ids, which would
+    wrap part[]/slot_of[] lookups into a wrong graph — fail loudly."""
+    big = np.array([[0, 2**31 + 5], [1, 0]], dtype=np.int64)
+    with pytest.raises(GraphFormatError, match="does not fit"):
+        stage_arrays(str(tmp_path / "s"), big, dtype=np.int32)
+    neg = np.array([[0, 1], [1, -3]], dtype=np.int64)
+    with pytest.raises(GraphFormatError, match="negative vertex id"):
+        save_graph(str(tmp_path / "g.ghp"), neg, 5, np.zeros(5, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# chunked text reader
+# ---------------------------------------------------------------------------
+
+def test_text_reader_chunks_and_comments(tmp_path):
+    edges, n = rmat_graph(60, avg_degree=3, seed=5)
+    p = str(tmp_path / "plain.tsv")
+    with open(p, "w") as f:
+        f.write("# header\n\n")
+        for i, (a, b) in enumerate(edges):
+            f.write(f"{a}\t{b}\n")
+            if i % 17 == 0:
+                f.write("# interleaved comment\n")
+    for chunk in (3, 29, 10000):
+        src = TextEdgeSource(p, chunk_edges=chunk)
+        got = np.concatenate([c for c, w in src.chunks()])
+        assert src.weighted is False
+        np.testing.assert_array_equal(got, edges)
+
+
+def test_text_reader_weights_and_gzip(tmp_path):
+    p = str(tmp_path / "w.tsv.gz")
+    with gzip.open(p, "wt") as f:
+        f.write("0 1 0.5\n1 2 1.25\n2 0 3.0\n")
+    src = open_edge_source(p, 2)
+    chunks = list(src.chunks())
+    assert src.weighted is True
+    e = np.concatenate([c for c, _ in chunks])
+    w = np.concatenate([x for _, x in chunks])
+    np.testing.assert_array_equal(e, [[0, 1], [1, 2], [2, 0]])
+    np.testing.assert_allclose(w, [0.5, 1.25, 3.0])
+
+
+def test_text_reader_bad_columns(tmp_path):
+    p = str(tmp_path / "bad.tsv")
+    with open(p, "w") as f:
+        f.write("0 1 2 3\n")
+    with pytest.raises(ValueError, match="2 or 3 columns"):
+        list(TextEdgeSource(p).chunks())
+
+
+def test_fixture_parses_and_converts(tmp_path):
+    """The checked-in gz fixture (what CI feeds the convert CLI)."""
+    src = open_edge_source(FIXTURE, 64)
+    nv, ne, out_deg, in_deg = degree_pass(src)
+    assert ne == 270 and nv == 94 and src.weighted
+    assert int(out_deg.sum()) == ne == int(in_deg.sum())
+    g = build_partitioned_graph_from_path(FIXTURE, "fennel", 4,
+                                          chunk_edges=37)
+    e = np.concatenate([c for c, _ in src.chunks()])
+    w = np.concatenate([x for _, x in src.chunks()])
+    ref = build_partitioned_graph(e, nv, "fennel", weights=w,
+                                  n_partitions=4)
+    assert graph_digest(g) == graph_digest(ref)
+
+
+# ---------------------------------------------------------------------------
+# external CSR + blocked fennel
+# ---------------------------------------------------------------------------
+
+def test_external_csr_fennel_matches_inmemory(tmp_path):
+    edges, n = rmat_graph(500, avg_degree=6, seed=3)
+    src = ArrayEdgeSource(edges, n_vertices=n, chunk_edges=83)
+    _, _, out_deg, in_deg = degree_pass(src)
+    starts, adj = external_undirected_csr(src, n, out_deg + in_deg,
+                                          str(tmp_path))
+    for seed in (0, 5):
+        a = fennel_partition(edges, n, 4, seed=seed)
+        b = fennel_partition_csr(starts, adj, n, 4, n_edges=len(edges),
+                                 seed=seed)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fennel_blocked_deterministic_and_block_invariant():
+    edges, n = rmat_graph(400, avg_degree=5, seed=8)
+    from repro.partition.seed import undirected_csr
+    starts, adj = undirected_csr(edges, n)
+    base = fennel_partition_csr(starts, adj, n, 5, n_edges=len(edges),
+                                seed=2)
+    for block in (1, 37, 100000):
+        got = fennel_partition_csr(starts, adj, n, 5, n_edges=len(edges),
+                                   seed=2, block=block)
+        np.testing.assert_array_equal(got, base)
+
+
+# ---------------------------------------------------------------------------
+# staging / materialize
+# ---------------------------------------------------------------------------
+
+def test_materialize_then_build(tmp_path):
+    staged = materialize(str(tmp_path / "m"), "rmat", n=300, avg_degree=4,
+                         seed=1)
+    edges, n = rmat_graph(300, avg_degree=4, seed=1)
+    assert staged.n_edges == len(edges) and staged.n_vertices == n
+    got = np.concatenate([c for c, _ in staged.chunks()])
+    np.testing.assert_array_equal(got, edges)
+    g = build_partitioned_graph_from_path(str(tmp_path / "m"), "hash", 3)
+    ref = build_partitioned_graph(edges, n, "hash", n_partitions=3)
+    assert graph_digest(g) == graph_digest(ref)
+
+
+def test_stage_edges_from_text(tmp_path):
+    staged = stage_edges(open_edge_source(FIXTURE, 50),
+                         str(tmp_path / "st"))
+    src = open_edge_source(FIXTURE, 1 << 20)
+    e = np.concatenate([c for c, _ in src.chunks()])
+    w = np.concatenate([x for _, x in src.chunks()])
+    got_e = np.concatenate([c for c, _ in staged.chunks()])
+    got_w = np.concatenate([x for _, x in staged.chunks()])
+    np.testing.assert_array_equal(got_e, e)
+    np.testing.assert_array_equal(got_w, w)
