@@ -295,12 +295,14 @@ def bench_dist_phase(out_path: str = DIST_OUT, fast: bool = True) -> dict:
     edges, n = rmat_graph(n_pr, avg_degree=8, seed=1)
     w = pagerank_edge_weights(edges, n)
     part = bfs_partition(edges, n, n_dev, seed=1)
-    g_pr = build_partitioned_graph(edges, n, part, weights=w)
+    g_pr = build_partitioned_graph(edges, n, part, weights=w,
+                                   edge_blocks=n_dev)  # one block per device
 
     rc = (8, 110) if fast else (8, 300)
     edges, w, n = grid_graph(*rc, seed=0)
     part = bfs_partition(edges, n, n_dev, seed=0)
-    g_ss = build_partitioned_graph(edges, n, part, weights=w)
+    g_ss = build_partitioned_graph(edges, n, part, weights=w,
+                                   edge_blocks=n_dev)
 
     for name, graph, prog, payload in (
             ("pagerank", g_pr, IncrementalPageRank(tolerance=1e-4), 0.01),

@@ -76,6 +76,12 @@ def make_dist_hybrid_step(prog: VertexProgram, mesh: Mesh,
         return dataclasses.replace(es, counters=agg)
 
     def step(graph, es):
+        d = mesh.size
+        if graph.n_partitions % d or graph.n_blocks % d:
+            raise ValueError(
+                f"distributed step needs n_partitions ({graph.n_partitions})"
+                f" and n_blocks ({graph.n_blocks}) divisible by the device "
+                f"count ({d}); build with edge_blocks={d} (or a multiple)")
         in_specs = (shard0_specs(graph, axes), _es_specs(es, axes))
         out_specs = _es_specs(es, axes)
         return _shard_map(local_step, mesh, in_specs, out_specs)(graph, es)
@@ -106,12 +112,21 @@ def _es_specs(es: EngineState, axes) -> Any:
 
 
 def block_graph_shapes(n_partitions: int, vp: int, ep: int, xp: int, hp: int,
-                       gp: int | None = None, kl: int = 0) -> PartitionedGraph:
+                       gp: int | None = None, kl: int = 0,
+                       n_blocks: int | None = None) -> PartitionedGraph:
     """ShapeDtypeStruct stand-in graph (dry-run; no allocation).  ``kl`` > 0
-    adds a single dense-base ELL bin of that slice width per side."""
+    adds a single dense-base ELL bin of that slice width per side.
+    ``ep``/``gp`` are per-*block* widths of the block-ragged edge layout;
+    ``n_blocks`` defaults to one block per partition (the legacy padded
+    shape, one partition per device)."""
     from repro.core.graph import EllSlice
 
     gp = gp or vp
+    nb = n_partitions if n_blocks is None else n_blocks
+    if n_partitions % nb:
+        raise ValueError(f"n_blocks={nb} must divide "
+                         f"n_partitions={n_partitions}")
+    ppb = n_partitions // nb
     f = jax.ShapeDtypeStruct
     i32, f32, b = jnp.int32, jnp.float32, jnp.bool_
 
@@ -119,14 +134,14 @@ def block_graph_shapes(n_partitions: int, vp: int, ep: int, xp: int, hp: int,
         if kl == 0:
             return ()
         return (EllSlice(
-            rows=f((n_partitions, vp), i32),
-            idx=f((n_partitions, vp, kl), i32),
-            val=f((n_partitions, vp, kl), f32),
-            msk=f((n_partitions, vp, kl), b),
-            grp=f((n_partitions, vp, kl), i32),
+            rows=f((nb, ppb * vp), i32),
+            idx=f((nb, ppb * vp, kl), i32),
+            val=f((nb, ppb * vp, kl), f32),
+            msk=f((nb, ppb * vp, kl), b),
+            grp=f((nb, ppb * vp, kl), i32),
             flat_rows=f((n_partitions * vp,), i32),
             flat_idx=f((n_partitions * vp, kl), i32),
-            nb=vp, kb=kl, lo=0, dense=True, stride=stride,
+            nb=ppb * vp, kb=kl, lo=0, dense=True, stride=stride,
             payload_bound=n_partitions * vp - 1),)
 
     pg = PartitionedGraph(
@@ -134,16 +149,17 @@ def block_graph_shapes(n_partitions: int, vp: int, ep: int, xp: int, hp: int,
         vertex_mask=f((n_partitions, vp), b),
         is_boundary=f((n_partitions, vp), b),
         out_degree=f((n_partitions, vp), i32),
-        edge_src=f((n_partitions, ep), i32),
-        edge_dst=f((n_partitions, ep), i32),
-        edge_w=f((n_partitions, ep), f32),
-        edge_mask=f((n_partitions, ep), b),
-        edge_local=f((n_partitions, ep), b),
-        edge_src_gid=f((n_partitions, ep), i32),
-        edge_dst_gid=f((n_partitions, ep), i32),
-        edge_group=f((n_partitions, ep), i32),
-        group_remote=f((n_partitions, gp), b),
-        group_mask=f((n_partitions, gp), b),
+        edge_src=f((nb, ep), i32),
+        edge_dst=f((nb, ep), i32),
+        edge_w=f((nb, ep), f32),
+        edge_mask=f((nb, ep), b),
+        edge_local=f((nb, ep), b),
+        edge_src_gid=f((nb, ep), i32),
+        edge_dst_gid=f((nb, ep), i32),
+        edge_part=f((nb, ep), i32),
+        edge_group=f((nb, ep), i32),
+        group_remote=f((nb, gp), b),
+        group_mask=f((nb, gp), b),
         export_slot=f((n_partitions, xp), i32),
         export_mask=f((n_partitions, xp), b),
         export_fanout=f((n_partitions, xp), i32),
@@ -152,6 +168,8 @@ def block_graph_shapes(n_partitions: int, vp: int, ep: int, xp: int, hp: int,
         local_ell=ell(vp), remote_ell=ell(vp + hp),
         n_partitions=n_partitions, n_vertices=n_partitions * vp,
         n_edges=n_partitions * ep, vp=vp, ep=ep, xp=xp, hp=hp, gp=gp,
+        n_blocks=nb, ep_by_p=(ep // ppb,) * n_partitions,
+        gp_by_p=(gp // ppb,) * n_partitions,
     )
     return pg
 

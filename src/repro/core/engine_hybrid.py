@@ -128,7 +128,7 @@ def fused_step_fn(graph: PartitionedGraph, prog: VertexProgram, kind: str,
     if kind == "pr_step":
         from repro.kernels.pr_step import fused_pr_step
 
-        val = slices[0].val.reshape(p * slices[0].nb, slices[0].kb)
+        val = slices[0].val.reshape(-1, slices[0].kb)
 
         def step(rank, delta, send):
             extra = _spill_extra(graph, prog, ch, slices, views,
@@ -142,7 +142,7 @@ def fused_step_fn(graph: PartitionedGraph, prog: VertexProgram, kind: str,
         from repro.kernels.min_step import fused_min_step
 
         val = prog.ell_edge_values(ch, slices[0].val).reshape(
-            p * slices[0].nb, slices[0].kb)
+            -1, slices[0].kb)
 
         def step(x, send):
             extra = _spill_extra(graph, prog, ch, slices, views,

@@ -61,6 +61,81 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m if n > 0 else m
 
 
+def _block_layout(widths_by_p, n_blocks: int):
+    """Column offsets + shared block width for a per-partition-ragged
+    family packed into ``(n_blocks, W)`` rows: partition ``p`` occupies
+    columns ``[offs[p], offs[p] + widths_by_p[p])`` of block row
+    ``p // ppb``; ``W`` is the widest block's span sum, so storage scales
+    with ``max_b sum_{p in b}`` widths instead of ``P * max_p``."""
+    P = len(widths_by_p)
+    ppb = P // n_blocks
+    offs = np.zeros(P, dtype=np.int64)
+    W = 0
+    for b in range(n_blocks):
+        acc = 0
+        for p in range(b * ppb, (b + 1) * ppb):
+            offs[p] = acc
+            acc += int(widths_by_p[p])
+        W = max(W, acc)
+    return offs, int(W)
+
+
+@dataclasses.dataclass(frozen=True)
+class _EdgeLayout:
+    """Host-side placement of the block-ragged edge/group families: B
+    blocks of ``ppb = P // B`` consecutive partitions, each partition a
+    private column span inside its block row (see ``PartitionedGraph``)."""
+
+    n_blocks: int
+    ppb: int
+    ep_by_p: tuple
+    gp_by_p: tuple
+    eoff: np.ndarray     # (P,) edge column offset of p within its block
+    goff: np.ndarray     # (P,) group column offset of p within its block
+    eb: int              # shared edge block width (max per-block span sum)
+    gb: int              # shared group block width
+
+    @staticmethod
+    def create(P: int, n_blocks: int, ep_by_p, gp_by_p) -> "_EdgeLayout":
+        if n_blocks < 1 or P % n_blocks:
+            raise ValueError(
+                f"edge_blocks={n_blocks} must divide n_partitions={P}")
+        eoff, eb = _block_layout(ep_by_p, n_blocks)
+        goff, gb = _block_layout(gp_by_p, n_blocks)
+        return _EdgeLayout(int(n_blocks), P // n_blocks, tuple(ep_by_p),
+                           tuple(gp_by_p), eoff, goff, eb, gb)
+
+    def p_rel(self, p: int) -> int:
+        return p % self.ppb
+
+
+class _SpanView:
+    """Partition-local window into a block-ragged ``(B, W, ...)`` array:
+    key ``[p, sl]`` resolves to block row ``p // ppb`` at the partition's
+    column span.  Keeps the shared per-partition fill helpers addressing
+    partitions uniformly whatever the block count (``B == P`` reproduces
+    the former fully-padded layout, ``B == 1`` is fully ragged)."""
+
+    def __init__(self, arr, ppb: int, offs, widths):
+        self._a, self._ppb = arr, ppb
+        self._offs, self._widths = offs, widths
+
+    def _map(self, key):
+        p, sl = key if isinstance(key, tuple) else (key, slice(None))
+        o = int(self._offs[p])
+        if isinstance(sl, slice):
+            start = o + (sl.start or 0)
+            stop = o + (int(self._widths[p]) if sl.stop is None else sl.stop)
+            return p // self._ppb, slice(start, stop)
+        return p // self._ppb, o + sl
+
+    def __getitem__(self, key):
+        return self._a[self._map(key)]
+
+    def __setitem__(self, key, val):
+        self._a[self._map(key)] = val
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class EllSlice:
@@ -72,25 +147,35 @@ class EllSlice:
     through ``rows``.  A delivery is the ⊕-combination of one `ell_spmv`
     call per bin.
 
+    Like the dense edge family, the tiles are block-ragged: ``B`` block
+    rows (``B = graph.n_blocks``) each packing ``ppb = P // B``
+    consecutive partitions side by side, so the row axis scales with the
+    widest block's span *sum* instead of ``P * max_p``.  ``rows`` are
+    block-relative (``p_rel * Vp + slot``, sentinel ``ppb * Vp``) and
+    ``grp`` ids are block-relative flat (partition group-span offset baked
+    in), which is what lets a shard_map block run the same code on its
+    slice of blocks.
+
     The ``flat_*`` views are the single-device fast path, precomputed at
-    build time: row ids offset by p*Vp (sentinel P*Vp on padding, dropped by
-    ``mode='drop'`` scatters) and source ids offset by p*stride so one
-    kernel call covers every partition.  Inside a shard_map block the
-    per-partition arrays are re-offset locally instead (see
-    ``runtime.slice_flat``).
+    build time: absolute row ids ``p*Vp + slot`` (sentinel P*Vp on
+    padding, dropped by ``mode='drop'`` scatters) and source ids offset by
+    p*stride so one kernel call covers every partition.  Inside a
+    shard_map block the per-partition arrays are re-offset locally instead
+    (see ``runtime.slice_flat``).
     """
 
-    rows: jax.Array       # (P, Nb) int32 — destination slot, Vp sentinel pad
-    idx: jax.Array        # (P, Nb, Kb) int32 — source slot, or Vp + halo slot
-    val: jax.Array        # (P, Nb, Kb) float32 — edge weight
-    msk: jax.Array        # (P, Nb, Kb) bool — slot occupancy
+    rows: jax.Array       # (B, Nb) int32 — p_rel*Vp + slot, ppb*Vp sentinel
+    idx: jax.Array        # (B, Nb, Kb) int32 — source slot, or Vp + halo slot
+    val: jax.Array        # (B, Nb, Kb) float32 — edge weight
+    msk: jax.Array        # (B, Nb, Kb) bool — slot occupancy
     # per-slot message-accounting group id (the (destination, source
-    # partition) Combine() granularity of `PartitionedGraph.edge_group`),
-    # 0 on padding — lets `collect_metrics=True` counters ride the tiles
-    # instead of re-reducing the dense edge arrays
-    grp: jax.Array        # (P, Nb, Kb) int32
-    flat_rows: jax.Array  # (P*Nb,) int32 — p*Vp + row, P*Vp sentinel
-    flat_idx: jax.Array   # (P*Nb, Kb) int32 — idx + p*stride
+    # partition) Combine() granularity of `PartitionedGraph.edge_group`,
+    # block-relative flat like it), 0 on padding — lets
+    # `collect_metrics=True` counters ride the tiles instead of
+    # re-reducing the dense edge arrays
+    grp: jax.Array        # (B, Nb, Kb) int32
+    flat_rows: jax.Array  # (B*Nb,) int32 — p*Vp + slot, P*Vp sentinel
+    flat_idx: jax.Array   # (B*Nb, Kb) int32 — idx + p*stride
     nb: int = dataclasses.field(metadata=dict(static=True))
     kb: int = dataclasses.field(metadata=dict(static=True))
     lo: int = dataclasses.field(metadata=dict(static=True))   # first edge slot
@@ -104,10 +189,26 @@ class EllSlice:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PartitionedGraph:
-    """Static, padded, partition-major graph structure (a pytree of arrays).
+    """Static, partition-major graph structure (a pytree of arrays).
 
-    Shapes use P = #partitions, Vp = max vertices/partition, Ep = max
-    in-edges/partition, X = max exports/partition, H = max halo entries.
+    Vertex-scale families are padded per partition: P = #partitions,
+    Vp = max vertices/partition, X = max exports/partition, H = max halo
+    entries.
+
+    Edge-scale families are **block-ragged** to keep memory scaling with
+    ``sum_p Ep_p`` instead of ``P * max_p Ep_p`` under skewed labelings
+    (fennel/multilevel cluster hubs, so per-partition in-edge counts vary
+    wildly): the ``B = n_blocks`` block rows each pack ``ppb = P // B``
+    consecutive partitions side by side, partition ``p`` owning the
+    column span ``[eoff_p, eoff_p + ep_by_p[p])`` of block ``p // ppb``
+    (``edge_span``/``group_span`` recover the spans).  ``Ep`` below is the
+    shared block width (the widest block's span sum) and ``Gp`` its group
+    analogue.  ``edge_part`` holds each slot's block-relative partition
+    index and ``edge_group`` block-relative flat group ids, so runtime
+    code never needs the per-partition offsets.  ``B == 1`` (the build
+    default) is fully ragged; ``B == P`` reproduces the former shared-Ep
+    padded layout; the distributed step shards block rows on dim 0 like
+    every other family (``B`` a multiple of the device count).
     """
 
     # ---- vertices -------------------------------------------------------
@@ -115,20 +216,25 @@ class PartitionedGraph:
     vertex_mask: jax.Array      # (P, Vp) bool
     is_boundary: jax.Array      # (P, Vp) bool — has a remote in-edge
     out_degree: jax.Array       # (P, Vp) int32 — global out-degree
-    # ---- in-edges, sorted by destination slot ---------------------------
-    edge_src: jax.Array         # (P, Ep) int32 — local slot, or Vp + halo slot
-    edge_dst: jax.Array         # (P, Ep) int32 — destination local slot
-    edge_w: jax.Array           # (P, Ep) float32
-    edge_mask: jax.Array        # (P, Ep) bool
-    edge_local: jax.Array       # (P, Ep) bool — source in same partition
-    edge_src_gid: jax.Array     # (P, Ep) int32 — global id of source
-    edge_dst_gid: jax.Array     # (P, Ep) int32 — global id of destination
+    # ---- in-edges, block-ragged, sorted by destination slot per span ----
+    edge_src: jax.Array         # (B, Ep) int32 — local slot, or Vp + halo slot
+    edge_dst: jax.Array         # (B, Ep) int32 — destination local slot
+    edge_w: jax.Array           # (B, Ep) float32
+    edge_mask: jax.Array        # (B, Ep) bool
+    edge_local: jax.Array       # (B, Ep) bool — source in same partition
+    edge_src_gid: jax.Array     # (B, Ep) int32 — global id of source
+    edge_dst_gid: jax.Array     # (B, Ep) int32 — global id of destination
+    # block-relative partition index (p % ppb) of each slot's owning
+    # partition — the runtime's key back from a block column to a
+    # partition (absolute: edge_part + block_row * ppb)
+    edge_part: jax.Array        # (B, Ep) int32
     # message-accounting groups: one group per (destination vertex, source
     # partition) pair — the granularity at which Pregel's Combine() merges
-    # traffic.  Group ids are partition-local and dense in [0, Gp).
-    edge_group: jax.Array       # (P, Ep) int32
-    group_remote: jax.Array     # (P, Gp) bool — group's source partition != p
-    group_mask: jax.Array       # (P, Gp) bool
+    # traffic.  Ids are block-relative flat: partition p's dense local ids
+    # offset by its group-span start, so they index (B, Gp) directly.
+    edge_group: jax.Array       # (B, Ep) int32
+    group_remote: jax.Array     # (B, Gp) bool — group's source partition != p
+    group_mask: jax.Array       # (B, Gp) bool
     # ---- halo-exchange plan ---------------------------------------------
     export_slot: jax.Array      # (P, X) int32 — local slots exported
     export_mask: jax.Array      # (P, X) bool
@@ -152,6 +258,31 @@ class PartitionedGraph:
     xp: int = dataclasses.field(metadata=dict(static=True))
     hp: int = dataclasses.field(metadata=dict(static=True))
     gp: int = dataclasses.field(metadata=dict(static=True))
+    # block-ragged edge layout: block count + per-partition padded span
+    # widths (tuples of ints — hashable static pytree metadata)
+    n_blocks: int = dataclasses.field(metadata=dict(static=True))
+    ep_by_p: tuple = dataclasses.field(metadata=dict(static=True))
+    gp_by_p: tuple = dataclasses.field(metadata=dict(static=True))
+
+    def edge_span(self, p: int) -> tuple[int, slice]:
+        """(block row, column slice) of partition ``p``'s in-edge span."""
+        ppb = self.n_partitions // self.n_blocks
+        off = sum(self.ep_by_p[(p // ppb) * ppb:p])
+        return p // ppb, slice(off, off + self.ep_by_p[p])
+
+    def group_span(self, p: int) -> tuple[int, slice]:
+        """(block row, column slice) of partition ``p``'s group span."""
+        ppb = self.n_partitions // self.n_blocks
+        off = sum(self.gp_by_p[(p // ppb) * ppb:p])
+        return p // ppb, slice(off, off + self.gp_by_p[p])
+
+    @property
+    def pad_waste(self) -> float:
+        """What the former shared-Ep layout would have paid: the ratio of
+        ``P * max_p Ep_p`` to ``sum_p Ep_p`` over the padded spans."""
+        total = sum(self.ep_by_p)
+        return (self.n_partitions * max(self.ep_by_p) / total
+                if total else 1.0)
 
     @property
     def has_ell(self) -> bool:
@@ -173,7 +304,8 @@ class PartitionedGraph:
     def shape_summary(self) -> str:
         return (
             f"P={self.n_partitions} V={self.n_vertices} E={self.n_edges} "
-            f"Vp={self.vp} Ep={self.ep} X={self.xp} H={self.hp}"
+            f"Vp={self.vp} B={self.n_blocks} Ep={self.ep} X={self.xp} "
+            f"H={self.hp}"
         )
 
 
@@ -188,14 +320,29 @@ def build_partitioned_graph(
     ell_base_slices: int = 128,
     n_partitions: int | None = None,
     partition_seed: int = 0,
+    edge_blocks: int = 1,
 ) -> PartitionedGraph:
-    """Construct the padded partition-major structure from a global edge list.
+    """Construct the partition-major structure from a global edge list.
 
     ``edges`` is (E, 2) int [src, dst]; ``part`` maps vertex -> partition id
     — either a precomputed (V,) labeling, or a partitioner name from
     ``repro.partition.PARTITIONERS`` ('hash' | 'bfs' | 'fennel' |
     'multilevel'), in which case ``n_partitions`` (and optionally
     ``partition_seed``) choose how the labeling is computed.
+
+    ``pad_multiple`` rounds every per-partition extent (vertex, edge,
+    export, halo and group spans) up to a multiple, trading a bounded
+    sliver of padding for aligned array extents; the structure's *values*
+    are identical across choices (only masked padding moves), which the
+    builder parity sweep pins.
+
+    ``edge_blocks`` sets the block count B of the ragged edge layout:
+    per-partition edge spans are packed into B block rows of P // B
+    consecutive partitions each, so edge memory scales with the widest
+    block's span *sum* (B=1, the default: exactly ``sum_p Ep_p``) instead
+    of ``P * max_p Ep_p`` (B=P: the former shared-width padded layout).
+    The distributed step shards block rows over devices, so pass a
+    multiple of the device count there.
 
     ``build_ell`` additionally packs each partition's local *and* remote
     in-edges into destination-major sliced-ELL layouts (the kernel fast
@@ -255,17 +402,20 @@ def build_partitioned_graph(
         per_p.append(_partition_edges(src[sel], dst[sel], weights[sel],
                                       psrc[sel], p, slot_of, halo_by_p[p],
                                       Vp, P))
-    Ep = _round_up(max((len(d["w"]) for d in per_p), default=0), pad_multiple)
-    Gp = _round_up(max((len(d["group_remote"]) for d in per_p), default=1),
-                   pad_multiple)
+    layout = _EdgeLayout.create(
+        P, edge_blocks,
+        tuple(_round_up(len(d["w"]), pad_multiple) for d in per_p),
+        tuple(_round_up(len(d["group_remote"]), pad_multiple)
+              for d in per_p))
 
-    # --- assemble padded arrays -------------------------------------------
-    arrs = _alloc_core(P, Vp, Ep, X, H, Gp)
+    # --- assemble block-ragged + padded arrays ----------------------------
+    arrs = _alloc_core(P, Vp, X, H, layout)
+    staged = _core_views(arrs, layout)
     for p in range(P):
         _fill_core_partition(
-            arrs, p, per_p[p], verts_by_p[p], is_boundary_g, out_degree,
+            staged, p, per_p[p], verts_by_p[p], is_boundary_g, out_degree,
             slot_of, exporters_by_p[p], fanout_by_p[p],
-            _halo_ptrs(halo_by_p[p], part, export_idx_of, X))
+            _halo_ptrs(halo_by_p[p], part, export_idx_of, X), layout)
 
     # --- sliced-ELL in-edge layouts (destination-major fast paths) --------
     local_ell: tuple[EllSlice, ...] = ()
@@ -276,16 +426,16 @@ def build_partitioned_graph(
         local_ell = _build_ell_slices(
             picks_l.__getitem__, P=P, Vp=Vp, stride=Vp,
             pad=pad_multiple, slice_pad=ell_pad_slices,
-            base_slices=ell_base_slices)
+            base_slices=ell_base_slices, layout=layout)
         remote_ell = _build_ell_slices(
             picks_r.__getitem__, P=P, Vp=Vp, stride=Vp + H,
             pad=pad_multiple, slice_pad=ell_pad_slices,
-            base_slices=ell_base_slices)
+            base_slices=ell_base_slices, layout=layout)
 
     return _finalize_graph(arrs, local_ell, remote_ell, n_partitions=P,
                            n_vertices=int(n_vertices), n_edges=int(n_edges),
-                           vp=int(Vp), ep=int(Ep), xp=int(X), hp=int(H),
-                           gp=int(Gp))
+                           vp=int(Vp), ep=int(layout.eb), xp=int(X),
+                           hp=int(H), gp=int(layout.gb), layout=layout)
 
 
 # ---------------------------------------------------------------------------
@@ -383,6 +533,7 @@ _CORE_SPEC = {
     "edge_local": ("Ep", bool, False),
     "edge_src_gid": ("Ep", np.int32, -1),
     "edge_dst_gid": ("Ep", np.int32, -1),
+    "edge_part": ("Ep", np.int32, 0),
     "edge_group": ("Ep", np.int32, 0),
     "group_remote": ("Gp", bool, False),
     "group_mask": ("Gp", bool, False),
@@ -394,19 +545,41 @@ _CORE_SPEC = {
 }
 
 
-def _alloc_core(P: int, Vp: int, Ep: int, X: int, H: int, Gp: int
+def _alloc_core(P: int, Vp: int, X: int, H: int, layout: _EdgeLayout
                 ) -> dict[str, np.ndarray]:
-    dims = {"Vp": Vp, "Ep": Ep, "X": X, "H": H, "Gp": Gp}
-    return {name: np.full((P, dims[axis]), fill, dtype=dtype)
+    """The core arrays: vertex-scale families padded ``(P, axis)``,
+    edge/group families block-ragged ``(B, width)`` per ``layout``."""
+    dims = {"Vp": (P, Vp), "X": (P, X), "H": (P, H),
+            "Ep": (layout.n_blocks, layout.eb),
+            "Gp": (layout.n_blocks, layout.gb)}
+    return {name: np.full(dims[axis], fill, dtype=dtype)
             for name, (axis, dtype, fill) in _CORE_SPEC.items()}
 
 
-def _fill_core_partition(arrs: dict[str, np.ndarray], p: int,
+def _core_views(arrs, layout: _EdgeLayout) -> dict[str, Any]:
+    """Per-partition span views over the block-ragged families (vertex-
+    scale arrays pass through) — what the fill helpers write into."""
+    ew = np.asarray(layout.ep_by_p)
+    gw = np.asarray(layout.gp_by_p)
+    out: dict[str, Any] = {}
+    for name, (axis, _, _) in _CORE_SPEC.items():
+        if axis == "Ep":
+            out[name] = _SpanView(arrs[name], layout.ppb, layout.eoff, ew)
+        elif axis == "Gp":
+            out[name] = _SpanView(arrs[name], layout.ppb, layout.goff, gw)
+        else:
+            out[name] = arrs[name]
+    return out
+
+
+def _fill_core_partition(arrs: dict[str, Any], p: int,
                          e: dict[str, np.ndarray], verts: np.ndarray,
                          is_boundary_g: np.ndarray, out_degree: np.ndarray,
                          slot_of: np.ndarray, exporters: np.ndarray,
-                         fanout: np.ndarray, halo_ptrs: np.ndarray) -> None:
-    """Write one partition's row of every padded core array."""
+                         fanout: np.ndarray, halo_ptrs: np.ndarray,
+                         layout: _EdgeLayout) -> None:
+    """Write one partition's span of every core array (``arrs`` carries
+    span views over the block-ragged families, see ``_core_views``)."""
     nv = len(verts)
     arrs["vertex_gid"][p, :nv] = verts.astype(np.int32)
     arrs["is_boundary"][p, :nv] = is_boundary_g[verts]
@@ -419,7 +592,9 @@ def _fill_core_partition(arrs: dict[str, np.ndarray], p: int,
     arrs["edge_local"][p, :ne] = e["local"]
     arrs["edge_src_gid"][p, :ne] = e["src_gid"].astype(np.int32)
     arrs["edge_dst_gid"][p, :ne] = e["dst_gid"].astype(np.int32)
-    arrs["edge_group"][p, :ne] = e["group"].astype(np.int32)
+    arrs["edge_part"][p, :] = np.int32(layout.p_rel(p))
+    arrs["edge_group"][p, :ne] = (e["group"]
+                                  + int(layout.goff[p])).astype(np.int32)
     ng = len(e["group_remote"])
     arrs["group_remote"][p, :ng] = e["group_remote"]
     arrs["group_mask"][p, :ng] = True
@@ -436,7 +611,8 @@ def _finalize_graph(arrs: dict[str, np.ndarray],
                     local_ell: tuple[EllSlice, ...],
                     remote_ell: tuple[EllSlice, ...], *, n_partitions: int,
                     n_vertices: int, n_edges: int, vp: int, ep: int, xp: int,
-                    hp: int, gp: int) -> PartitionedGraph:
+                    hp: int, gp: int,
+                    layout: _EdgeLayout) -> PartitionedGraph:
     """Convert the filled numpy arrays to the on-device pytree, dropping
     each host copy as soon as it is converted (the out-of-core path's peak
     memory is the final structure, not twice it)."""
@@ -452,6 +628,7 @@ def _finalize_graph(arrs: dict[str, np.ndarray],
         edge_w=take("edge_w"), edge_mask=take("edge_mask"),
         edge_local=take("edge_local"),
         edge_src_gid=take("edge_src_gid"), edge_dst_gid=take("edge_dst_gid"),
+        edge_part=take("edge_part"),
         edge_group=take("edge_group"), group_remote=take("group_remote"),
         group_mask=take("group_mask"),
         export_slot=take("export_slot"), export_mask=take("export_mask"),
@@ -460,6 +637,8 @@ def _finalize_graph(arrs: dict[str, np.ndarray],
         local_ell=local_ell, remote_ell=remote_ell,
         n_partitions=n_partitions, n_vertices=n_vertices, n_edges=n_edges,
         vp=vp, ep=ep, xp=xp, hp=hp, gp=gp,
+        n_blocks=layout.n_blocks, ep_by_p=layout.ep_by_p,
+        gp_by_p=layout.gp_by_p,
     )
 
 
@@ -484,87 +663,98 @@ def _ell_pick(e: dict[str, np.ndarray], negate: bool) -> dict[str, np.ndarray]:
 
 def _ell_plan(slot_degrees: list[np.ndarray], Vp: int, pad: int,
               slice_pad: int, base_slices: int):
-    """Bin widths + per-bin row counts from the per-partition destination-
-    slot in-degree histograms.  Returns (widths, nbs); ([], []) when the
-    edge side is empty."""
+    """Bin widths + per-bin *per-partition* row counts from the
+    per-partition destination-slot in-degree histograms.  Returns
+    ``(widths, nb_by_p)`` with one row-count list per bin (the dense base
+    bin is Vp rows per partition, spill bins the padded count of rows
+    exceeding the bin's lo); ``([], [])`` when the edge side is empty."""
     from repro.kernels.common import ell_bin_widths
 
     kmax = max((int(d.max()) for d in slot_degrees if len(d)), default=0)
     widths = ell_bin_widths(kmax, base_slices, slice_pad)
-    nbs = [Vp if lo == 0 else
-           _round_up(max(int((d > lo).sum()) for d in slot_degrees), pad)
-           for lo, kb in widths]
-    return widths, nbs
+    nb_by_p = [[Vp] * len(slot_degrees) if lo == 0 else
+               [_round_up(int((d > lo).sum()), pad) for d in slot_degrees]
+               for lo, kb in widths]
+    return widths, nb_by_p
 
 
-def _ell_alloc(widths, nbs, P: int, Vp: int) -> list[dict[str, np.ndarray]]:
+def _ell_alloc(widths, bin_layouts, layout: _EdgeLayout, Vp: int
+               ) -> list[dict[str, np.ndarray]]:
+    B, ppb = layout.n_blocks, layout.ppb
+    P = B * ppb
     arrs = []
-    for (lo, kb), Nb in zip(widths, nbs):
+    for (lo, kb), (_, Nb) in zip(widths, bin_layouts):
         arrs.append(dict(
-            rows=np.full((P, Nb), Vp, dtype=np.int32),
-            idx=np.zeros((P, Nb, kb), dtype=np.int32),
-            val=np.zeros((P, Nb, kb), dtype=np.float32),
-            msk=np.zeros((P, Nb, kb), dtype=bool),
-            grp=np.zeros((P, Nb, kb), dtype=np.int32),
-            flat_rows=np.full((P, Nb), P * Vp, dtype=np.int32)))
+            rows=np.full((B, Nb), ppb * Vp, dtype=np.int32),
+            idx=np.zeros((B, Nb, kb), dtype=np.int32),
+            val=np.zeros((B, Nb, kb), dtype=np.float32),
+            msk=np.zeros((B, Nb, kb), dtype=bool),
+            grp=np.zeros((B, Nb, kb), dtype=np.int32),
+            flat_rows=np.full((B, Nb), P * Vp, dtype=np.int32),
+            flat_idx=np.zeros((B, Nb, kb), dtype=np.int32)))
     return arrs
 
 
-def _ell_fill_partition(arrs: list[dict[str, np.ndarray]], widths, p: int,
-                        pick: dict[str, np.ndarray], P: int, Vp: int
-                        ) -> list[int]:
-    """Pack one partition's picked edge side and write its rows into every
-    bin's arrays; returns the per-bin max-source-gid contributions."""
+def _ell_fill_partition(arrs: list[dict[str, Any]], widths, p: int,
+                        pick: dict[str, np.ndarray], P: int, Vp: int,
+                        layout: _EdgeLayout, stride: int) -> list[int]:
+    """Pack one partition's picked edge side and write its row span into
+    every bin (``arrs`` carries per-partition span views, see
+    ``_build_ell_slices``): block-relative rows (``p_rel*Vp + slot``,
+    sentinel ``ppb*Vp``), block-relative flat ``grp`` ids, and the
+    absolute ``flat_*`` host views.  Returns the per-bin max-source-gid
+    contributions."""
     from repro.kernels.common import sliced_ell_pack_numpy
 
     packs = sliced_ell_pack_numpy(pick["src"], pick["dst"], pick["w"], Vp,
                                   widths,
                                   order_rank=(pick["order"], pick["rank"]),
                                   extras=(pick["grp"],))
+    prel = layout.p_rel(p)
+    goff = int(layout.goff[p])
     bounds = []
     for b, (lo, kb) in enumerate(widths):
         rows_b, idx_b, val_b, msk_b, grp_b = packs[b]
         a = arrs[b]
         if rows_b is None:                      # dense base bin
-            a["rows"][p] = np.arange(Vp, dtype=np.int32)
+            a["rows"][p] = np.arange(Vp, dtype=np.int32) + np.int32(prel * Vp)
         else:
-            a["rows"][p, : len(rows_b)] = rows_b
+            a["rows"][p, : len(rows_b)] = (rows_b.astype(np.int32)
+                                           + np.int32(prel * Vp))
         n = idx_b.shape[0]
         a["idx"][p, :n], a["val"][p, :n], a["msk"][p, :n] = idx_b, val_b, msk_b
-        a["grp"][p, :n] = grp_b
-        a["flat_rows"][p] = np.where(a["rows"][p] < Vp, p * Vp + a["rows"][p],
-                                     P * Vp)
+        a["grp"][p, :n] = np.where(msk_b, grp_b.astype(np.int32)
+                                   + np.int32(goff), np.int32(0))
+        rloc = a["rows"][p].astype(np.int64) - prel * Vp
+        a["flat_rows"][p] = np.where(rloc < Vp, p * Vp + rloc,
+                                     P * Vp).astype(np.int32)
+        a["flat_idx"][p, :] = a["idx"][p] + np.int32(p * stride)
         bounds.append(_bin_src_bound(pick, lo, kb))
     return bounds
 
 
-def _ell_finalize(arrs: list[dict[str, np.ndarray]], widths, bounds: list[int],
-                  P: int, Vp: int, stride: int) -> tuple[EllSlice, ...]:
+def _ell_finalize(arrs: list[dict[str, np.ndarray]], widths,
+                  bounds: list[int], stride: int) -> tuple[EllSlice, ...]:
     slices = []
     for (lo, kb), a, bound in zip(widths, arrs, bounds):
-        Nb = a["rows"].shape[1]
-        # the out-of-core row spill precomputes flat_idx per committed row
-        # (same int32 arithmetic); everyone else derives it here
-        flat_idx = a.pop("flat_idx", None)
-        if flat_idx is None:
-            flat_idx = a["idx"] + (np.arange(P, dtype=np.int32)
-                                   * stride)[:, None, None]
+        B, Nb = a["rows"].shape
+        flat_idx = a.pop("flat_idx")
         slices.append(EllSlice(
             rows=jnp.asarray(a.pop("rows")), idx=jnp.asarray(a.pop("idx")),
             val=jnp.asarray(a.pop("val")), msk=jnp.asarray(a.pop("msk")),
             grp=jnp.asarray(a.pop("grp")),
             flat_rows=jnp.asarray(a.pop("flat_rows").reshape(-1)),
-            flat_idx=jnp.asarray(flat_idx.reshape(P * Nb, kb)),
+            flat_idx=jnp.asarray(flat_idx.reshape(B * Nb, kb)),
             nb=int(Nb), kb=int(kb), lo=int(lo), dense=bool(lo == 0),
             stride=int(stride), payload_bound=int(bound)))
     return tuple(slices)
 
 
 def _build_ell_slices(make_pick, P: int, Vp: int, stride: int, pad: int,
-                      slice_pad: int, base_slices: int
-                      ) -> tuple[EllSlice, ...]:
+                      slice_pad: int, base_slices: int,
+                      layout: _EdgeLayout) -> tuple[EllSlice, ...]:
     """Pack one side (local or remote) of every partition's in-edges into
-    shared-width sliced-ELL degree bins, flat views precomputed.
+    block-ragged sliced-ELL degree bins, flat views precomputed.
 
     ``make_pick(p)`` returns partition p's pick dict (see ``_ell_pick``);
     it is called twice per partition — once for the degree histograms that
@@ -575,15 +765,22 @@ def _build_ell_slices(make_pick, P: int, Vp: int, stride: int, pad: int,
     for p in range(P):
         e = make_pick(p)
         degs.append(np.bincount(e["dst"], minlength=Vp))
-    widths, nbs = _ell_plan(degs, Vp, pad, slice_pad, base_slices)
+    widths, nb_by_p = _ell_plan(degs, Vp, pad, slice_pad, base_slices)
     if not widths:
         return ()
-    arrs = _ell_alloc(widths, nbs, P, Vp)
+    bin_layouts = [_block_layout(tuple(nbp), layout.n_blocks)
+                   for nbp in nb_by_p]
+    arrs = _ell_alloc(widths, bin_layouts, layout, Vp)
+    staged = [
+        {name: _SpanView(a[name], layout.ppb, offs, np.asarray(nbp))
+         for name in a}
+        for a, (offs, _), nbp in zip(arrs, bin_layouts, nb_by_p)]
     bounds = [-1] * len(widths)
     for p in range(P):
-        contrib = _ell_fill_partition(arrs, widths, p, make_pick(p), P, Vp)
+        contrib = _ell_fill_partition(staged, widths, p, make_pick(p), P,
+                                      Vp, layout, stride)
         bounds = [max(b, c) for b, c in zip(bounds, contrib)]
-    return _ell_finalize(arrs, widths, bounds, P, Vp, stride)
+    return _ell_finalize(arrs, widths, bounds, stride)
 
 
 def _bin_src_bound(e: dict, lo: int, kb: int) -> int:

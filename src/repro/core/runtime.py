@@ -224,17 +224,25 @@ def ell_channels(graph: PartitionedGraph, prog: VertexProgram,
 def slice_flat(s: EllSlice, graph: PartitionedGraph, p: int):
     """Flattened (rows, idx, msk) views of one ELL slice for a p-partition
     block.  The build-time cache serves the host path (the block covers the
-    whole graph); inside a shard_map block the per-partition arrays are
-    re-offset with block-local strides instead."""
-    nb, kb = s.nb, s.kb
+    whole graph); inside a shard_map block the block-ragged tiles are
+    re-offset with block-local strides instead: the owning partition of
+    each tile row is recovered from its block-relative row id
+    (``p_rel = row // Vp``; the sentinel clips to the last partition of
+    the block, where the mask discards it)."""
+    kb = s.kb
     if p == graph.n_partitions:
-        return s.flat_rows, s.flat_idx, s.msk.reshape(p * nb, kb)
-    offs = (jnp.arange(p, dtype=jnp.int32) * s.stride)[:, None, None]
-    idx = (s.idx + offs).reshape(p * nb, kb)
-    row_offs = (jnp.arange(p, dtype=jnp.int32) * graph.vp)[:, None]
-    rows = jnp.where(s.rows < graph.vp, s.rows + row_offs,
-                     p * graph.vp).reshape(-1)
-    return rows, idx, s.msk.reshape(p * nb, kb)
+        return s.flat_rows, s.flat_idx, s.msk.reshape(-1, kb)
+    b = s.rows.shape[0]                   # block rows in this shard
+    ppb = p // b
+    bvp = ppb * graph.vp
+    prel = jnp.clip(s.rows // graph.vp, 0, ppb - 1)
+    pabs = jnp.arange(b, dtype=jnp.int32)[:, None] * ppb + prel
+    idx = (s.idx + (pabs * s.stride)[..., None]).reshape(-1, kb)
+    rows = jnp.where(
+        s.rows < bvp,
+        s.rows + (jnp.arange(b, dtype=jnp.int32) * bvp)[:, None],
+        p * graph.vp).reshape(-1)
+    return rows, idx, s.msk.reshape(-1, kb)
 
 
 # ⊕-combination of per-bin partials into the per-destination output; the
@@ -258,7 +266,7 @@ def ell_combine_bins(prog, ch, slices, views, x, y, p: int, interpret: bool):
 
     combine, _, _ = SEMIRINGS[ch.semiring]
     for s, (rows, idx, msk) in zip(slices, views):
-        v = prog.ell_edge_values(ch, s.val).reshape(p * s.nb, s.kb)
+        v = prog.ell_edge_values(ch, s.val).reshape(-1, s.kb)
         yb = ell_spmv(idx, v, msk, x, semiring=ch.semiring,
                       interpret=interpret)
         if s.dense:
@@ -295,11 +303,16 @@ def ell_group_accounting(graph: PartitionedGraph, slices, views, send_flat,
     straight off the ELL tiles via the per-slot ``grp`` ids.  This is the
     tile-resident replacement for the dense per-group segment reduction:
     exact parity, because the tiles hold exactly the delivering edge set and
-    ``grp`` carries the same ids as ``PartitionedGraph.edge_group``.  Padded
-    slots contribute False updates (their grp id is an arbitrary in-range
-    slot), which a boolean ``max`` scatter ignores."""
-    offs = (jnp.arange(p, dtype=jnp.int32) * graph.gp)[:, None, None]
-    sent = jnp.zeros((p * graph.gp,), bool)
+    ``grp`` carries the same ids as ``PartitionedGraph.edge_group`` —
+    block-relative flat, so each block row offsets by its row index times
+    the shared group width.  Padded slots contribute False updates (their
+    grp id is an arbitrary in-range slot), which a boolean ``max`` scatter
+    ignores."""
+    if not slices:
+        return jnp.zeros((), jnp.int32)
+    b = slices[0].grp.shape[0]
+    offs = (jnp.arange(b, dtype=jnp.int32) * graph.gp)[:, None, None]
+    sent = jnp.zeros((b * graph.gp,), bool)
     for s, (_, idx, msk) in zip(slices, views):
         tile = jnp.logical_and(send_flat[idx], msk)
         grp = (s.grp + offs).reshape(tile.shape)
@@ -430,9 +443,22 @@ def deliver(
                 es.out)
             send_tab = cat(es.send, jnp.zeros((es.send.shape[0], graph.hp), bool))
 
+        # the edge family is block-ragged (B block rows of p // B
+        # consecutive partitions side by side), so gathers and segment
+        # combines run flat: `edge_part` recovers each slot's absolute
+        # partition, from which source-table and destination indices
+        # follow
+        p = es.send.shape[0]
+        bsz = graph.edge_src.shape[0]
+        ppb = p // bsz
+        epart = (graph.edge_part
+                 + (jnp.arange(bsz, dtype=jnp.int32) * ppb)[:, None])
+        width = vp + graph.hp
+        flat_src = (epart * width + graph.edge_src).reshape(-1)
         out_src = jax.tree.map(
-            lambda l: gather_per_partition(l, graph.edge_src), src_tab)
-        send_e = gather_per_partition(send_tab, graph.edge_src)
+            lambda l: l.reshape((p * width,) + l.shape[2:])[flat_src]
+            .reshape(graph.edge_src.shape + l.shape[2:]), src_tab)
+        send_e = send_tab.reshape(-1)[flat_src].reshape(graph.edge_src.shape)
 
         if edges == "all":
             sel = graph.edge_mask
@@ -445,22 +471,30 @@ def deliver(
             raise ValueError(edges)
         base_valid = jnp.logical_and(sel, send_e)
 
+        dst_flat = (epart * vp + graph.edge_dst).reshape(-1)
+        gseg = (graph.edge_group
+                + (jnp.arange(bsz, dtype=jnp.int32) * graph.gp)[:, None]
+                ).reshape(-1)
         for ch in dense_chs:
             payloads, valid = prog.emit(
                 ch, out_src, graph.edge_w, graph.edge_src_gid, graph.edge_dst_gid)
             valid = jnp.logical_and(valid, base_valid)
-            fresh = jax.vmap(
-                lambda pl, v, d: combine_segments(ch, pl, v, d, vp)
-            )(payloads, valid, graph.edge_dst)
+            valid_flat = valid.reshape(-1)
+            comb_pl, comb_has = combine_segments(
+                ch, tuple(x.reshape((-1,) + x.shape[2:]) for x in payloads),
+                valid_flat, dst_flat, p * vp)
+            fresh = (tuple(x.reshape((p, vp) + x.shape[1:]) for x in comb_pl),
+                     comb_has.reshape(p, vp))
             pending[ch.name] = merge_inbox(ch, pending[ch.name], fresh)
-            delivered = jnp.logical_or(delivered, jnp.any(valid, axis=1))
+            delivered = jnp.logical_or(
+                delivered,
+                jnp.zeros((p,), bool).at[epart.reshape(-1)].max(valid_flat))
             if not collect_metrics:
                 continue
             # --- paper metrics ---------------------------------------------
-            grp_sent = jax.vmap(
-                lambda v, g: jax.ops.segment_max(v.astype(jnp.int32), g,
-                                                 num_segments=graph.gp)
-            )(valid, graph.edge_group) > 0
+            grp_sent = jax.ops.segment_max(
+                valid_flat.astype(jnp.int32), gseg,
+                num_segments=bsz * graph.gp).reshape(bsz, graph.gp) > 0
             grp_sent = jnp.logical_and(grp_sent, graph.group_mask)
             net += jnp.sum(jnp.logical_and(grp_sent, graph.group_remote)).astype(jnp.int32)
             net_local += jnp.sum(

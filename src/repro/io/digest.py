@@ -21,8 +21,11 @@ def _update(h, value) -> None:
     if isinstance(value, tuple):
         h.update(str(len(value)).encode())
         for v in value:
-            for f in dataclasses.fields(v):
-                _update(h, getattr(v, f.name))
+            if dataclasses.is_dataclass(v):
+                for f in dataclasses.fields(v):
+                    _update(h, getattr(v, f.name))
+            else:                      # static int tuples (ep_by_p/gp_by_p)
+                _update(h, v)
     elif isinstance(value, (int, bool)):
         h.update(str(value).encode())
     else:

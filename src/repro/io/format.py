@@ -41,7 +41,11 @@ __all__ = ["GraphFormatError", "ShardedGraph", "save_graph", "load_graph",
            "read_meta", "write_meta", "shard_prefix", "check_id_range",
            "GHP_VERSION"]
 
-GHP_VERSION = 1
+# version 2: shards build into the block-ragged edge layout (per-partition
+# Ep_p spans) — shard bytes are unchanged, but graphs built from v1-era
+# directories would not be bit-comparable to freshly converted ones, so
+# loads refuse the old tag instead of failing deep in the builder
+GHP_VERSION = 2
 
 
 class GraphFormatError(Exception):

@@ -37,12 +37,12 @@ import tempfile
 
 import numpy as np
 
-from repro.core.graph import (_CORE_SPEC, PartitionedGraph,
-                              _ell_fill_partition, _ell_finalize, _ell_pick,
-                              _ell_plan, _export_tables,
-                              _fill_core_partition, _finalize_graph,
-                              _halo_ptrs, _partition_edges, _round_up,
-                              _vertex_slots)
+from repro.core.graph import (_CORE_SPEC, PartitionedGraph, _EdgeLayout,
+                              _block_layout, _ell_fill_partition,
+                              _ell_finalize, _ell_pick, _ell_plan,
+                              _export_tables, _fill_core_partition,
+                              _finalize_graph, _halo_ptrs, _partition_edges,
+                              _round_up, _vertex_slots)
 from repro.io.format import (GraphFormatError, ShardedGraph, ShardWriter,
                              load_graph)
 from repro.io.readers import (DEFAULT_CHUNK_EDGES, EdgeSource,
@@ -181,25 +181,36 @@ class _RowShim:
 
 
 class _RowSpill:
-    """One family of (P, ...) padded arrays streamed to scratch ``.npy``
-    files one partition row at a time (fill order is partition-major, so
-    rows append sequentially), then handed to jax straight off the mmap —
-    the full numpy product never becomes resident alongside the jax one.
-    ``spec`` maps array name -> (tail shape, dtype, fill value)."""
+    """One family of arrays streamed to scratch ``.npy`` files one
+    partition at a time (fill order is partition-major, so writes append
+    sequentially), then handed to jax straight off the mmap — the full
+    numpy product never becomes resident alongside the jax one.
 
-    def __init__(self, workdir: str, tag: str, P: int, spec: dict):
+    ``spec`` maps array name -> (staging tail shape, dtype, fill value,
+    file shape).  The staging row's leading tail axis is the *widest*
+    per-partition span; ``commit_row(spans)`` writes only the first
+    ``spans[name]`` entries of that axis (a C-contiguous prefix) and
+    ``pad(n, names)`` appends ``n`` fill entries — together they stream
+    block-ragged ``(B, W, ...)`` files whose rows are per-partition spans
+    laid end to end, as well as plain padded ``(P, ...)`` families (where
+    every committed span is the full width)."""
+
+    def __init__(self, workdir: str, tag: str, spec: dict):
         from repro.io.format import _create_npy
-        self.P = P
         self._paths = {}
         self._files = {}
         self._rows = {}
         self._fills = {}
-        for name, (tail, dtype, fill) in spec.items():
+        self._written = {}
+        self._expected = {}
+        for name, (tail, dtype, fill, file_shape) in spec.items():
             path = os.path.join(workdir, f"{tag}.{name}.npy")
             self._paths[name] = path
-            self._files[name] = _create_npy(path, dtype, (P,) + tail)
+            self._files[name] = _create_npy(path, dtype, file_shape)
             self._rows[name] = np.full((1,) + tail, fill, dtype=dtype)
             self._fills[name] = fill
+            self._written[name] = 0
+            self._expected[name] = int(file_shape[0]) * int(file_shape[1])
 
     def staging(self) -> dict:
         return {name: _RowShim(a) for name, a in self._rows.items()}
@@ -207,14 +218,38 @@ class _RowSpill:
     def row(self, name: str) -> np.ndarray:
         return self._rows[name][0]
 
-    def commit_row(self) -> None:
+    def commit_row(self, spans: dict | int | None = None) -> None:
+        """Append each staging row's first-``n`` entries (``n`` from
+        ``spans`` — a per-name dict, one int for every name, or None for
+        the full staging width) and reset the staging to fill."""
         for name, f in self._files.items():
-            f.write(self._rows[name].tobytes())
+            if spans is None:
+                n = self._rows[name].shape[1]
+            elif isinstance(spans, dict):
+                n = spans.get(name, self._rows[name].shape[1])
+            else:
+                n = spans
+            f.write(self._rows[name][0][:n].tobytes())
+            self._written[name] += int(n)
             self._rows[name][...] = self._fills[name]
 
+    def pad(self, n: int, names=None) -> None:
+        """Append ``n`` fill entries (a block tail) to each named file."""
+        if not n:
+            return
+        for name in (self._rows if names is None else names):
+            a = np.full((n,) + self._rows[name].shape[2:],
+                        self._fills[name], dtype=self._rows[name].dtype)
+            self._files[name].write(a.tobytes())
+            self._written[name] += int(n)
+
     def close(self) -> None:
-        for f in self._files.values():
+        for name, f in self._files.items():
             f.close()
+            if self._written[name] != self._expected[name]:
+                raise AssertionError(
+                    f"{name}: spilled {self._written[name]} entries, file "
+                    f"header says {self._expected[name]}")
         self._files = {}
         self._rows = {}
 
@@ -250,15 +285,19 @@ def spill_to_ghp(source: EdgeSource, part: np.ndarray, n_vertices: int,
 def build_from_sharded(sg: ShardedGraph, pad_multiple: int = 8,
                        build_ell: bool = True, ell_pad_slices: int = 8,
                        ell_base_slices: int = 128,
+                       edge_blocks: int = 1,
                        workdir: str | None = None) -> PartitionedGraph:
     """Out-of-core ``build_partitioned_graph``: two passes over the
     shards (dimension prescan, then fill), one partition resident at a
     time, through the same per-partition helpers as the in-memory builder.
-    Filled partition rows stream to scratch ``.npy`` files (``workdir``,
+    Filled partition spans stream to scratch ``.npy`` files (``workdir``,
     default a TemporaryDirectory) and come back as jax arrays straight off
-    the mmap, so the padded product is resident once — as the result —
-    never twice.  Same arrays out as ``build_partitioned_graph``, bit for
-    bit; peak memory O(largest shard + vertex tables + the result)."""
+    the mmap, so the block-ragged product is resident once — as the
+    result — never twice.  ``edge_blocks`` selects the edge layout exactly
+    as on the in-memory builder (1 = fully ragged, ``P`` = the legacy
+    shared-width padding).  Same arrays out as
+    ``build_partitioned_graph``, bit for bit; peak memory O(largest shard
+    + vertex tables + the result)."""
     part = sg.part
     n = sg.n_vertices
     P, verts_by_p, slot_of, Vp = _vertex_slots(part, n, pad_multiple)
@@ -273,7 +312,8 @@ def build_from_sharded(sg: ShardedGraph, pad_multiple: int = 8,
     halo_by_p: list[np.ndarray] = []
     deg_local: list[np.ndarray] = []
     deg_remote: list[np.ndarray] = []
-    Ep, Gp = 0, 1
+    ne_by_p: list[int] = []
+    ng_by_p: list[int] = []
     for p in range(P):
         e, _, _ = sg.shard(p, mmap=False, weights=False, positions=False)
         es = np.ascontiguousarray(e[:, 0], dtype=np.int64)
@@ -292,10 +332,14 @@ def build_from_sharded(sg: ShardedGraph, pad_multiple: int = 8,
             deg_local.append(np.bincount(d_slot[local], minlength=Vp))
             deg_remote.append(np.bincount(d_slot[~local], minlength=Vp))
         gkey = d_slot * P + psrc
-        Gp = max(Gp, len(np.unique(gkey)) if len(gkey) else 1)
-        Ep = max(Ep, len(es))
-    Ep = _round_up(Ep, pad_multiple)
-    Gp = _round_up(Gp, pad_multiple)
+        # group count min 1: _partition_edges gives an edgeless partition
+        # a single (masked-off) group row
+        ng_by_p.append(len(np.unique(gkey)) if len(gkey) else 1)
+        ne_by_p.append(len(es))
+    layout = _EdgeLayout.create(
+        P, edge_blocks,
+        tuple(_round_up(ne, pad_multiple) for ne in ne_by_p),
+        tuple(_round_up(ng, pad_multiple) for ng in ng_by_p))
     out_degree = out_degree.astype(np.int32)
 
     exporters_by_p, fanout_by_p, export_idx_of = _export_tables(
@@ -305,30 +349,42 @@ def build_from_sharded(sg: ShardedGraph, pad_multiple: int = 8,
                   pad_multiple)
     H = _round_up(max((len(h) for h in halo_by_p), default=1), pad_multiple)
 
-    dims = {"Vp": Vp, "Ep": Ep, "X": X, "H": H, "Gp": Gp}
+    # staging rows are one partition's widest possible span; files carry
+    # the block-ragged (B, Eb/Gb) product
+    stage = {"Vp": Vp, "X": X, "H": H,
+             "Ep": max(layout.ep_by_p), "Gp": max(layout.gp_by_p)}
+    shape = {"Vp": (P, Vp), "X": (P, X), "H": (P, H),
+             "Ep": (layout.n_blocks, layout.eb),
+             "Gp": (layout.n_blocks, layout.gb)}
+    e_names = [nm for nm, (ax, _, _) in _CORE_SPEC.items() if ax == "Ep"]
+    g_names = [nm for nm, (ax, _, _) in _CORE_SPEC.items() if ax == "Gp"]
     with tempfile.TemporaryDirectory(dir=workdir) as scratch:
-        core = _RowSpill(scratch, "core", P,
-                         {name: ((dims[axis],), dtype, fill)
+        core = _RowSpill(scratch, "core",
+                         {name: ((stage[axis],), dtype, fill, shape[axis])
                           for name, (axis, dtype, fill)
                           in _CORE_SPEC.items()})
         core_arrs = core.staging()
         widths_l = widths_r = ()
         if build_ell:
-            widths_l, nbs_l = _ell_plan(deg_local, Vp, pad_multiple,
+            widths_l, nbp_l = _ell_plan(deg_local, Vp, pad_multiple,
                                         ell_pad_slices, ell_base_slices)
-            widths_r, nbs_r = _ell_plan(deg_remote, Vp, pad_multiple,
+            widths_r, nbp_r = _ell_plan(deg_remote, Vp, pad_multiple,
                                         ell_pad_slices, ell_base_slices)
+            blay_l = [_block_layout(tuple(nbp), layout.n_blocks)
+                      for nbp in nbp_l]
+            blay_r = [_block_layout(tuple(nbp), layout.n_blocks)
+                      for nbp in nbp_r]
             spills_l = _ell_row_spills(scratch, "lell", P, Vp, widths_l,
-                                       nbs_l)
+                                       nbp_l, blay_l, layout)
             spills_r = _ell_row_spills(scratch, "rell", P, Vp, widths_r,
-                                       nbs_r)
+                                       nbp_r, blay_r, layout)
             arrs_l = [sp.staging() for sp in spills_l]
             arrs_r = [sp.staging() for sp in spills_r]
             bounds_l = [-1] * len(widths_l)
             bounds_r = [-1] * len(widths_r)
         del deg_local, deg_remote
 
-        # --- fill: one shard resident at a time, rows spilled as written -
+        # --- fill: one shard resident at a time, spans spilled as written
         for p in range(P):
             e, w, _ = sg.shard(p, mmap=False, positions=False)
             es = np.ascontiguousarray(e[:, 0], dtype=np.int64)
@@ -342,64 +398,78 @@ def build_from_sharded(sg: ShardedGraph, pad_multiple: int = 8,
                                  is_boundary_g, out_degree, slot_of,
                                  exporters_by_p[p], fanout_by_p[p],
                                  _halo_ptrs(halo_by_p[p], part,
-                                            export_idx_of, X))
-            core.commit_row()
+                                            export_idx_of, X), layout)
+            core.commit_row(
+                {**{nm: layout.ep_by_p[p] for nm in e_names},
+                 **{nm: layout.gp_by_p[p] for nm in g_names}})
+            if p % layout.ppb == layout.ppb - 1:     # close out the block
+                used_e = int(layout.eoff[p]) + layout.ep_by_p[p]
+                used_g = int(layout.goff[p]) + layout.gp_by_p[p]
+                core.pad(layout.eb - used_e, e_names)
+                core.pad(layout.gb - used_g, g_names)
             if widths_l:
                 contrib = _ell_fill_partition(arrs_l, widths_l, p,
                                               _ell_pick(d, negate=False),
-                                              P, Vp)
+                                              P, Vp, layout, Vp)
                 bounds_l = [max(b, c) for b, c in zip(bounds_l, contrib)]
-                _commit_ell_rows(spills_l, p, stride=Vp)
+                _commit_ell_rows(spills_l, blay_l, nbp_l, layout, p)
             if widths_r:
                 contrib = _ell_fill_partition(arrs_r, widths_r, p,
                                               _ell_pick(d, negate=True),
-                                              P, Vp)
+                                              P, Vp, layout, Vp + H)
                 bounds_r = [max(b, c) for b, c in zip(bounds_r, contrib)]
-                _commit_ell_rows(spills_r, p, stride=Vp + H)
+                _commit_ell_rows(spills_r, blay_r, nbp_r, layout, p)
             del d
 
         # vertex-scale tables are done; free them before the jax product
         # becomes resident
         del (halo_by_p, exporters_by_p, fanout_by_p, export_idx_of,
              slot_of, verts_by_p, is_boundary_g, out_degree)
-        local_ell = (_ell_take(spills_l, widths_l, bounds_l, P, Vp, Vp)
+        local_ell = (_ell_take(spills_l, widths_l, bounds_l, Vp)
                      if widths_l else ())
-        remote_ell = (_ell_take(spills_r, widths_r, bounds_r, P, Vp,
-                                Vp + H)
+        remote_ell = (_ell_take(spills_r, widths_r, bounds_r, Vp + H)
                       if widths_r else ())
         return _take_graph(core, local_ell, remote_ell, n_partitions=P,
                            n_vertices=int(n), n_edges=int(sg.n_edges),
-                           vp=int(Vp), ep=int(Ep), xp=int(X), hp=int(H),
-                           gp=int(Gp))
+                           vp=int(Vp), ep=int(layout.eb), xp=int(X),
+                           hp=int(H), gp=int(layout.gb), layout=layout)
 
 
-def _ell_row_spills(scratch: str, tag: str, P: int, Vp: int, widths, nbs
-                    ) -> list[_RowSpill]:
-    """Row spills for one ELL side: the six arrays ``_ell_fill_partition``
-    writes, plus ``flat_idx`` (derived per committed row — it is just the
-    row's idx offset by p*stride, see ``_commit_ell_rows``)."""
+def _ell_row_spills(scratch: str, tag: str, P: int, Vp: int, widths,
+                    nb_by_p, bin_layouts, layout) -> list[_RowSpill]:
+    """Row spills for one ELL side: the seven arrays
+    ``_ell_fill_partition`` writes (``flat_idx`` included — the fill
+    derives it in staging, the commit keeps only the span).  Staging
+    width is the bin's widest per-partition row count; files carry the
+    bin's block-ragged ``(B, Nb)`` product."""
+    B, ppb = layout.n_blocks, layout.ppb
     spills = []
-    for b, ((lo, kb), Nb) in enumerate(zip(widths, nbs)):
-        spills.append(_RowSpill(scratch, f"{tag}{b}", P, {
-            "rows": ((Nb,), np.int32, Vp),
-            "idx": ((Nb, kb), np.int32, 0),
-            "val": ((Nb, kb), np.float32, 0.0),
-            "msk": ((Nb, kb), bool, False),
-            "grp": ((Nb, kb), np.int32, 0),
-            "flat_rows": ((Nb,), np.int32, P * Vp),
-            "flat_idx": ((Nb, kb), np.int32, 0),
+    for b, ((lo, kb), nbp, (_, Nb)) in enumerate(
+            zip(widths, nb_by_p, bin_layouts)):
+        W = max(nbp)
+        spills.append(_RowSpill(scratch, f"{tag}{b}", {
+            "rows": ((W,), np.int32, ppb * Vp, (B, Nb)),
+            "idx": ((W, kb), np.int32, 0, (B, Nb, kb)),
+            "val": ((W, kb), np.float32, 0.0, (B, Nb, kb)),
+            "msk": ((W, kb), bool, False, (B, Nb, kb)),
+            "grp": ((W, kb), np.int32, 0, (B, Nb, kb)),
+            "flat_rows": ((W,), np.int32, P * Vp, (B, Nb)),
+            "flat_idx": ((W, kb), np.int32, 0, (B, Nb, kb)),
         }))
     return spills
 
 
-def _commit_ell_rows(spills: list[_RowSpill], p: int, stride: int) -> None:
-    for sp in spills:
-        sp.row("flat_idx")[...] = sp.row("idx") + np.int32(p * stride)
-        sp.commit_row()
+def _commit_ell_rows(spills: list[_RowSpill], bin_layouts, nb_by_p,
+                     layout, p: int) -> None:
+    for sp, (offs, Nb), nbp in zip(spills, bin_layouts, nb_by_p):
+        span = int(nbp[p])
+        sp.commit_row(span)
+        if p % layout.ppb == layout.ppb - 1:         # close out the block
+            sp.pad(Nb - (int(offs[p]) + span))
 
 
-def _ell_take(spills: list[_RowSpill], widths, bounds: list[int], P: int,
-              Vp: int, stride: int) -> tuple[EllSlice, ...]:
+def _ell_take(spills: list[_RowSpill], widths, bounds: list[int],
+              stride: int) -> tuple[EllSlice, ...]:
     """The shared ``_ell_finalize`` over lazily mmap'd spill files — each
     array's pages only transiently resident while ``jnp.asarray``
     converts it (the precomputed ``flat_idx`` rides along so the full
@@ -410,12 +480,13 @@ def _ell_take(spills: list[_RowSpill], widths, bounds: list[int], P: int,
              for name in ("rows", "idx", "val", "msk", "grp", "flat_rows",
                           "flat_idx")}
             for sp in spills]
-    return _ell_finalize(arrs, widths, bounds, P, Vp, stride)
+    return _ell_finalize(arrs, widths, bounds, stride)
 
 
 def _take_graph(core: _RowSpill, local_ell, remote_ell, *,
                 n_partitions: int, n_vertices: int, n_edges: int, vp: int,
-                ep: int, xp: int, hp: int, gp: int) -> PartitionedGraph:
+                ep: int, xp: int, hp: int, gp: int,
+                layout) -> PartitionedGraph:
     """The shared ``_finalize_graph`` over the lazily mmap'd spilled core
     arrays: one field list to maintain, same transient-residency
     property (``take`` pops each mmap as it converts)."""
@@ -424,7 +495,7 @@ def _take_graph(core: _RowSpill, local_ell, remote_ell, *,
     return _finalize_graph(arrs, local_ell, remote_ell,
                            n_partitions=n_partitions, n_vertices=n_vertices,
                            n_edges=n_edges, vp=vp, ep=ep, xp=xp, hp=hp,
-                           gp=gp)
+                           gp=gp, layout=layout)
 
 
 def ingest_to_ghp(path: str, part, n_partitions: int | None,
@@ -478,6 +549,7 @@ def build_partitioned_graph_from_path(
     build_ell: bool = True,
     ell_pad_slices: int = 8,
     ell_base_slices: int = 128,
+    edge_blocks: int = 1,
     dtype=np.int64,
 ) -> PartitionedGraph:
     """Build a ``PartitionedGraph`` from a graph on disk, out-of-core.
@@ -491,9 +563,17 @@ def build_partitioned_graph_from_path(
     ``TemporaryDirectory``); ``ghp_out`` additionally keeps the sharded
     graph at that path (``positions=True`` to make it round-trippable).
 
+    ``pad_multiple`` and ``edge_blocks`` mean exactly what they mean on
+    ``build_partitioned_graph``: each partition's edge/group span is
+    rounded up to ``pad_multiple`` entries, and the spans are packed into
+    ``edge_blocks`` block rows (1 = fully ragged, ``n_partitions`` = the
+    legacy shared-width layout; a ``D``-device mesh needs a multiple of
+    ``D``).
+
     The result is bit-identical to
     ``build_partitioned_graph(edges, n, part, weights)`` on the same edge
-    list and labeling, for every chunk size.
+    list, labeling, ``pad_multiple`` and ``edge_blocks``, for every chunk
+    size.
     """
     if os.path.isdir(path) and os.path.exists(os.path.join(path,
                                                            "meta.json")):
@@ -508,6 +588,7 @@ def build_partitioned_graph_from_path(
                                   build_ell=build_ell,
                                   ell_pad_slices=ell_pad_slices,
                                   ell_base_slices=ell_base_slices,
+                                  edge_blocks=edge_blocks,
                                   workdir=workdir)
 
     if part is None:
@@ -522,4 +603,5 @@ def build_partitioned_graph_from_path(
                                   build_ell=build_ell,
                                   ell_pad_slices=ell_pad_slices,
                                   ell_base_slices=ell_base_slices,
+                                  edge_blocks=edge_blocks,
                                   workdir=wd)

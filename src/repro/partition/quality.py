@@ -15,7 +15,13 @@ internal, so every quantity here is a direct proxy for a paper metric:
                           entry, i.e. ``sum(export_fanout)`` of the built
                           :class:`~repro.core.graph.PartitionedGraph`
                           (computable from the raw labeling without
-                          building — both routes agree, tested).
+                          building — both routes agree, tested),
+  * ``pad_waste``       — ``k * max_p |edges(p)| / sum_p |edges(p)|``: the
+                          memory and work multiplier a shared-width padded
+                          edge layout (``edge_blocks=P``) pays over the
+                          ragged one (``edge_blocks=1``) for this
+                          labeling's in-edge skew; 1.0 means perfectly
+                          even, hub-clustering labelings run much higher.
 
 ``partition_report`` works from the raw ``(edges, part)`` labeling; pass
 ``graph=`` to read the halo size off a built ``PartitionedGraph``'s
@@ -47,6 +53,7 @@ class PartitionReport:
     replication: float      # halo_entries / n_vertices (H/V)
     balance: float          # max partition size / (n/k)
     exchange_bytes: int     # halo_entries * bytes_per_value per exchange
+    pad_waste: float        # k * max_p in-edges / sum_p in-edges
 
     def as_dict(self) -> dict[str, Any]:
         return dataclasses.asdict(self)
@@ -56,6 +63,7 @@ class PartitionReport:
                 f"boundary {100 * self.boundary_frac:.1f}% "
                 f"H/V {self.replication:.2f} "
                 f"balance {self.balance:.2f} "
+                f"pad-waste {self.pad_waste:.2f}x "
                 f"exchange {self.exchange_bytes / 1024:.1f} KiB")
 
 
@@ -92,6 +100,11 @@ def partition_report(edges: np.ndarray, n_vertices: int, part: np.ndarray,
     sizes = np.bincount(part, minlength=k)
     balance = float(sizes.max() / (n_vertices / k)) if n_vertices else 1.0
 
+    in_edges = np.bincount(part[dst], minlength=k) if len(edges) else \
+        np.zeros(k, dtype=np.int64)
+    pad_waste = (float(k * in_edges.max() / in_edges.sum())
+                 if in_edges.sum() else 1.0)
+
     return PartitionReport(
         n_vertices=int(n_vertices), n_edges=len(edges), n_partitions=k,
         edge_cut=cut,
@@ -102,4 +115,5 @@ def partition_report(edges: np.ndarray, n_vertices: int, part: np.ndarray,
         replication=halo / max(n_vertices, 1),
         balance=balance,
         exchange_bytes=halo * bytes_per_value,
+        pad_waste=pad_waste,
     )

@@ -114,8 +114,7 @@ def test_tile_group_accounting_equals_dense_reduction():
     the dense (source-partition, destination) combine-group count for
     arbitrary send sets — the reduction `_ell_deliver` used to pay on the
     dense edge arrays even on the kernel path."""
-    from repro.core.runtime import (ell_group_accounting, gather_per_partition,
-                                    slice_flat)
+    from repro.core.runtime import ell_group_accounting, slice_flat
 
     graph, _ = _skewed_graph()
     p = graph.n_partitions
@@ -126,15 +125,22 @@ def test_tile_group_accounting_equals_dense_reduction():
         send_tab = jnp.logical_and(
             send_tab, jnp.concatenate([graph.vertex_mask, graph.halo_mask],
                                       axis=1))
-        # dense oracle: segment-max over the padded edge arrays
-        send_e = gather_per_partition(send_tab, graph.edge_src)
+        # dense oracle: segment-max over the block-ragged edge arrays
+        # (edge_part resolves each edge's absolute partition, edge_group
+        # its block-relative flat combine group)
+        bsz = graph.edge_src.shape[0]
+        ppb = p // bsz
+        epart = graph.edge_part + (jnp.arange(bsz, dtype=jnp.int32)
+                                   * ppb)[:, None]
+        send_e = send_tab[epart, graph.edge_src]
         valid = jnp.logical_and(
             jnp.logical_and(graph.edge_mask,
                             jnp.logical_not(graph.edge_local)), send_e)
-        grp_sent = jax.vmap(
-            lambda v, g: jax.ops.segment_max(v.astype(jnp.int32), g,
-                                             num_segments=graph.gp)
-        )(valid, graph.edge_group) > 0
+        gseg = (graph.edge_group + (jnp.arange(bsz, dtype=jnp.int32)
+                                    * graph.gp)[:, None]).reshape(-1)
+        grp_sent = jax.ops.segment_max(
+            valid.reshape(-1).astype(jnp.int32), gseg,
+            num_segments=bsz * graph.gp).reshape(bsz, graph.gp) > 0
         grp_sent = jnp.logical_and(grp_sent, graph.group_mask)
         want = int(jnp.sum(jnp.logical_and(grp_sent, graph.group_remote)))
 

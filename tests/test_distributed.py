@@ -46,7 +46,8 @@ def test_distributed_hybrid_engine_matches_host():
 
     edges, w, n = grid_graph(6, 40, seed=3)
     part = bfs_partition(edges, n, 8, seed=1)
-    graph = build_partitioned_graph(edges, n, part, weights=w)
+    graph = build_partitioned_graph(edges, n, part, weights=w,
+                                    edge_blocks=8)   # one block per device
     prog = SSSP(source=0)
 
     # host reference
@@ -107,7 +108,7 @@ def test_distributed_hybrid_kernel_path_matches_host():
     part = hash_partition(n, 8, seed=2)
     w = rng.uniform(0.5, 3.0, size=len(edges)).astype(np.float32)
     graph = build_partitioned_graph(edges, n, part, weights=w,
-                                    ell_base_slices=8)
+                                    ell_base_slices=8, edge_blocks=8)
     assert len(graph.remote_ell) >= 2, 'skew should spill remote bins'
     prog = SSSP(source=0)
 
@@ -160,9 +161,11 @@ def test_distributed_new_semiring_apps_match_host():
     part = hash_partition(n, 8, seed=1)
     rng = np.random.RandomState(7)
     w_cap = rng.uniform(0.5, 8.0, size=len(edges)).astype(np.float32)
-    g_cap = build_partitioned_graph(edges, n, part, weights=w_cap)
+    g_cap = build_partitioned_graph(edges, n, part, weights=w_cap,
+                                    edge_blocks=8)
     g_rw = {m: build_partitioned_graph(
-        edges, n, part, weights=random_walk_edge_weights(edges, n, m))
+        edges, n, part, edge_blocks=8,
+        weights=random_walk_edge_weights(edges, n, m))
         for m in ('odds', 'logprob')}
 
     mesh = jax.make_mesh((2, 4), ('data', 'model'))

@@ -110,18 +110,28 @@ if HAVE_HYPOTHESIS:
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("pname", sorted(PARTITIONERS))
-def test_from_path_bitexact_per_partitioner(tmp_path, pname):
+@pytest.mark.parametrize("pad_multiple", [8, 4])
+@pytest.mark.parametrize("edge_blocks", [1, 4])
+def test_from_path_bitexact_per_partitioner(tmp_path, pname, pad_multiple,
+                                            edge_blocks):
+    """The builder parity sweep: every partitioner × chunk size ×
+    ``pad_multiple`` × ``edge_blocks`` — the out-of-core build matches the
+    in-memory one bit for bit under both the fully-ragged (B=1) and the
+    legacy padded (B=P) edge layouts, at every padding granularity."""
     edges, n = rmat_graph(260, avg_degree=5, seed=2)
     w = np.random.RandomState(1).uniform(0.5, 2.0,
                                          len(edges)).astype(np.float32)
     staged = str(tmp_path / "staged")
     stage_arrays(staged, edges, weights=w, n_vertices=n)
     ref = graph_digest(build_partitioned_graph(
-        edges, n, pname, weights=w, n_partitions=4, partition_seed=0))
+        edges, n, pname, weights=w, n_partitions=4, partition_seed=0,
+        pad_multiple=pad_multiple, edge_blocks=edge_blocks))
     for chunk in (11, 97, 1 << 20):
         g = build_partitioned_graph_from_path(staged, pname, 4,
                                               chunk_edges=chunk,
-                                              partition_seed=0)
+                                              partition_seed=0,
+                                              pad_multiple=pad_multiple,
+                                              edge_blocks=edge_blocks)
         assert graph_digest(g) == ref, f"{pname} chunk={chunk}"
 
 
@@ -141,6 +151,133 @@ def test_from_path_bitexact_with_spill_bins(tmp_path):
     g = build_partitioned_graph_from_path(staged, "fennel", 3,
                                           chunk_edges=64, ell_base_slices=8)
     assert graph_digest(g) == graph_digest(ref)
+
+
+# ---------------------------------------------------------------------------
+# ragged (B=1) == padded (B=P) after masking, ELL/spill bins included
+# ---------------------------------------------------------------------------
+
+def _goff(g, p):
+    """Partition p's block-relative flat group offset (0 under B=P)."""
+    ppb = g.n_partitions // g.n_blocks
+    return sum(g.gp_by_p[(p // ppb) * ppb:p])
+
+
+def _bin_rows_by_p(g, s):
+    """One ELL bin's valid rows split per partition: (local row, idx, val,
+    msk, group-unoffset) in span order — the layout-independent content."""
+    rows, idx = np.asarray(s.rows), np.asarray(s.idx)
+    val, msk, grp = np.asarray(s.val), np.asarray(s.msk), np.asarray(s.grp)
+    B = rows.shape[0]
+    ppb = g.n_partitions // B
+    out = []
+    for p in range(g.n_partitions):
+        b, pr = p // ppb, p % ppb
+        sel = (rows[b] >= pr * g.vp) & (rows[b] < (pr + 1) * g.vp)
+        gv = np.where(msk[b][sel], grp[b][sel] - _goff(g, p), 0)
+        out.append((rows[b][sel] - pr * g.vp, idx[b][sel], val[b][sel],
+                    msk[b][sel], gv))
+    return out
+
+
+def _assert_ragged_equals_padded(gr, gp):
+    """Bit-equality of the B=1 (ragged) and B=P (padded) builds once the
+    layout is unwound: identical per-partition spans in every edge/group
+    family and every ELL bin, identical flat host views."""
+    P, Vp = gr.n_partitions, gr.vp
+    assert gr.n_blocks == 1 and gp.n_blocks == P
+    assert gr.ep_by_p == gp.ep_by_p and gr.gp_by_p == gp.gp_by_p
+    for f in ("vertex_gid", "vertex_mask", "is_boundary", "out_degree",
+              "export_slot", "export_mask", "export_fanout", "halo_ptr",
+              "halo_mask"):
+        np.testing.assert_array_equal(np.asarray(getattr(gr, f)),
+                                      np.asarray(getattr(gp, f)),
+                                      err_msg=f)
+    for p in range(P):
+        (br, sr), (bp, sp) = gr.edge_span(p), gp.edge_span(p)
+        for f in ("edge_src", "edge_dst", "edge_w", "edge_mask",
+                  "edge_local", "edge_src_gid", "edge_dst_gid"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(gr, f))[br, sr],
+                np.asarray(getattr(gp, f))[bp, sp], err_msg=f"{f} p={p}")
+        m = np.asarray(gr.edge_mask)[br, sr]
+        np.testing.assert_array_equal(
+            np.where(m, np.asarray(gr.edge_group)[br, sr] - _goff(gr, p), 0),
+            np.where(m, np.asarray(gp.edge_group)[bp, sp] - _goff(gp, p), 0),
+            err_msg=f"edge_group p={p}")
+        (br, sr), (bp, sp) = gr.group_span(p), gp.group_span(p)
+        for f in ("group_remote", "group_mask"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(gr, f))[br, sr],
+                np.asarray(getattr(gp, f))[bp, sp], err_msg=f"{f} p={p}")
+    for side in ("local_ell", "remote_ell"):
+        bins_r, bins_p = getattr(gr, side), getattr(gp, side)
+        assert len(bins_r) == len(bins_p), side
+        for sr_, sp_ in zip(bins_r, bins_p):
+            assert (sr_.kb, sr_.lo, sr_.dense, sr_.stride,
+                    sr_.payload_bound) == \
+                (sp_.kb, sp_.lo, sp_.dense, sp_.stride, sp_.payload_bound)
+            for pr, pp in zip(_bin_rows_by_p(gr, sr_),
+                              _bin_rows_by_p(gp, sp_)):
+                for a, b in zip(pr, pp):
+                    np.testing.assert_array_equal(a, b, err_msg=side)
+            # the absolute flat host views agree entry for entry
+            fr, fp = np.asarray(sr_.flat_rows), np.asarray(sp_.flat_rows)
+            vr, vp_ = fr < P * Vp, fp < P * Vp
+            np.testing.assert_array_equal(fr[vr], fp[vp_], err_msg=side)
+            np.testing.assert_array_equal(
+                np.asarray(sr_.flat_idx)[vr],
+                np.asarray(sp_.flat_idx)[vp_], err_msg=side)
+
+
+def _skewed_random_graph(seed, n=170):
+    """Hub-skewed digraph: enough in-degree spread that ell_base_slices=8
+    spills extra bins, so the parity check covers them."""
+    rng = np.random.RandomState(seed)
+    hubs = np.stack([rng.randint(0, n, 600), rng.randint(0, 4, 600)],
+                    axis=1)
+    edges = np.concatenate([hubs, rng.randint(0, n, (300, 2))])
+    edges = np.unique(edges[edges[:, 0] != edges[:, 1]].astype(np.int64),
+                      axis=0)
+    w = rng.uniform(0.5, 3.0, len(edges)).astype(np.float32)
+    return edges, n, w
+
+
+def _check_ragged_padded_parity(tmp, pname, seed, chunks=(23, 1 << 20)):
+    edges, n, w = _skewed_random_graph(seed)
+    gr = build_partitioned_graph(edges, n, pname, weights=w,
+                                 n_partitions=4, partition_seed=seed,
+                                 ell_base_slices=8)
+    gp = build_partitioned_graph(edges, n, pname, weights=w,
+                                 n_partitions=4, partition_seed=seed,
+                                 ell_base_slices=8, edge_blocks=4)
+    assert len(gr.local_ell) > 1 or len(gr.remote_ell) > 1
+    _assert_ragged_equals_padded(gr, gp)
+    # both layouts, out-of-core, every chunk size: bit-identical digests
+    staged = os.path.join(tmp, "staged")
+    shutil.rmtree(staged, ignore_errors=True)
+    stage_arrays(staged, edges, weights=w, n_vertices=n)
+    for blocks, ref in ((1, gr), (4, gp)):
+        for chunk in chunks:
+            g = build_partitioned_graph_from_path(
+                staged, pname, 4, chunk_edges=chunk, partition_seed=seed,
+                ell_base_slices=8, edge_blocks=blocks)
+            assert graph_digest(g) == graph_digest(ref), (blocks, chunk)
+
+
+@pytest.mark.parametrize("pname", sorted(PARTITIONERS))
+def test_ragged_equals_padded_seeded_sweep(tmp_path, pname):
+    _check_ragged_padded_parity(str(tmp_path), pname, seed=3)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           pname=st.sampled_from(sorted(PARTITIONERS)))
+    def test_ragged_equals_padded_any_graph(tmp_path_factory, seed, pname):
+        tmp = tmp_path_factory.mktemp("ragged")
+        _check_ragged_padded_parity(str(tmp), pname, seed=seed,
+                                    chunks=(37,))
 
 
 def test_from_path_runs_the_engine(tmp_path):
@@ -220,6 +357,18 @@ def test_wrong_format_tag(ghp_dir):
 def test_unsupported_version(ghp_dir):
     _rewrite_meta(ghp_dir, lambda m: {**m, "version": 99})
     with pytest.raises(GraphFormatError, match="version"):
+        load_graph(ghp_dir)
+
+
+def test_old_version_error_names_both_versions(ghp_dir):
+    """A v1 directory (pre block-ragged builds) must refuse to load with
+    an error naming the file's version and the supported one — not fail
+    deep in the builder."""
+    from repro.io.format import GHP_VERSION
+    assert GHP_VERSION == 2
+    _rewrite_meta(ghp_dir, lambda m: {**m, "version": 1})
+    with pytest.raises(GraphFormatError,
+                       match=r"unsupported version 1 \(have 2\)"):
         load_graph(ghp_dir)
 
 

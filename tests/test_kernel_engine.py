@@ -72,7 +72,8 @@ def test_graph_carries_ell_layout(road):
     assert graph.has_ell and graph.has_remote_ell and graph.kl > 0
     base = graph.local_ell[0]
     assert base.dense and base.lo == 0 and base.stride == graph.vp
-    assert base.idx.shape == (graph.n_partitions, graph.vp, base.kb)
+    ppb = graph.n_partitions // graph.n_blocks
+    assert base.idx.shape == (graph.n_blocks, ppb * graph.vp, base.kb)
     assert base.flat_idx.shape == (graph.n_partitions * graph.vp, base.kb)
     # ELL slots reproduce exactly the local/remote splits of the dense arrays
     n_local = int(jnp.sum(jnp.logical_and(graph.edge_mask, graph.edge_local)))

@@ -76,25 +76,33 @@ def _check_builder_invariants(edges, w, n, part):
                                   oracle_b[gid[vm]])
 
     # halo_ptr resolves every remote edge source to the correct exporter slot
+    # (partition p's edges live in its block-ragged span, see edge_span)
     esrc = np.asarray(graph.edge_src)
     elocal = np.asarray(graph.edge_local)
+    epart = np.asarray(graph.edge_part)
     halo_ptr = np.asarray(graph.halo_ptr)
     halo_mask = np.asarray(graph.halo_mask)
     export_slot = np.asarray(graph.export_slot)
     export_mask = np.asarray(graph.export_mask)
+    ppb = P // graph.n_blocks
     for p in range(P):
-        sel = em[p] & ~elocal[p]
+        b, sl = graph.edge_span(p)
+        assert b == p // ppb and sl.stop - sl.start == graph.ep_by_p[p]
+        assert (epart[b, sl] == p % ppb).all()
+        assert em[b, sl].sum() == em[b, sl][:em[b, sl].sum()].sum()  # prefix
+        sel = em[b, sl] & ~elocal[b, sl]
         if not sel.any():
             continue
-        hs = esrc[p, sel] - Vp
+        hs = esrc[b, sl][sel] - Vp
         assert (hs >= 0).all() and (hs < graph.hp).all()
         assert halo_mask[p, hs].all()
         flat = halo_ptr[p, hs]
         q, x = flat // X, flat % X
         assert export_mask[q, x].all()
+        sgp = sg[b, sl][sel]
         exporter_gid = gid[q, export_slot[q, x]]
-        np.testing.assert_array_equal(exporter_gid, sg[p, sel])
-        np.testing.assert_array_equal(q, part[sg[p, sel]])
+        np.testing.assert_array_equal(exporter_gid, sgp)
+        np.testing.assert_array_equal(q, part[sgp])
 
     # the numpy quality report and the built halo plan agree
     assert partition_report(edges, n, part, graph=graph) == \
@@ -149,10 +157,16 @@ def test_report_path_graph_contiguous_chunks():
     assert rep.replication == 3 / 64
     assert rep.balance == 1.0
     assert rep.exchange_bytes == 3 * 4
+    # chunk 0 keeps 15 in-edges (vertex 0 has none), chunks 1-3 keep 16:
+    # a shared-width padded layout would pay 4*16 slots for 63 edges
+    assert rep.pad_waste == pytest.approx(4 * 16 / 63)
 
     # the built graph's export_fanout plan agrees with the numpy route
     g = build_partitioned_graph(edges, n, part)
     assert partition_report(edges, n, part, graph=g) == rep
+    # the built ragged graph sees the same skew through its padded spans
+    assert g.pad_waste == pytest.approx(
+        g.n_partitions * max(g.ep_by_p) / sum(g.ep_by_p))
 
 
 def test_report_cycle_graph_contiguous_chunks():
@@ -163,8 +177,10 @@ def test_report_cycle_graph_contiguous_chunks():
     assert rep.boundary_vertices == 4
     assert rep.halo_entries == 4
     assert rep.balance == 1.0
+    assert rep.pad_waste == 1.0         # one in-edge per vertex: no skew
     g = build_partitioned_graph(edges, n, part)
     assert partition_report(edges, n, part, graph=g) == rep
+    assert g.pad_waste == 1.0           # equal spans, any pad_multiple
 
 
 # ---------------------------------------------------------------------------
