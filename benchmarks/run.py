@@ -23,7 +23,7 @@ def main() -> None:
     ap.add_argument("--table", default=None,
                     help="run a single table: sssp|pagerank|bm|giraphpp|"
                          "kernels|local_phase|dist_phase|partition|ingest|"
-                         "roofline")
+                         "ft|roofline")
     args = ap.parse_args()
 
     if args.table == "dist_phase":
@@ -80,6 +80,11 @@ def main() -> None:
         from benchmarks import ingest_bench
         rows += ingest_bench.csv_rows(
             ingest_bench.bench_ingest(fast=args.fast))
+    if args.table == "ft":
+        # explicit-only (checkpoint/recovery A/B; --fast drops the gated
+        # 10^6-edge overhead workload, so CI runs it full)
+        from benchmarks import ft_bench
+        rows += ft_bench.csv_rows(ft_bench.bench_ft(fast=args.fast))
     if want("roofline"):
         rows += roofline_rows()
 

@@ -1,4 +1,8 @@
-from repro.checkpoint.ckpt import (AsyncCheckpointer, load_checkpoint,
-                                   save_checkpoint)
+from repro.checkpoint.ckpt import (AsyncCheckpointer, CheckpointError,
+                                   checkpoint_bytes, latest_checkpoint,
+                                   load_checkpoint, load_checkpoint_arrays,
+                                   read_manifest, save_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "AsyncCheckpointer"]
+__all__ = ["save_checkpoint", "load_checkpoint", "load_checkpoint_arrays",
+           "AsyncCheckpointer", "CheckpointError", "latest_checkpoint",
+           "checkpoint_bytes", "read_manifest"]

@@ -1,27 +1,37 @@
-"""Sharded checkpointing: per-leaf zstd-compressed npy blobs + a manifest
-with integrity hashes; an async background writer; elastic restore that
-re-shards onto a *different* mesh (grow/shrink pods between runs).
+"""Sharded checkpointing: per-leaf compressed npy blobs + a manifest with
+integrity hashes; an async background writer; elastic restore that re-shards
+onto a *different* mesh (grow/shrink pods between runs).
 
 The graph engine checkpoints at global-iteration boundaries (paper §5.3);
 the trainer at step boundaries.  On real multi-host TPU each host writes its
 addressable shards; on this container the host owns everything — the format
 (one blob per leaf per shard-group + manifest) is the multi-host one.
+
+Blobs are zstd-compressed when the optional ``zstandard`` package is
+present, raw ``.npy`` bytes otherwise; the manifest records the codec so a
+checkpoint written either way restores anywhere the codec is available.
+Every structural problem — missing/torn manifest, leaf-count mismatch,
+per-leaf name/shape/dtype disagreement with the restoring tree, blob hash
+corruption — raises :class:`CheckpointError` (an ``IOError``), never a bare
+``assert`` (which ``python -O`` strips) and never a silently transposed
+restore.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import io
 import json
 import os
 import queue
+import shutil
 import threading
+import time
 from typing import Any
 
 import numpy as np
 
-try:                               # optional: only save/load need it
+try:                               # optional: raw codec works without it
     import zstandard as zstd
 except ImportError:                # pragma: no cover - env without zstandard
     zstd = None
@@ -30,12 +40,42 @@ import jax
 
 Tree = Any
 
+__all__ = ["CheckpointError", "save_checkpoint", "load_checkpoint",
+           "load_checkpoint_arrays", "read_manifest", "AsyncCheckpointer",
+           "latest_checkpoint", "checkpoint_bytes"]
 
-def _require_zstd():
-    if zstd is None:
-        raise ImportError(
-            "checkpointing requires the optional 'zstandard' package "
-            "(pip install zstandard, see requirements-dev.txt)")
+
+class CheckpointError(IOError):
+    """A checkpoint directory failed validation (torn write, corrupt blob,
+    or a restore into a tree whose structure does not match the manifest)."""
+
+
+def _default_codec() -> str:
+    return "zstd" if zstd is not None else "raw"
+
+
+def _encode(raw: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise CheckpointError(
+                "codec 'zstd' needs the optional 'zstandard' package "
+                "(pip install zstandard, see requirements.txt)")
+        return zstd.ZstdCompressor(level=3).compress(raw)
+    if codec == "raw":
+        return raw
+    raise CheckpointError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decode(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise CheckpointError(
+                "checkpoint was written with codec 'zstd'; restoring needs "
+                "the optional 'zstandard' package")
+        return zstd.ZstdDecompressor().decompress(blob)
+    if codec == "raw":
+        return blob
+    raise CheckpointError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(tree: Tree):
@@ -52,20 +92,39 @@ def _leaf_path_names(tree: Tree) -> list[str]:
     return names
 
 
+def read_manifest(path: str) -> dict:
+    """Load + validate a checkpoint manifest; :class:`CheckpointError` on a
+    missing or torn file."""
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.exists(mpath):
+        raise CheckpointError(f"{path}: no manifest.json (torn write?)")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(f"{mpath}: corrupt or truncated json "
+                              f"({e})") from None
+    if not isinstance(manifest, dict) or "leaves" not in manifest:
+        raise CheckpointError(f"{mpath}: not a checkpoint manifest")
+    return manifest
+
+
 def save_checkpoint(path: str, tree: Tree, step: int,
-                    extra_meta: dict | None = None) -> None:
-    _require_zstd()
+                    extra_meta: dict | None = None,
+                    codec: str | None = None) -> None:
+    codec = codec or _default_codec()
     os.makedirs(path, exist_ok=True)
     leaves, _ = _flatten(tree)
     names = _leaf_path_names(tree)
-    manifest = {"step": int(step), "leaves": [], "meta": extra_meta or {}}
-    cctx = zstd.ZstdCompressor(level=3)
+    ext = ".npy.zst" if codec == "zstd" else ".npy"
+    manifest = {"step": int(step), "codec": codec, "leaves": [],
+                "meta": extra_meta or {}}
     for i, (name, leaf) in enumerate(zip(names, leaves)):
         arr = np.asarray(leaf)
         buf = io.BytesIO()
         np.save(buf, arr, allow_pickle=False)
-        blob = cctx.compress(buf.getvalue())
-        fn = f"leaf_{i:05d}.npy.zst"
+        blob = _encode(buf.getvalue(), codec)
+        fn = f"leaf_{i:05d}{ext}"
         with open(os.path.join(path, fn), "wb") as f:
             f.write(blob)
         manifest["leaves"].append({
@@ -79,44 +138,102 @@ def save_checkpoint(path: str, tree: Tree, step: int,
     os.replace(tmp, os.path.join(path, "manifest.json"))   # atomic commit
 
 
+def _read_leaf(path: str, rec: dict, codec: str, verify: bool) -> np.ndarray:
+    full = os.path.join(path, rec["file"])
+    if not os.path.exists(full):
+        raise CheckpointError(f"{full}: leaf blob missing")
+    with open(full, "rb") as f:
+        blob = f.read()
+    if verify:
+        h = hashlib.sha256(blob).hexdigest()
+        if h != rec["sha256"]:
+            raise CheckpointError(f"checkpoint corruption in {rec['file']}")
+    arr = np.load(io.BytesIO(_decode(blob, codec)), allow_pickle=False)
+    if list(arr.shape) != list(rec["shape"]) or str(arr.dtype) != rec["dtype"]:
+        raise CheckpointError(
+            f"{full}: decoded {arr.dtype}{arr.shape}, manifest says "
+            f"{rec['dtype']}{tuple(rec['shape'])}")
+    return arr
+
+
 def load_checkpoint(path: str, tree_like: Tree, shardings: Tree | None = None,
                     verify: bool = True) -> tuple[Tree, int]:
     """Restore into the structure of ``tree_like``; if ``shardings`` given
     (possibly for a DIFFERENT mesh than the writer's), device_put re-shards —
-    elastic scaling across restarts."""
-    _require_zstd()
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    elastic scaling across restarts.
+
+    Every leaf is validated against the manifest — path name, shape and
+    dtype — so restoring into a mismatched tree (renamed field, transposed
+    axes, wrong dtype) raises :class:`CheckpointError` instead of silently
+    pouring bytes into the wrong slots.
+    """
+    manifest = read_manifest(path)
+    codec = manifest.get("codec", "zstd")
     leaves, treedef = _flatten(tree_like)
-    assert len(leaves) == len(manifest["leaves"]), \
-        f"checkpoint has {len(manifest['leaves'])} leaves, model {len(leaves)}"
-    dctx = zstd.ZstdDecompressor()
+    names = _leaf_path_names(tree_like)
+    if len(leaves) != len(manifest["leaves"]):
+        raise CheckpointError(
+            f"{path}: checkpoint has {len(manifest['leaves'])} leaves, "
+            f"restoring tree has {len(leaves)}")
     out = []
-    for rec in manifest["leaves"]:
-        with open(os.path.join(path, rec["file"]), "rb") as f:
-            blob = f.read()
-        if verify:
-            h = hashlib.sha256(blob).hexdigest()
-            if h != rec["sha256"]:
-                raise IOError(f"checkpoint corruption in {rec['file']}")
-        arr = np.load(io.BytesIO(dctx.decompress(blob)), allow_pickle=False)
-        out.append(arr)
+    for name, leaf, rec in zip(names, leaves, manifest["leaves"]):
+        if rec["name"] != name:
+            raise CheckpointError(
+                f"{path}: leaf {rec['file']} is {rec['name']!r} in the "
+                f"manifest but {name!r} in the restoring tree")
+        shape = tuple(getattr(leaf, "shape", np.shape(leaf)))
+        dtype = str(getattr(leaf, "dtype", np.asarray(leaf).dtype))
+        if tuple(rec["shape"]) != shape or rec["dtype"] != dtype:
+            raise CheckpointError(
+                f"{path}: leaf {name!r} is {rec['dtype']}"
+                f"{tuple(rec['shape'])} on disk but {dtype}{shape} in the "
+                f"restoring tree")
+        out.append(_read_leaf(path, rec, codec, verify))
     tree = jax.tree_util.tree_unflatten(treedef, out)
     if shardings is not None:
         tree = jax.tree.map(jax.device_put, tree, shardings)
     return tree, manifest["step"]
 
 
+def load_checkpoint_arrays(path: str, verify: bool = True
+                           ) -> tuple[dict[str, np.ndarray], dict]:
+    """Raw restore: every leaf as ``{manifest name: np.ndarray}`` plus the
+    manifest, with no target tree.  The elastic paths use this to re-shard a
+    checkpoint written under a *different* partitioning, where no
+    same-shaped ``tree_like`` exists."""
+    manifest = read_manifest(path)
+    codec = manifest.get("codec", "zstd")
+    arrs = {rec["name"]: _read_leaf(path, rec, codec, verify)
+            for rec in manifest["leaves"]}
+    return arrs, manifest
+
+
+def checkpoint_bytes(path: str) -> int:
+    """Total on-disk bytes of one checkpoint directory (blobs + manifest) —
+    the recovery path's 'bytes read' metric."""
+    return sum(os.path.getsize(os.path.join(path, f))
+               for f in os.listdir(path)
+               if os.path.isfile(os.path.join(path, f)))
+
+
 class AsyncCheckpointer:
     """Background writer: snapshot to host, write off-thread, never stall the
-    step loop; keeps the last ``keep`` checkpoints."""
+    step loop; keeps the last ``keep`` checkpoints.
 
-    def __init__(self, base: str, keep: int = 3):
-        _require_zstd()   # fail on the caller thread, not silently in the worker
+    A failure in the background writer is surfaced on the *next* ``save()``
+    or ``wait()`` call (the step loop must find out, not a daemon thread's
+    stderr).  ``wait()`` blocks until every queued checkpoint is durable —
+    the recovery path calls it before trusting ``latest_checkpoint``."""
+
+    def __init__(self, base: str, keep: int = 3, codec: str | None = None):
         self.base = base
         self.keep = keep
+        self.codec = codec or _default_codec()
+        _encode(b"", self.codec)   # fail on the caller thread, not the worker
         self.q: queue.Queue = queue.Queue(maxsize=2)
         self._err: Exception | None = None
+        self.bytes_written = 0
+        self.save_seconds = 0.0    # snapshot time billed to the step loop
         self.t = threading.Thread(target=self._worker, daemon=True)
         self.t.start()
 
@@ -128,9 +245,11 @@ class AsyncCheckpointer:
                     return
                 step, host_tree, meta = item
                 path = os.path.join(self.base, f"step_{step:08d}")
-                save_checkpoint(path, host_tree, step, meta)
+                save_checkpoint(path, host_tree, step, meta,
+                                codec=self.codec)
+                self.bytes_written += checkpoint_bytes(path)
                 self._gc()
-            except Exception as e:       # surfaced on next save()
+            except Exception as e:       # surfaced on next save()/wait()
                 self._err = e
             finally:
                 self.q.task_done()       # wait() joins on this
@@ -141,17 +260,23 @@ class AsyncCheckpointer:
         ckpts = sorted(d for d in os.listdir(self.base)
                        if d.startswith("step_"))
         for d in ckpts[:-self.keep]:
-            import shutil
             shutil.rmtree(os.path.join(self.base, d), ignore_errors=True)
 
-    def save(self, step: int, tree: Tree, meta: dict | None = None):
+    def _raise_pending(self):
         if self._err:
-            raise self._err
+            err, self._err = self._err, None
+            raise err
+
+    def save(self, step: int, tree: Tree, meta: dict | None = None):
+        self._raise_pending()
+        t0 = time.perf_counter()
         host = jax.tree.map(lambda x: np.asarray(x), tree)   # snapshot
+        self.save_seconds += time.perf_counter() - t0
         self.q.put((int(step), host, meta))
 
     def wait(self):
         self.q.join()
+        self._raise_pending()
 
     def close(self):
         self.q.put(None)
@@ -159,6 +284,10 @@ class AsyncCheckpointer:
 
 
 def latest_checkpoint(base: str) -> str | None:
+    """Newest complete checkpoint under ``base`` — a directory whose
+    ``manifest.json`` exists (the manifest is renamed into place *after*
+    every blob, so its presence certifies the write committed; a torn
+    directory is skipped, falling back to the previous step)."""
     if not os.path.isdir(base):
         return None
     ckpts = sorted(d for d in os.listdir(base) if d.startswith("step_")

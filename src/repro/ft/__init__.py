@@ -1,6 +1,16 @@
 from repro.ft.heartbeat import HeartbeatMonitor, WorkerState
-from repro.ft.elastic import ElasticPlan, replan_partitions
-from repro.ft.straggler import StragglerMitigator
+from repro.ft.elastic import (ElasticPlan, partition_owners,
+                              replan_partitions, resize_labels,
+                              reshard_vertex_tree)
+from repro.ft.inject import FaultInjector, FaultPlan
+from repro.ft.straggler import ShardFlag, StragglerMitigator, flag_slow_shards
+from repro.ft.driver import (FTRunResult, RecoveryEvent, checkpoint_key,
+                             elastic_restore, reshard_checkpoint_arrays,
+                             run_hybrid_ft)
 
 __all__ = ["HeartbeatMonitor", "WorkerState", "ElasticPlan",
-           "replan_partitions", "StragglerMitigator"]
+           "partition_owners", "replan_partitions", "resize_labels",
+           "reshard_vertex_tree", "FaultInjector", "FaultPlan",
+           "ShardFlag", "StragglerMitigator", "flag_slow_shards",
+           "FTRunResult", "RecoveryEvent", "checkpoint_key",
+           "elastic_restore", "reshard_checkpoint_arrays", "run_hybrid_ft"]

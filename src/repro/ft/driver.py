@@ -1,0 +1,320 @@
+"""Fault-tolerant hybrid driver: superstep checkpointing, failure recovery,
+elastic resume (paper §5.3).
+
+GraphHP's local phase runs minutes of pseudo-supersteps between
+synchronization points, which amplifies the cost of losing a worker
+mid-iteration — so the engine checkpoints ``EngineState`` at
+global-iteration boundaries (the only points where the whole computation is
+a pure function of vertex state: halo buffers are refilled by the next
+exchange, so nothing transient needs saving) through an
+:class:`~repro.checkpoint.AsyncCheckpointer` that snapshots to host and
+writes off-thread.  Each checkpoint is keyed to the graph content digest +
+program name + iteration; resume validates the key and restores bit-for-bit
+— a run interrupted after iteration k and resumed produces the *identical*
+final state and :class:`~repro.core.runtime.Counters` as the uninterrupted
+run.
+
+Failure recovery follows the paper's ping mechanism:
+:class:`~repro.ft.heartbeat.HeartbeatMonitor` tracks simulated workers on
+an injected logical clock (one tick per global iteration), a
+:class:`~repro.ft.inject.FaultInjector` scripts deterministic kills/delays,
+and a detected failure triggers ``reassign_failed`` + restore from the
+latest durable checkpoint, with the recovery cost (iterations lost, restore
+seconds, bytes read) surfaced on the run result.
+
+Elastic resume (k -> k' partitions, via ``repro.io.resize``) re-shards the
+checkpointed vertex state by global vertex id and re-announces every
+vertex's current out-value on the first exchange — safe exactly for
+monotone-semiring programs (min/max combiners: re-delivery can only
+re-confirm the fixed point), which the restore path enforces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import (AsyncCheckpointer, CheckpointError,
+                                   checkpoint_bytes, latest_checkpoint,
+                                   load_checkpoint, load_checkpoint_arrays,
+                                   read_manifest, _leaf_path_names)
+from repro.core.engine_hybrid import hybrid_iteration, init_hybrid
+from repro.core.runtime import EngineState, deliver, quiescent
+from repro.core.vertex_program import VertexProgram
+from repro.ft.elastic import partition_owners, reshard_vertex_tree
+from repro.ft.heartbeat import HeartbeatMonitor
+from repro.ft.inject import FaultInjector
+from repro.ft.straggler import ShardFlag, flag_slow_shards
+from repro.io.digest import graph_digest
+
+__all__ = ["run_hybrid_ft", "RecoveryEvent", "FTRunResult", "checkpoint_key",
+           "elastic_restore", "reshard_checkpoint_arrays"]
+
+_PSEUDO = "pseudo_supersteps"
+_HALO = ("halo_out", "halo_send")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryEvent:
+    """One failure -> reassign -> restore cycle, with its cost."""
+
+    tick: int                     # driver tick at detection
+    failed_workers: tuple[int, ...]
+    moved: dict[int, list]        # reassignment table (worker -> partitions)
+    restored_iteration: int
+    iterations_lost: int          # work rolled back to the checkpoint
+    restore_seconds: float
+    bytes_read: int               # the latest checkpoint only, never a rebuild
+
+
+@dataclasses.dataclass
+class FTRunResult:
+    es: EngineState
+    iterations: int
+    recoveries: list[RecoveryEvent]
+    straggler_flags: list[ShardFlag]
+    resumed_from: str | None      # checkpoint dir this run started from
+    epoch: int                    # monitor reassignment epoch at exit
+
+
+def checkpoint_key(graph, prog: VertexProgram) -> dict:
+    """What a checkpoint is keyed to: the graph content digest (the same
+    ``io.digest.graph_digest`` the ingest benchmark pins builder identity
+    with) + the program's class name."""
+    return {"graph_digest": graph_digest(graph),
+            "program": type(prog).__name__}
+
+
+def _validate_key(meta: dict, key: dict, path: str) -> None:
+    for k in ("graph_digest", "program"):
+        if meta.get(k) != key[k]:
+            raise CheckpointError(
+                f"{path}: checkpoint is keyed to {k}={meta.get(k)!r}, this "
+                f"run has {key[k]!r} — refusing to restore state from a "
+                f"different graph/program")
+
+
+def _monotone_only(prog: VertexProgram, what: str) -> None:
+    bad = [ch.name for ch in prog.channels if ch.combiner not in
+           ("min", "max")]
+    if bad:
+        raise CheckpointError(
+            f"{what} re-announces every vertex's current value on the next "
+            f"exchange, which only monotone (min/max-combiner) programs "
+            f"absorb; channels {bad} do not qualify")
+
+
+def reshard_checkpoint_arrays(arrs: dict[str, np.ndarray],
+                              old_part: np.ndarray, new_part: np.ndarray,
+                              pad_multiple: int = 8) -> dict[str, np.ndarray]:
+    """Re-shard one checkpoint's leaves (by manifest name) from the old to
+    the new partitioning: vertex-keyed ``(P, Vp, ...)`` families remap by
+    global vertex id, halo families drop (derived state — the next exchange
+    refills them), per-partition ``pseudo_supersteps`` reset (the counts
+    are meaningless across a re-partition), scalars carry over."""
+    P_n = int(np.asarray(new_part).max()) + 1 if len(new_part) else 1
+    keep = {k: v for k, v in arrs.items()
+            if not any(h in k for h in _HALO)}
+    out = reshard_vertex_tree(keep, old_part, new_part,
+                              pad_multiple=pad_multiple)
+    for name in list(out):
+        if _PSEUDO in name:
+            out[name] = np.zeros((P_n,), dtype=np.asarray(out[name]).dtype)
+    return out
+
+
+def elastic_restore(ckpt_path: str, graph, prog: VertexProgram, vdata: Any,
+                    old_part: np.ndarray, new_part: np.ndarray,
+                    pad_multiple: int = 8, use_ell: bool = True,
+                    collect_metrics: bool = True,
+                    expect_digest: str | None = None
+                    ) -> tuple[EngineState, int]:
+    """Restore a checkpoint written under ``old_part`` into an engine state
+    for ``graph`` built under ``new_part`` (k -> k' elastic resume).
+
+    Returns ``(state, iteration)``.  Monotone-semiring programs only (the
+    re-announce on the first exchange re-delivers current values, which
+    min/max combiners absorb and a sum combiner would double-count)."""
+    _monotone_only(prog, "elastic restore")
+    arrs, manifest = load_checkpoint_arrays(ckpt_path)
+    meta = manifest.get("meta", {})
+    if meta.get("program") not in (None, type(prog).__name__):
+        raise CheckpointError(
+            f"{ckpt_path}: checkpoint is for program {meta.get('program')!r}"
+            f", restoring {type(prog).__name__!r}")
+    if expect_digest is not None and meta.get("graph_digest") != expect_digest:
+        raise CheckpointError(
+            f"{ckpt_path}: graph_digest {meta.get('graph_digest')!r} != "
+            f"expected {expect_digest!r}")
+    if not meta.get("elastic"):
+        arrs = reshard_checkpoint_arrays(arrs, old_part, new_part,
+                                         pad_multiple=pad_multiple)
+    template = init_hybrid(graph, prog, vdata, use_ell=use_ell,
+                           collect_metrics=collect_metrics)
+    names = _leaf_path_names(template)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out = []
+    for name, leaf in zip(names, leaves):
+        if name not in arrs:          # halo families: refilled by exchange
+            out.append(leaf)
+            continue
+        a = arrs[name]
+        if tuple(a.shape) != tuple(leaf.shape) or str(a.dtype) != \
+                str(leaf.dtype):
+            raise CheckpointError(
+                f"{ckpt_path}: re-sharded leaf {name!r} is {a.dtype}"
+                f"{a.shape}, the new graph's state wants {leaf.dtype}"
+                f"{tuple(leaf.shape)} (pad_multiple mismatch?)")
+        out.append(jnp.asarray(a))
+    es = jax.tree_util.tree_unflatten(treedef, out)
+    # re-announce: every valid vertex re-sends its current out-value — via
+    # export_send for the next exchange (edges the new cut made remote), and
+    # by one immediate local delivery into pending (edges a shrink made
+    # local, whose consumers used to be fed by the old cut's exchange; the
+    # global apply overwrites `send` before the iteration's local delivery,
+    # so a flag alone would be lost — this mirrors ``init_hybrid``).
+    # Monotone combiners make the duplicate deliveries to old consumers
+    # no-ops.
+    es = dataclasses.replace(es, export_out=jax.tree.map(jnp.asarray, es.out),
+                             export_send=graph.vertex_mask,
+                             send=graph.vertex_mask)
+    es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
+                    collect_metrics=collect_metrics)
+    return es, int(manifest["step"])
+
+
+def run_hybrid_ft(
+    graph,
+    prog: VertexProgram,
+    vdata: Any = None,
+    *,
+    ckpt_dir: str | None = None,
+    checkpointer: AsyncCheckpointer | None = None,
+    checkpoint_every: int = 1,
+    keep: int = 3,
+    resume: bool = True,
+    step_fn: Callable | None = None,
+    es_shardings: Any = None,
+    max_iters: int = 100_000,
+    max_local_steps: int = 100_000,
+    use_ell: bool = True,
+    collect_metrics: bool = True,
+    n_workers: int = 1,
+    monitor: HeartbeatMonitor | None = None,
+    injector: FaultInjector | None = None,
+    tick_seconds: float = 1.0,
+    straggler_factor: float = 1.5,
+    balance: float | None = None,
+) -> FTRunResult:
+    """Run global iterations to quiescence with checkpointing + recovery.
+
+    ``step_fn`` is one jittable global iteration ``(graph, es) -> es``
+    (default: the host :func:`hybrid_iteration`; pass the result of
+    :func:`~repro.core.distributed.make_dist_hybrid_step` plus
+    ``es_shardings`` for the shard_map path — restores are ``device_put``
+    back onto the mesh through ``load_checkpoint(shardings=...)``).
+
+    Checkpoints land under ``ckpt_dir`` every ``checkpoint_every`` global
+    iterations, written off-thread (:class:`AsyncCheckpointer`), each keyed
+    to :func:`checkpoint_key`; ``resume=True`` restarts from the latest
+    complete checkpoint when one exists (exact resume: identical final
+    state and counters to the uninterrupted run).
+
+    Failure detection runs on an injected logical clock: each driver tick
+    advances it ``tick_seconds``, live workers heartbeat (all of them, or
+    the ones ``injector`` scripts), and a sweep past ``fail_after`` marks a
+    worker FAILED — the driver then reassigns its partitions to the
+    least-loaded healthy workers and rolls back to the latest checkpoint,
+    recording a :class:`RecoveryEvent`.  Deterministic by construction: no
+    wall-clock enters control flow.
+    """
+    if step_fn is None:
+        def step_fn(g, e):
+            return hybrid_iteration(g, prog, e, vdata,
+                                    max_local_steps=max_local_steps,
+                                    use_ell=use_ell,
+                                    collect_metrics=collect_metrics)
+    jstep = jax.jit(step_fn)
+
+    key = checkpoint_key(graph, prog)
+    template = init_hybrid(graph, prog, vdata, use_ell=use_ell,
+                           collect_metrics=collect_metrics)
+    if es_shardings is not None:
+        template = jax.device_put(template, es_shardings)
+
+    own_ckpt = checkpointer is None and ckpt_dir is not None
+    if own_ckpt:
+        checkpointer = AsyncCheckpointer(ckpt_dir, keep=keep)
+    base = ckpt_dir if ckpt_dir is not None else getattr(
+        checkpointer, "base", None)
+
+    def restore() -> tuple[EngineState, int, str | None, int]:
+        """(state, iteration, path, bytes_read) from the latest durable
+        checkpoint, or the initialization state when none exists."""
+        if checkpointer is not None:
+            checkpointer.wait()        # in-flight writes become durable
+        path = latest_checkpoint(base) if base else None
+        if path is None:
+            return template, 0, None, 0
+        _validate_key(read_manifest(path).get("meta", {}), key, path)
+        es, step = load_checkpoint(path, template, shardings=es_shardings)
+        return es, int(step), path, checkpoint_bytes(path)
+
+    resumed_from = None
+    if resume and base is not None:
+        es, it, resumed_from, _ = restore()
+    else:
+        es, it = template, 0
+
+    # --- simulated cluster: contiguous partition blocks per worker --------
+    P = graph.n_partitions
+    clock = [0.0]
+    if monitor is None:
+        monitor = HeartbeatMonitor(n_workers, suspect_after=1.5 * tick_seconds,
+                                   fail_after=2.5 * tick_seconds,
+                                   clock=lambda: clock[0])
+        for p, w in enumerate(partition_owners(P, n_workers)):
+            monitor.assign(int(w), p)
+    n_workers = len(monitor.workers)
+
+    recoveries: list[RecoveryEvent] = []
+    tick = 0
+    while it < max_iters and not bool(quiescent(prog, es)):
+        tick += 1
+        clock[0] += tick_seconds
+        beating = (injector.beating(tick) if injector is not None
+                   else range(n_workers))
+        for w in beating:
+            monitor.beat(w)
+        newly_failed = monitor.sweep()
+        if newly_failed:
+            moved = monitor.reassign_failed()
+            t0 = time.perf_counter()
+            es, rit, _, nbytes = restore()
+            recoveries.append(RecoveryEvent(
+                tick=tick, failed_workers=tuple(newly_failed), moved=moved,
+                restored_iteration=rit, iterations_lost=it - rit,
+                restore_seconds=time.perf_counter() - t0, bytes_read=nbytes))
+            it = rit
+            continue
+        es = jstep(graph, es)
+        it = int(es.counters.iterations)
+        if checkpointer is not None and it % checkpoint_every == 0:
+            checkpointer.save(it, es, meta={**key, "iteration": it})
+
+    if checkpointer is not None:
+        checkpointer.wait()
+        if own_ckpt:
+            checkpointer.close()
+
+    flags = flag_slow_shards(
+        np.asarray(jax.device_get(es.counters.pseudo_supersteps)),
+        balance=balance, factor=straggler_factor)
+    return FTRunResult(es=es, iterations=it, recoveries=recoveries,
+                       straggler_flags=flags, resumed_from=resumed_from,
+                       epoch=monitor.epoch)

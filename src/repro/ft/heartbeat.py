@@ -79,5 +79,9 @@ class HeartbeatMonitor:
                     tgt.assignments.append(item)
                     moved.setdefault(tgt.worker_id, []).append(item)
                 w.assignments = []
-                self.epoch += 1
+        if moved:
+            # one epoch per reassignment *event*: every worker adopting the
+            # new assignment table in the same sweep must agree on a single
+            # epoch id, however many workers failed at once
+            self.epoch += 1
         return moved

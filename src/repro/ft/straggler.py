@@ -75,3 +75,48 @@ class StragglerMitigator:
 def quorum_ready(delivered: int, total: int, quorum: float = 0.75) -> bool:
     """Training: global phase proceeds when >= quorum of pods delivered."""
     return delivered >= max(1, int(total * quorum))
+
+
+# ---------------------------------------------------------------------------
+# graph-engine stragglers: slow shards, from the paper's own counters
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardFlag:
+    """One flagged slow shard.  ``cause`` separates the two remedies: a
+    shard slow *because it is oversized* ('skew' — re-partition it, the
+    ladder's job) from one slow on balanced data ('straggler' — the node is
+    the problem, re-dispatch / reassign)."""
+
+    partition: int
+    pseudo_supersteps: int
+    ratio: float               # vs the median shard
+    cause: str                 # 'skew' | 'straggler'
+
+
+def flag_slow_shards(pseudo_supersteps, balance: float | None = None,
+                     factor: float = 1.5) -> list[ShardFlag]:
+    """Flag shards whose local phase runs long, from the per-partition
+    ``Counters.pseudo_supersteps`` the hybrid engine already keeps.
+
+    GraphHP's local phase iterates each partition to its own convergence,
+    so a partition's pseudo-superstep count *is* its work clock — a shard
+    running ``factor``x past the median is holding the next exchange
+    hostage.  ``balance`` (``PartitionReport.balance`` — max partition
+    size over the even share) classifies the flag: when the labeling
+    itself is skewed past the same factor the remedy is re-partitioning,
+    not failover, so the cause reads 'skew'."""
+    import numpy as np
+
+    counts = np.asarray(pseudo_supersteps)
+    if counts.ndim != 1 or not counts.size:
+        return []
+    med = float(np.median(counts))
+    floor = max(med, 1.0)
+    flags = []
+    for p in np.flatnonzero(counts > factor * floor):
+        cause = ("skew" if balance is not None and balance > factor
+                 else "straggler")
+        flags.append(ShardFlag(int(p), int(counts[p]),
+                               float(counts[p] / floor), cause))
+    return flags

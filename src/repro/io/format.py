@@ -274,17 +274,28 @@ class ShardWriter:
             f.write(data)
 
     def append(self, edges: np.ndarray, weights: np.ndarray | None,
-               part: np.ndarray) -> None:
+               part: np.ndarray,
+               positions: np.ndarray | None = None) -> None:
         """Spill one chunk: bucket rows by destination partition, keeping
-        original relative order (stable sort by bucket)."""
+        original relative order (stable sort by bucket).  ``positions``
+        overrides the derived original-edge-index column — for writers
+        (like ``repro.io.resize``) whose stream is *not* the original edge
+        list order but who know each row's original index."""
         pd = part[edges[:, 1]]
         order = np.argsort(pd, kind="stable")
         pd_s = pd[order]
         e_s = edges[order]
         w_s = None if weights is None else weights[order]
-        pos_s = (np.arange(self._gpos, self._gpos + len(edges),
-                           dtype=np.int64)[order]
-                 if self.positions else None)
+        if positions is not None:
+            if not self.positions:
+                raise GraphFormatError(
+                    f"{self.path}: explicit positions passed to a writer "
+                    f"created with positions=False")
+            pos_s = np.asarray(positions, dtype=np.int64)[order]
+        else:
+            pos_s = (np.arange(self._gpos, self._gpos + len(edges),
+                               dtype=np.int64)[order]
+                     if self.positions else None)
         check_id_range(e_s, self.dtype, self.path)
         bounds = np.searchsorted(pd_s, np.arange(self.P + 1))
         for p in np.unique(pd_s):

@@ -201,6 +201,78 @@ def test_distributed_new_semiring_apps_match_host():
     """)
 
 
+def _dist_ft_body(app: str) -> str:
+    """Kill-and-resume on the shard_map path: run the FT driver with the
+    distributed step + NamedShardings, interrupt after 3 iterations,
+    restart from the checkpoint — final state and every paper counter must
+    be bit-identical to the uninterrupted distributed run."""
+    return """
+    import tempfile
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.launch.mesh import set_mesh
+    from jax.sharding import NamedSharding
+    from repro.core import bfs_partition, build_partitioned_graph, \\
+        hash_partition
+    from repro.core.apps import SSSP, IncrementalPageRank
+    from repro.core.apps.pagerank import pagerank_edge_weights
+    from repro.core.distributed import make_dist_hybrid_step, _es_specs, \\
+        shard0_specs
+    from repro.core.engine_hybrid import init_hybrid
+    from repro.data.graphs import grid_graph, rmat_graph
+    from repro.ft import run_hybrid_ft
+
+    if %(sssp)s:
+        edges, w, n = grid_graph(6, 40, seed=3)
+        part = bfs_partition(edges, n, 8, seed=1)
+        prog, field = SSSP(source=0), 'dist'
+    else:
+        edges, n = rmat_graph(240, avg_degree=6, seed=7)
+        part = hash_partition(n, 8, seed=2)
+        w = pagerank_edge_weights(edges, n)
+        prog, field = IncrementalPageRank(tolerance=1e-4), 'rank'
+    graph = build_partitioned_graph(edges, n, part, weights=w,
+                                    edge_blocks=8)   # one block per device
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    axes = ('data', 'model')
+    step = make_dist_hybrid_step(prog, mesh, axes=axes)
+    es0 = init_hybrid(graph, prog, None)
+    gs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      shard0_specs(graph, axes))
+    ess = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       _es_specs(es0, axes))
+    graph_d = jax.device_put(graph, gs)
+    with set_mesh(mesh), tempfile.TemporaryDirectory() as d:
+        ref = run_hybrid_ft(graph_d, prog, step_fn=step, es_shardings=ess)
+        r1 = run_hybrid_ft(graph_d, prog, step_fn=step, es_shardings=ess,
+                           ckpt_dir=d, max_iters=3)
+        assert r1.iterations == 3 < ref.iterations
+        r2 = run_hybrid_ft(graph_d, prog, step_fn=step, es_shardings=ess,
+                           ckpt_dir=d)
+        assert r2.resumed_from is not None and \\
+            r2.resumed_from.endswith('step_00000003')
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(r2.es.state[field])),
+        np.asarray(jax.device_get(ref.es.state[field])))
+    for f in ('iterations', 'net_messages', 'net_local_messages',
+              'mem_messages'):
+        assert int(getattr(r2.es.counters, f)) == \\
+            int(getattr(ref.es.counters, f)), f
+    np.testing.assert_array_equal(
+        np.asarray(r2.es.counters.pseudo_supersteps),
+        np.asarray(ref.es.counters.pseudo_supersteps))
+    print('DIST FT %(app)s OK', ref.iterations)
+    """ % {"sssp": repr(app == "sssp"), "app": app}
+
+
+def test_distributed_ft_kill_resume_sssp():
+    run_sub(_dist_ft_body("sssp"))
+
+
+def test_distributed_ft_kill_resume_pagerank():
+    run_sub(_dist_ft_body("pagerank"))
+
+
 def test_lm_cell_runs_on_mesh():
     run_sub("""
     import numpy as np

@@ -1,0 +1,465 @@
+"""Fault tolerance end-to-end: iteration-boundary checkpointing with exact
+resume, deterministic fault injection driving the heartbeat -> reassign ->
+restore recovery loop, elastic k -> k' resize of graphs and checkpoints,
+and straggler flagging from the engine's own pseudo-superstep counters.
+
+Everything runs on the host engine path with an injected logical clock —
+no sleeps, no wall-clock in control flow; the distributed (fake 8-device)
+twin lives in test_distributed.py.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (AsyncCheckpointer, CheckpointError,
+                              latest_checkpoint, load_checkpoint,
+                              load_checkpoint_arrays, save_checkpoint)
+from repro.core import bfs_partition, build_partitioned_graph, run_hybrid
+from repro.core.apps import SSSP, IncrementalPageRank
+from repro.core.engine_hybrid import hybrid_iteration
+from repro.core.runtime import quiescent
+from repro.data.graphs import grid_graph, rmat_graph
+from repro.core import hash_partition
+from repro.core.apps.pagerank import pagerank_edge_weights
+from repro.ft import (FaultInjector, FaultPlan, HeartbeatMonitor,
+                      WorkerState, elastic_restore, flag_slow_shards,
+                      partition_owners, replan_partitions,
+                      reshard_vertex_tree, resize_labels, run_hybrid_ft)
+from repro.io.digest import graph_digest
+from repro.io.format import load_graph, save_graph
+from repro.io.pipeline import build_from_sharded
+from repro.io.resize import resize_ghp, resize_checkpoint
+
+
+@pytest.fixture(scope="module")
+def road():
+    edges, w, n = grid_graph(6, 60, seed=3)
+    part = bfs_partition(edges, n, 6, seed=1)
+    return build_partitioned_graph(edges, n, part, weights=w), edges, w, n, \
+        part
+
+
+@pytest.fixture(scope="module")
+def web():
+    edges, n = rmat_graph(300, avg_degree=6, seed=7)
+    part = hash_partition(n, 6, seed=2)
+    w = pagerank_edge_weights(edges, n)
+    return build_partitioned_graph(edges, n, part, weights=w)
+
+
+def unpack(graph, es, field):
+    gid = np.asarray(graph.vertex_gid).ravel()
+    val = np.asarray(es.state[field]).reshape(gid.shape[0], -1).squeeze(-1)
+    mask = gid >= 0
+    out = np.zeros(graph.n_vertices, dtype=val.dtype)
+    out[gid[mask]] = val[mask]
+    return out
+
+
+def assert_counters_equal(a, b):
+    for f in ("iterations", "net_messages", "net_local_messages",
+              "mem_messages"):
+        assert int(getattr(a.counters, f)) == int(getattr(b.counters, f)), f
+    np.testing.assert_array_equal(np.asarray(a.counters.pseudo_supersteps),
+                                  np.asarray(b.counters.pseudo_supersteps))
+
+
+def run_to_fixed_point(graph, prog, es):
+    step = jax.jit(lambda e: hybrid_iteration(graph, prog, e, None))
+    while not bool(quiescent(prog, es)):
+        es = step(es)
+    return es
+
+
+# ---------------------------------------------------------------------------
+# exact resume
+# ---------------------------------------------------------------------------
+
+def test_ft_driver_matches_run_hybrid(road):
+    graph = road[0]
+    res = run_hybrid_ft(graph, SSSP(source=0))
+    es_ref, it_ref = run_hybrid(graph, SSSP(source=0), device_loop=False)
+    assert res.iterations == it_ref
+    np.testing.assert_array_equal(np.asarray(res.es.state["dist"]),
+                                  np.asarray(es_ref.state["dist"]))
+    assert_counters_equal(res.es, es_ref)
+    assert res.recoveries == [] and res.resumed_from is None
+
+
+@pytest.mark.parametrize("make_prog,field,kill_after", [
+    (lambda: SSSP(source=0), "dist", 2),
+    (lambda: IncrementalPageRank(tolerance=1e-4), "rank", 3),
+])
+def test_kill_and_resume_bit_identical(tmp_path, road, web, make_prog,
+                                       field, kill_after):
+    """Interrupt after iteration k, restart: final state AND every paper
+    counter bit-identical to the uninterrupted run — for a monotone
+    min-plus program and for sum-combiner PageRank."""
+    graph = road[0] if field == "dist" else web
+    ref = run_hybrid_ft(graph, make_prog())
+    d = str(tmp_path / "ck")
+    r1 = run_hybrid_ft(graph, make_prog(), ckpt_dir=d, max_iters=kill_after)
+    assert r1.iterations == kill_after < ref.iterations
+    r2 = run_hybrid_ft(graph, make_prog(), ckpt_dir=d)
+    assert r2.resumed_from is not None and \
+        r2.resumed_from.endswith(f"step_{kill_after:08d}")
+    np.testing.assert_array_equal(np.asarray(r2.es.state[field]),
+                                  np.asarray(ref.es.state[field]))
+    assert_counters_equal(r2.es, ref.es)
+
+
+def test_resume_refuses_other_graph_or_program(tmp_path, road, web):
+    d = str(tmp_path / "ck")
+    run_hybrid_ft(road[0], SSSP(source=0), ckpt_dir=d, max_iters=2)
+    with pytest.raises(CheckpointError, match="program"):
+        run_hybrid_ft(road[0], IncrementalPageRank(tolerance=1e-4),
+                      ckpt_dir=d)
+    with pytest.raises(CheckpointError, match="graph_digest"):
+        run_hybrid_ft(web, SSSP(source=0), ckpt_dir=d)
+
+
+def test_checkpoint_every_spaces_snapshots(tmp_path, road):
+    d = str(tmp_path / "ck")
+    run_hybrid_ft(road[0], SSSP(source=0), ckpt_dir=d, max_iters=5,
+                  checkpoint_every=2, keep=10)
+    steps = sorted(os.listdir(d))
+    assert steps == ["step_00000002", "step_00000004"]
+
+
+# ---------------------------------------------------------------------------
+# fault injection -> recovery loop
+# ---------------------------------------------------------------------------
+
+def test_injected_kill_triggers_recovery(tmp_path, road):
+    graph = road[0]
+    ref = run_hybrid_ft(graph, SSSP(source=0))
+    inj = FaultInjector(FaultPlan.kill_at(3, worker=1), n_workers=4)
+    res = run_hybrid_ft(graph, SSSP(source=0), ckpt_dir=str(tmp_path / "c"),
+                        n_workers=4, injector=inj)
+    assert len(res.recoveries) == 1
+    ev = res.recoveries[0]
+    assert ev.failed_workers == (1,)
+    assert ev.bytes_read > 0 and ev.restore_seconds > 0
+    assert ev.iterations_lost == 0            # checkpoint_every=1
+    assert ev.moved                           # partitions were reassigned
+    assert res.epoch == 1                     # one reassignment event
+    np.testing.assert_array_equal(np.asarray(res.es.state["dist"]),
+                                  np.asarray(ref.es.state["dist"]))
+    assert_counters_equal(res.es, ref.es)
+
+
+def test_injected_kill_is_deterministic(tmp_path, road):
+    graph = road[0]
+    runs = []
+    for i in range(2):
+        inj = FaultInjector(FaultPlan.kill_at(4, worker=0), n_workers=3)
+        runs.append(run_hybrid_ft(graph, SSSP(source=0),
+                                  ckpt_dir=str(tmp_path / f"c{i}"),
+                                  n_workers=3, injector=inj))
+    a, b = runs
+    assert [e.tick for e in a.recoveries] == [e.tick for e in b.recoveries]
+    assert [e.restored_iteration for e in a.recoveries] == \
+        [e.restored_iteration for e in b.recoveries]
+    assert a.iterations == b.iterations
+    assert_counters_equal(a.es, b.es)
+
+
+def test_recovery_iterations_lost_with_sparse_checkpoints(tmp_path, road):
+    """checkpoint_every=3 + a kill detected past iteration 4 rolls back to
+    the iteration-3 snapshot: the recovery event owns the lost work."""
+    graph = road[0]
+    inj = FaultInjector(FaultPlan.kill_at(2, worker=0), n_workers=2)
+    res = run_hybrid_ft(graph, SSSP(source=0), ckpt_dir=str(tmp_path / "c"),
+                        checkpoint_every=3, n_workers=2, injector=inj)
+    ev = res.recoveries[0]
+    assert ev.restored_iteration % 3 == 0
+    assert ev.iterations_lost == ev.tick - 1 - ev.restored_iteration
+    ref = run_hybrid_ft(graph, SSSP(source=0))
+    np.testing.assert_array_equal(np.asarray(res.es.state["dist"]),
+                                  np.asarray(ref.es.state["dist"]))
+
+
+def test_delay_recovers_without_failover(road):
+    """A worker silent for one tick turns SUSPECT then heals on its next
+    beat — no reassignment, no restore."""
+    graph = road[0]
+    inj = FaultInjector(FaultPlan(delay={2: (1, 1)}), n_workers=3)
+    res = run_hybrid_ft(graph, SSSP(source=0), n_workers=3, injector=inj)
+    assert res.recoveries == [] and res.epoch == 0
+
+
+def test_injector_requires_monotonic_ticks():
+    inj = FaultInjector(FaultPlan(), n_workers=2)
+    assert list(inj.beating(1)) == [0, 1]
+    with pytest.raises(ValueError):
+        inj.beating(1)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat state machine (injected clock)
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_suspect_heals_on_beat():
+    t = [0.0]
+    mon = HeartbeatMonitor(2, suspect_after=1.0, fail_after=3.0,
+                           clock=lambda: t[0])
+    t[0] = 2.0
+    mon.beat(0)
+    assert mon.sweep() == []
+    assert mon.workers[1].state is WorkerState.SUSPECT
+    mon.beat(1)
+    assert mon.workers[1].state is WorkerState.HEALTHY
+    t[0] = 2.5
+    assert mon.sweep() == []
+    assert mon.workers[1].state is WorkerState.HEALTHY
+
+
+def test_heartbeat_epoch_bumps_once_per_event():
+    t = [0.0]
+    mon = HeartbeatMonitor(4, suspect_after=1.0, fail_after=2.0,
+                           clock=lambda: t[0])
+    for p in range(8):
+        mon.assign(p % 4, p)
+    t[0] = 3.0
+    mon.beat(3)                       # workers 0,1,2 all fail together
+    assert sorted(mon.sweep()) == [0, 1, 2]
+    moved = mon.reassign_failed()
+    assert mon.epoch == 1             # ONE event, not one per worker
+    assert sorted(i for items in moved.values() for i in items) == \
+        [0, 1, 2, 4, 5, 6]
+    assert mon.reassign_failed() == {}
+    assert mon.epoch == 1             # nothing moved -> no bump
+
+
+def test_heartbeat_no_healthy_workers_raises():
+    t = [0.0]
+    mon = HeartbeatMonitor(2, suspect_after=1.0, fail_after=2.0,
+                           clock=lambda: t[0])
+    mon.assign(0, "a")
+    t[0] = 5.0
+    assert sorted(mon.sweep()) == [0, 1]
+    with pytest.raises(RuntimeError, match="no healthy workers"):
+        mon.reassign_failed()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint layer (raw codec — runs without zstandard)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_raw_codec_roundtrip(tmp_path):
+    state = {"a": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones((5,), bool)}
+    save_checkpoint(str(tmp_path / "c"), state, step=4, codec="raw")
+    restored, step = load_checkpoint(str(tmp_path / "c"), state)
+    assert step == 4
+    assert all(jax.tree.leaves(jax.tree.map(
+        lambda x, y: bool(jnp.all(x == y)), state, restored)))
+    arrs, manifest = load_checkpoint_arrays(str(tmp_path / "c"))
+    assert manifest["codec"] == "raw"
+    assert set(arrs) == {"a", "b"}
+
+
+def test_load_checkpoint_validates_tree(tmp_path):
+    state = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    save_checkpoint(str(tmp_path / "c"), state, step=0, codec="raw")
+    with pytest.raises(CheckpointError, match="leaves"):
+        load_checkpoint(str(tmp_path / "c"), {"w": jnp.ones((4, 4))})
+    with pytest.raises(CheckpointError, match="manifest"):
+        load_checkpoint(str(tmp_path / "c"),
+                        {"w": jnp.ones((4, 4)), "x": jnp.zeros((4,))})
+    with pytest.raises(CheckpointError, match="on disk"):
+        load_checkpoint(str(tmp_path / "c"),
+                        {"w": jnp.ones((4, 4)), "b": jnp.zeros((5,))})
+    with pytest.raises(CheckpointError, match="on disk"):
+        load_checkpoint(str(tmp_path / "c"),
+                        {"w": jnp.ones((4, 4)),
+                         "b": jnp.zeros((4,), jnp.int32)})
+
+
+def test_latest_checkpoint_skips_torn_directory(tmp_path):
+    base = tmp_path / "ck"
+    for s in (1, 2):
+        save_checkpoint(str(base / f"step_{s:08d}"), {"x": jnp.ones(3)},
+                        step=s, codec="raw")
+    (base / "step_00000003").mkdir()          # torn: no manifest.json
+    (base / "step_00000003" / "leaf_00000.npy").write_bytes(b"junk")
+    got = latest_checkpoint(str(base))
+    assert got is not None and got.endswith("step_00000002")
+
+
+def test_async_checkpointer_surfaces_worker_error(tmp_path):
+    target = tmp_path / "ck"
+    target.write_text("not a directory")      # worker's makedirs will fail
+    ck = AsyncCheckpointer(str(target), codec="raw")
+    ck.save(1, {"x": jnp.ones(3)})
+    with pytest.raises(OSError):
+        ck.wait()
+    ck.close()
+
+
+def test_async_checkpointer_gc_and_flush(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path / "ck"), keep=2, codec="raw")
+    for s in range(1, 6):
+        ck.save(s, {"x": jnp.full((4,), float(s))})
+    ck.wait()                                 # every queued write durable
+    assert ck.bytes_written > 0
+    dirs = sorted(os.listdir(tmp_path / "ck"))
+    assert dirs == ["step_00000004", "step_00000005"]
+    arrs, _ = load_checkpoint_arrays(str(tmp_path / "ck" / dirs[-1]))
+    np.testing.assert_array_equal(arrs["x"], np.full((4,), 5.0))
+    ck.close()
+
+
+# ---------------------------------------------------------------------------
+# elastic replan / relabel / reshard
+# ---------------------------------------------------------------------------
+
+def test_replan_grow_shrink_noop():
+    grow = replan_partitions(256, 6, 8)
+    shrink = replan_partitions(256, 8, 6)
+    noop = replan_partitions(256, 8, 8)
+    for plan, w in ((grow, 8), (shrink, 6)):
+        assert plan.owner.max() == w - 1
+        counts = np.bincount(plan.owner)
+        assert counts.max() - counts.min() <= 1
+    assert noop.moved == 0
+    # moved counts actual ownership changes, symmetric across directions
+    assert grow.moved == int(np.sum(partition_owners(256, 6)
+                                    != partition_owners(256, 8)))
+    assert shrink.moved == grow.moved > 0
+
+
+def test_resize_labels_grow_splits_shrink_merges():
+    part = np.repeat(np.arange(4), 10).astype(np.int32)
+    up = resize_labels(part, 8)
+    assert sorted(np.unique(up)) == list(range(8))
+    # grow refines: each new partition maps into exactly one old one
+    assert len(np.unique(np.stack([part, up], 1), axis=0)) == 8
+    down = resize_labels(part, 2)
+    np.testing.assert_array_equal(down, part * 2 // 4)
+    np.testing.assert_array_equal(resize_labels(part, 4), part)
+    with pytest.raises(ValueError):
+        resize_labels(part, 0)
+
+
+def test_reshard_vertex_tree_roundtrip():
+    rng = np.random.RandomState(0)
+    n = 100
+    old = np.repeat(np.arange(4), 25).astype(np.int32)
+    new = resize_labels(old, 7)
+    from repro.core.graph import _vertex_slots
+    _, _, slot_o, Vp_o = _vertex_slots(old, n, 8)
+    val = np.full((4, Vp_o), -1.0, np.float64)
+    val[old, slot_o] = rng.rand(n)            # per-vertex payload
+    leaves = {"v": val, "scalar": np.float64(3.0),
+              "other": np.ones((4, 3))}       # wrong trailing dim: untouched
+    out = reshard_vertex_tree(leaves, old, new, pad_multiple=8)
+    _, _, slot_n, Vp_n = _vertex_slots(new, n, 8)
+    np.testing.assert_array_equal(out["v"][new, slot_n], val[old, slot_o])
+    assert out["scalar"] == 3.0
+    np.testing.assert_array_equal(out["other"], leaves["other"])
+    # round-trip back to the old layout restores values exactly
+    back = reshard_vertex_tree({"v": out["v"]}, new, old, pad_multiple=8)
+    np.testing.assert_array_equal(back["v"][old, slot_o], val[old, slot_o])
+
+
+# ---------------------------------------------------------------------------
+# .ghp resize + elastic resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kp", [12, 3])
+def test_resize_ghp_builds_bit_identical(tmp_path, road, kp):
+    _, edges, w, n, part = road
+    src = str(tmp_path / "g.ghp")
+    save_graph(src, edges, n, part, weights=w, positions=True)
+    sg = resize_ghp(src, str(tmp_path / "g2.ghp"), kp)
+    newpart = resize_labels(part, kp)
+    np.testing.assert_array_equal(sg.part, newpart)
+    assert graph_digest(build_from_sharded(sg)) == \
+        graph_digest(build_partitioned_graph(edges, n, newpart, weights=w))
+
+
+@pytest.mark.parametrize("kp", [9, 4])
+def test_elastic_resume_reaches_same_fixed_point(tmp_path, road, kp):
+    """Checkpoint at k=6, resize to k', resume: the min-plus fixed point is
+    bit-identical to the uninterrupted k=6 run — grow AND shrink."""
+    graph, edges, w, n, part = road
+    ref = run_hybrid_ft(graph, SSSP(source=0))
+    d = str(tmp_path / "ck")
+    run_hybrid_ft(graph, SSSP(source=0), ckpt_dir=d, max_iters=3)
+    newpart = resize_labels(part, kp)
+    g2 = build_partitioned_graph(edges, n, newpart, weights=w)
+    es, it = elastic_restore(os.path.join(d, "step_00000003"), g2,
+                             SSSP(source=0), None, part, newpart)
+    assert it == 3
+    es = run_to_fixed_point(g2, SSSP(source=0), es)
+    np.testing.assert_array_equal(unpack(g2, es, "dist"),
+                                  unpack(graph, ref.es, "dist"))
+
+
+def test_elastic_resume_rejects_sum_channels(tmp_path, road):
+    graph, edges, w, n, part = road
+    d = str(tmp_path / "ck")
+    run_hybrid_ft(graph, SSSP(source=0), ckpt_dir=d, max_iters=2)
+    newpart = resize_labels(part, 4)
+    g2 = build_partitioned_graph(edges, n, newpart, weights=w)
+    with pytest.raises(CheckpointError, match="monotone"):
+        elastic_restore(os.path.join(d, "step_00000002"), g2,
+                        IncrementalPageRank(tolerance=1e-4), None, part,
+                        newpart)
+
+
+def test_resize_cli_reshards_and_rekeys_checkpoint(tmp_path, road):
+    """The full ``python -m repro.io.resize`` flow: resize the .ghp,
+    re-shard the newest checkpoint, re-key it to the rebuilt graph's
+    digest, resume elastically to the identical fixed point."""
+    from repro.io.resize import main as resize_main
+    graph, edges, w, n, part = road
+    src, dst = str(tmp_path / "g.ghp"), str(tmp_path / "g12.ghp")
+    save_graph(src, edges, n, part, weights=w, positions=True)
+    ckd, ck2 = str(tmp_path / "ck"), str(tmp_path / "ck12")
+    run_hybrid_ft(graph, SSSP(source=0), ckpt_dir=ckd, max_iters=3)
+    assert resize_main([src, dst, "-k", "12", "--checkpoint", ckd,
+                        "--checkpoint-out", ck2]) == 0
+    g12 = build_from_sharded(load_graph(dst))
+    es, it = elastic_restore(os.path.join(ck2, "step_00000003"), g12,
+                             SSSP(source=0), None, part,
+                             load_graph(dst).part,
+                             expect_digest=graph_digest(g12))
+    assert it == 3
+    es = run_to_fixed_point(g12, SSSP(source=0), es)
+    ref = run_hybrid_ft(graph, SSSP(source=0))
+    np.testing.assert_array_equal(unpack(g12, es, "dist"),
+                                  unpack(graph, ref.es, "dist"))
+    # a second reshard of an already-elastic checkpoint is refused
+    with pytest.raises(CheckpointError, match="already elastic"):
+        resize_checkpoint(ck2, str(tmp_path / "ck3"), part,
+                          load_graph(dst).part, "x")
+
+
+# ---------------------------------------------------------------------------
+# stragglers
+# ---------------------------------------------------------------------------
+
+def test_flag_slow_shards():
+    counts = np.array([4, 5, 4, 16, 5, 4])
+    flags = flag_slow_shards(counts, factor=1.5)
+    assert [f.partition for f in flags] == [3]
+    assert flags[0].cause == "straggler" and flags[0].ratio > 3
+    skew = flag_slow_shards(counts, balance=2.0, factor=1.5)
+    assert skew[0].cause == "skew"
+    assert flag_slow_shards(np.array([3, 3, 3])) == []
+    assert flag_slow_shards(np.zeros(0)) == []
+
+
+def test_driver_surfaces_straggler_flags(road):
+    graph = road[0]
+    res = run_hybrid_ft(graph, SSSP(source=0), straggler_factor=0.01)
+    # an absurdly low factor flags every above-median shard — the wiring
+    # from Counters.pseudo_supersteps to the run result is what's pinned
+    assert res.straggler_flags
+    assert all(f.pseudo_supersteps > 0 for f in res.straggler_flags)
