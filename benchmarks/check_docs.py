@@ -1,0 +1,103 @@
+"""Docs reference checker: every file and ``path.py:symbol`` pointer in
+``docs/*.md`` and ``README.md`` must resolve against the tree.
+
+Docs rot by pointing at code that moved; this makes the pointers part of
+CI.  Two kinds of references are extracted:
+
+* ``path.py:symbol`` — the file must exist and its module AST must define
+  ``symbol`` at top level (function, class, or assignment — so table
+  constants like ``SEMIRINGS`` count).
+* bare paths (``src/.../x.py``, ``benchmarks/x.json``, ``tests/x.py``,
+  ``docs/x.md``, and ``dir/`` directory pointers) — must exist.
+
+    python benchmarks/check_docs.py
+
+Exits non-zero listing every dangling reference.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f)
+    for f in (os.listdir(os.path.join(REPO_ROOT, "docs"))
+              if os.path.isdir(os.path.join(REPO_ROOT, "docs")) else [])
+    if f.endswith(".md"))
+
+TOPDIRS = r"(?:src|benchmarks|tests|examples|docs)"
+SYMBOL_REF = re.compile(rf"({TOPDIRS}/[\w/.-]+\.py):([A-Za-z_]\w*)")
+FILE_REF = re.compile(rf"(?<![\w/.-])({TOPDIRS}/[\w/.-]+\.(?:py|md|json))")
+DIR_REF = re.compile(rf"(?<![\w/.-])({TOPDIRS}/(?:[\w.-]+/)*)(?![\w.-])")
+
+
+def module_symbols(path: str) -> set[str]:
+    """Top-level names a module defines: def/class/assign targets."""
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            names.add(node.target.id)
+    return names
+
+
+def check_doc(doc: str) -> list[str]:
+    with open(os.path.join(REPO_ROOT, doc)) as f:
+        text = f.read()
+    failures = []
+    cache: dict[str, set[str]] = {}
+    for path, symbol in SYMBOL_REF.findall(text):
+        full = os.path.join(REPO_ROOT, path)
+        if not os.path.isfile(full):
+            failures.append(f"{doc}: {path}:{symbol} — file missing")
+            continue
+        if path not in cache:
+            cache[path] = module_symbols(full)
+        if symbol not in cache[path]:
+            failures.append(f"{doc}: {path}:{symbol} — symbol not defined "
+                            f"at module top level")
+    for path in FILE_REF.findall(text):
+        if not os.path.isfile(os.path.join(REPO_ROOT, path)):
+            failures.append(f"{doc}: {path} — file missing")
+    for path in DIR_REF.findall(text):
+        if not os.path.isdir(os.path.join(REPO_ROOT, path)):
+            failures.append(f"{doc}: {path} — directory missing")
+    return failures
+
+
+def main() -> int:
+    failures: list[str] = []
+    n_refs = 0
+    for doc in DOC_FILES:
+        with open(os.path.join(REPO_ROOT, doc)) as f:
+            text = f.read()
+        n_refs += (len(SYMBOL_REF.findall(text))
+                   + len(FILE_REF.findall(text))
+                   + len(DIR_REF.findall(text)))
+        failures += check_doc(doc)
+    print(f"checked {n_refs} references across {len(DOC_FILES)} docs")
+    if failures:
+        print("dangling doc references:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("all doc references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

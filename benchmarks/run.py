@@ -23,7 +23,7 @@ def main() -> None:
     ap.add_argument("--table", default=None,
                     help="run a single table: sssp|pagerank|bm|giraphpp|"
                          "kernels|local_phase|dist_phase|partition|ingest|"
-                         "ft|roofline")
+                         "ft|serve|roofline")
     args = ap.parse_args()
 
     if args.table == "dist_phase":
@@ -85,6 +85,11 @@ def main() -> None:
         # 10^6-edge overhead workload, so CI runs it full)
         from benchmarks import ft_bench
         rows += ft_bench.csv_rows(ft_bench.bench_ft(fast=args.fast))
+    if args.table == "serve":
+        # explicit-only (K-lane vs sequential serving A/B; --fast drops
+        # the gated 10^6-edge workload, so CI runs it full)
+        from benchmarks import serve_bench
+        rows += serve_bench.csv_rows(serve_bench.bench_serve(fast=args.fast))
     if want("roofline"):
         rows += roofline_rows()
 

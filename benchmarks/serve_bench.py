@@ -1,0 +1,158 @@
+"""Serving-layer benchmark: K-lane micro-batching vs sequential dispatch.
+
+N SSSP queries are served through :class:`repro.serve.ServeEngine` at each
+micro-batch width K in {1, 4, 16, 64}: the engine pads each batch to
+exactly K lanes and answers it as ONE K-lane run of the hybrid engine, so
+the A/B is K-lane dispatch vs K sequential single-lane dispatches of the
+same compiled program (K=1 row).  Per query we record service latency
+(every query in a batch completes when its batch completes) and derive
+throughput; ``parity_bitexact`` checks that every width returns
+bit-identical per-query results.
+
+Sized like ``ft_bench``: the gated workload is an R-MAT graph at 10^6
+edges; ``--fast`` swaps in 10^5 (dropping the gated workload, so CI runs
+it full).  Also like ``ft_bench`` at this scale, the engine runs with
+``use_ell=False``: on CI hosts the Pallas kernels execute in interpret
+mode, where compile time at 10^6 edges would swamp the measurement — the
+micro-batching margin being measured (shared traversal + per-dispatch
+overhead amortized over lanes) is the same on either delivery path.
+
+Writes ``BENCH_serve.json`` (gated via benchmarks/gates.json):
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_serve.json")
+
+N_QUERIES = 16
+WIDTHS = (1, 4, 16, 64)
+SIZES = {"rmat_1e6": 125_000, "rmat_1e5": 12_500}
+AVG_DEGREE = 8
+
+
+def _graph(n_vertices: int):
+    from repro.core.graph import build_partitioned_graph
+    from repro.data.graphs import rmat_graph
+
+    edges, n = rmat_graph(n_vertices, avg_degree=AVG_DEGREE, seed=0)
+    w = (np.abs(np.sin(np.arange(len(edges)))) * 0.9 + 0.05).astype(
+        np.float32)
+    return build_partitioned_graph(edges, n, "hash", weights=w,
+                                   n_partitions=8), len(edges)
+
+
+def _serve_at_width(graph, k: int, sources) -> tuple[dict, list]:
+    """Serve the query set with every batch padded to exactly k lanes.
+
+    Returns (metrics, per-query results).  One warmup dispatch first, so
+    the numbers are the steady-state serving cost (compile time is
+    reported separately, not folded into qps).
+    """
+    import jax
+    from repro.serve import ServeEngine
+
+    eng = ServeEngine(graph, lane_widths=(k,), use_ell=False)
+    t0 = time.perf_counter()
+    eng.submit("sssp", int(sources[0]))
+    eng.run()
+    compile_s = time.perf_counter() - t0
+
+    lat, results, wall = [], [], 0.0
+    for i in range(0, len(sources), k):
+        chunk = sources[i:i + k]
+        qs = [eng.submit("sssp", int(s)) for s in chunk]
+        t0 = time.perf_counter()
+        done = eng.run()
+        jax.block_until_ready(done[0].result)
+        dt = time.perf_counter() - t0
+        wall += dt
+        lat += [dt] * len(qs)
+        results += [q.result for q in done]
+    lat = np.asarray(lat)
+    return {
+        "dispatches": int(np.ceil(len(sources) / k)),
+        "wall_s": round(wall, 4),
+        "qps": round(len(sources) / wall, 4),
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 1),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 1),
+        "compile_s": round(compile_s, 2),
+    }, results
+
+
+def bench_serve(fast: bool = False, out_path: str = DEFAULT_OUT) -> dict:
+    name = "rmat_1e5" if fast else "rmat_1e6"
+    graph, n_edges = _graph(SIZES[name])
+    rng = np.random.RandomState(7)
+    sources = rng.choice(SIZES[name], size=N_QUERIES, replace=False)
+
+    widths, all_results = {}, {}
+    for k in WIDTHS:
+        widths[str(k)], all_results[k] = _serve_at_width(graph, k, sources)
+
+    # bit-exact parity: every width returns the single-dispatch answers
+    base = all_results[1]
+    parity = all(np.array_equal(base[i], all_results[k][i])
+                 for k in WIDTHS[1:] for i in range(N_QUERIES))
+
+    seq_qps = widths["1"]["qps"]
+    rec = {
+        "graph": f"V={SIZES[name]} E={n_edges} k={AVG_DEGREE}",
+        "n_edges": n_edges,
+        "n_queries": N_QUERIES,
+        "widths": widths,
+        "parity_bitexact": int(parity),
+    }
+    for k in WIDTHS[1:]:
+        rec[f"speedup_k{k}_vs_seq"] = round(widths[str(k)]["qps"] / seq_qps,
+                                            3)
+    import jax
+    out = {
+        "meta": {"backend": jax.default_backend(), "use_ell": False,
+                 "program": "sssp", "fast": fast},
+        "workloads": {name: rec},
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    return out
+
+
+def csv_rows(out: dict) -> list[str]:
+    rows = []
+    for wl, rec in out["workloads"].items():
+        for k, m in rec["widths"].items():
+            rows.append(
+                f"serve/{wl}/K={k},{1e6 / m['qps']:.0f},"
+                f"qps={m['qps']};p50_ms={m['p50_ms']};p99_ms={m['p99_ms']};"
+                f"dispatches={m['dispatches']}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="10^5-edge graph (drops the gated 10^6 workload)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    out = bench_serve(fast=args.fast, out_path=args.out)
+    print("name,us_per_call,derived")
+    for r in csv_rows(out):
+        print(r)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,9 @@ from repro.core.apps.wcc import WCC
 from repro.core.apps.bipartite_matching import BipartiteMatching
 from repro.core.apps.widest_path import WidestPath
 from repro.core.apps.random_walk import RandomWalk
+from repro.core.apps.multi import (MultiSourceMonotone, PersonalizedPageRank,
+                                   reachable)
 
 __all__ = ["SSSP", "IncrementalPageRank", "WCC", "BipartiteMatching",
-           "WidestPath", "RandomWalk"]
+           "WidestPath", "RandomWalk", "MultiSourceMonotone",
+           "PersonalizedPageRank", "reachable"]

@@ -1,0 +1,200 @@
+"""K-lane multi-query programs: one engine run answers K independent queries.
+
+GraphHP amortizes synchronization across pseudo-supersteps *within* a
+partition; these programs amortize graph traversal across *queries*.  Vertex
+state carries a trailing lane axis of width L (``Channel(lanes=L)``), every
+message is an (..., L) stack, and delivery rides the semiring SpMM kernels —
+one Pallas dispatch per degree bin answers all L sources.
+
+Two families:
+
+  * :class:`MultiSourceMonotone` — the monotone relax/adopt family over any
+    ``MONOTONE_SEMIRINGS`` entry: multi-source SSSP and landmark distance
+    tables (min_add), batched reachability (min_add; a vertex is reachable
+    from lane j iff its lane-j distance is finite — see :func:`reachable`),
+    K-lane widest/bottleneck paths (max_min), odds/log-likelihood walks
+    (min_mul / max_add).
+  * :class:`PersonalizedPageRank` — per-seed personalized PageRank: lane j
+    runs incremental PageRank with all teleport mass at seed j.
+
+Lane-axis contracts (what makes K-lane bit-identical to K single runs):
+
+  * Send flags stay *per-vertex* (any lane): the engines' scheduling,
+    has-message flags and counters are lane-oblivious, so a K-lane message
+    counts once.  Per-lane gating happens in the *values*.
+  * Monotone programs export full per-lane state (keep-latest, like SSSP):
+    re-delivering an already-known lane value is a ⊕-no-op, so vertex-level
+    send gating cannot corrupt a lane.
+  * Accumulative (sum) programs pre-neutralize ``out`` per lane
+    (``where(lane_send, delta, 0)``): a zero delta re-delivered adds
+    nothing, so additive export accumulation stays per-lane exact.
+
+Sources/seeds may be passed to the constructor (static) or per-run through
+``vdata={"sources": (L,) int32}`` — the serving layer uses the latter so one
+compiled (program, K) executable serves every source set.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.vertex_program import Channel, StepInfo, VertexProgram
+from repro.kernels.common import MONOTONE_SEMIRINGS, SEMIRINGS, \
+    semiring_improves
+
+__all__ = ["MultiSourceMonotone", "PersonalizedPageRank", "reachable"]
+
+# natural "the path starts here" value per monotone semiring: the ⊗-identity
+# (so the first edge's message is just the edge value), except max_min whose
+# source must not cap any path (+inf bottleneck).
+_SOURCE_VALUE = {"min_add": 0.0, "max_add": 0.0, "min_mul": 1.0,
+                 "max_min": jnp.inf}
+
+
+def _lane_mask(send, v):
+    """Broadcast a per-vertex send mask against per-lane values."""
+    return send.reshape(send.shape + (1,) * (v.ndim - send.ndim))
+
+
+class MultiSourceMonotone(VertexProgram):
+    """K-lane monotone propagation: lane j solves the single-source problem
+    from ``sources[j]`` under ``semiring`` — SSSP (min_add), widest path
+    (max_min), odds (min_mul), best score (max_add).
+
+    State/out hold a (P, Vp, L) value table; lane j of the result is
+    bit-identical to a single-source run from ``sources[j]``.
+    """
+
+    boundary_participates = True
+    # single monotone channel, out == state, adopt-if-better apply, never
+    # self-activating, keep-latest export: the (lane-general) min_step
+    # contract — the hybrid engine fuses the whole local phase
+    fused_kernel = "min_step"
+
+    def __init__(self, sources=None, *, lanes: int | None = None,
+                 semiring: str = "min_add", source_value=None):
+        if semiring not in MONOTONE_SEMIRINGS:
+            raise ValueError(f"{semiring!r} is not a monotone semiring")
+        if lanes is None:
+            if sources is None:
+                raise ValueError("need sources or lanes")
+            lanes = len(sources)
+        self.sources = sources
+        self.lanes = int(lanes)
+        self.semiring = semiring
+        self.source_value = (_SOURCE_VALUE[semiring] if source_value is None
+                             else source_value)
+        combiner = "min" if semiring.startswith("min") else "max"
+        _, _, ident = SEMIRINGS[semiring]
+        self.ident = jnp.float32(ident)
+        self.channels = (Channel("val", combiner, ((jnp.float32, ident),),
+                                 semiring=semiring, lanes=self.lanes),)
+
+    def _sources(self, vdata):
+        if vdata is not None and "sources" in vdata:
+            return jnp.asarray(vdata["sources"], jnp.int32)
+        return jnp.asarray(self.sources, jnp.int32)
+
+    def init(self, gid, vmask, vdata):
+        src = self._sources(vdata)                   # (L,)
+        is_src = gid[..., None] == src               # (P, Vp, L)
+        val = jnp.where(is_src, jnp.float32(self.source_value),
+                        self.ident).astype(jnp.float32)
+        send = jnp.logical_and(jnp.any(is_src, axis=-1), vmask)
+        active = jnp.zeros_like(vmask)               # voteToHalt()
+        return {"val": val}, {"val": val}, send, active
+
+    def emit(self, ch, out_src, w, src_gid, dst_gid):
+        _, times, _ = SEMIRINGS[self.semiring]
+        return (times(out_src["val"], w[..., None]),), jnp.ones(w.shape, bool)
+
+    def ell_payload(self, ch, out, send):
+        # message = val[src] ⊗ w per lane; non-senders flatten to the ⊕
+        # identity.  Sending vertices expose their full lane state (see the
+        # module contract: re-delivering a known value is a ⊕-no-op).
+        v = out["val"]
+        return jnp.where(_lane_mask(send, v), v, self.ident)
+
+    def apply(self, state, inbox, gid, vmask, vdata, info: StepInfo):
+        combine, _, _ = SEMIRINGS[self.semiring]
+        improves = semiring_improves(self.semiring)
+        (msg,), has = inbox["val"]
+        msg = jnp.where(_lane_mask(has, msg), msg, self.ident)
+        new = combine(state["val"], msg)
+        send = jnp.any(improves(new, state["val"]), axis=-1)
+        return {"val": new}, {"val": new}, send, jnp.zeros_like(send)
+
+
+class PersonalizedPageRank(VertexProgram):
+    """Per-seed personalized PageRank, K lanes at once.
+
+    Lane j runs the incremental-PageRank recurrence with all teleport mass
+    at seed j: ``rank_j = (1-d)·e_seed_j + d·AᵀD⁻¹ rank_j`` (unnormalized,
+    like :class:`~repro.core.apps.pagerank.IncrementalPageRank`; use
+    ``pagerank_edge_weights`` for the 1/out_degree edge weights).  Lane j of
+    the result is bit-identical to a single-seed run.
+    """
+
+    boundary_participates = True
+    fused_kernel = "pr_step"
+
+    def __init__(self, seeds=None, *, lanes: int | None = None,
+                 tolerance: float = 1e-4, damping: float = 0.85):
+        if lanes is None:
+            if seeds is None:
+                raise ValueError("need seeds or lanes")
+            lanes = len(seeds)
+        self.seeds = seeds
+        self.lanes = int(lanes)
+        self.tol = float(tolerance)
+        self.damping = float(damping)
+        self.channels = (Channel("delta", "sum", ((jnp.float32, 0.0),),
+                                 semiring="add_mul", lanes=self.lanes),)
+
+    def _seeds(self, vdata):
+        if vdata is not None and "sources" in vdata:
+            return jnp.asarray(vdata["sources"], jnp.int32)
+        return jnp.asarray(self.seeds, jnp.int32)
+
+    def init(self, gid, vmask, vdata):
+        is_seed = gid[..., None] == self._seeds(vdata)    # (P, Vp, L)
+        base = jnp.where(is_seed, 1.0 - self.damping, 0.0).astype(jnp.float32)
+        send = jnp.logical_and(jnp.any(is_seed, axis=-1), vmask)
+        return {"rank": base}, {"delta": base}, send, jnp.zeros_like(send)
+
+    def emit(self, ch, out_src, w, src_gid, dst_gid):
+        return ((self.damping * out_src["delta"] * w[..., None],),
+                jnp.ones(w.shape, bool))
+
+    def ell_payload(self, ch, out, send):
+        # out["delta"] is pre-neutralized per lane (zero where the lane did
+        # not send), so vertex-level gating completes the (+)-annihilation
+        v = out["delta"]
+        return jnp.where(_lane_mask(send, v), self.damping * v, 0.0)
+
+    def apply(self, state, inbox, gid, vmask, vdata, info: StepInfo):
+        (delta,), has = inbox["delta"]
+        delta = jnp.where(_lane_mask(has, delta), delta, 0.0)
+        rank = state["rank"] + delta
+        lane_send = delta > self.tol
+        # pre-neutralized out: only improving lanes re-propagate (a zero
+        # delta adds nothing if a vertex-level send re-delivers it)
+        out = jnp.where(lane_send, delta, 0.0)
+        send = jnp.any(lane_send, axis=-1)
+        return {"rank": rank}, {"delta": out}, send, jnp.zeros_like(send)
+
+    # ---- additive SourceCombine (per-lane exact: out is pre-neutralized)
+    def accumulate_export(self, acc_out, acc_send, new_out, new_send):
+        acc = acc_out["delta"] + jnp.where(_lane_mask(new_send,
+                                                      new_out["delta"]),
+                                           new_out["delta"], 0.0)
+        return {"delta": acc}, jnp.logical_or(acc_send, new_send)
+
+    def export_identity(self, out):
+        return {"delta": jnp.zeros_like(out["delta"])}
+
+
+def reachable(dist_lanes) -> jnp.ndarray:
+    """Reachability view of a min_add :class:`MultiSourceMonotone` result:
+    vertex v is reachable from lane j's source iff its distance is finite."""
+    return jnp.isfinite(dist_lanes)

@@ -90,16 +90,18 @@ def _fused_local_kernel(graph: PartitionedGraph, prog: VertexProgram,
 
 def _spill_extra(graph: PartitionedGraph, prog, ch, slices, views, out_d,
                  send, p, interpret):
-    """⊕-combined spill-bin contributions (P*Vp,) for a fused kernel's
-    ``extra`` operand — None when the layout is a single dense bin."""
+    """⊕-combined spill-bin contributions (P*Vp, ...) for a fused kernel's
+    ``extra`` operand — None when the layout is a single dense bin.  Lane
+    channels keep their trailing (L,) axis through the spill SpMM."""
     if len(slices) == 1:
         return None
     from repro.core.runtime import ell_combine_bins
     from repro.kernels.common import SEMIRINGS
 
     _, _, ident = SEMIRINGS[ch.semiring]
-    x = prog.ell_payload(ch, out_d, send).reshape(-1).astype(jnp.float32)
-    extra = jnp.full((p * graph.vp,), ident, jnp.float32)
+    x = prog.ell_payload(ch, out_d, send)
+    x = x.reshape((-1,) + x.shape[2:]).astype(jnp.float32)
+    extra = jnp.full((p * graph.vp,) + x.shape[1:], ident, jnp.float32)
     return ell_combine_bins(prog, ch, slices[1:], views[1:], x, extra, p,
                             interpret)
 
@@ -112,8 +114,10 @@ def fused_step_fn(graph: PartitionedGraph, prog: VertexProgram, kind: str,
 
     'pr_step': ``step(rank, delta, send) -> (rank', d_in, send')``;
     'min_step': ``step(x, send) -> (x', d_in, send')``.  All arrays are
-    (p, Vp); spill bins beyond the dense base feed the kernel's ``extra``
-    operand through :func:`_spill_extra`.
+    (p, Vp) — or (p, Vp, L) for a lane channel, with per-lane ``send``
+    gating inside the kernel (the SpMM dispatch) — and spill bins beyond
+    the dense base feed the kernel's ``extra`` operand through
+    :func:`_spill_extra`.
     """
     from repro.core.runtime import slice_flat
     from repro.kernels.common import default_interpret
@@ -124,6 +128,8 @@ def fused_step_fn(graph: PartitionedGraph, prog: VertexProgram, kind: str,
     views = [slice_flat(s, graph, p) for s in slices]
     _, idx, msk = views[0]
     interpret = default_interpret()
+    flat = lambda a: a.reshape((-1,) + a.shape[2:])
+    unflat = lambda a: a.reshape((p, vp) + a.shape[1:])
 
     if kind == "pr_step":
         from repro.kernels.pr_step import fused_pr_step
@@ -134,10 +140,10 @@ def fused_step_fn(graph: PartitionedGraph, prog: VertexProgram, kind: str,
             extra = _spill_extra(graph, prog, ch, slices, views,
                                  {ch.name: delta}, send, p, interpret)
             r, d, s = fused_pr_step(
-                idx, val, msk, delta.reshape(-1), send.reshape(-1),
-                rank.reshape(-1), extra, damping=prog.damping, tol=prog.tol,
+                idx, val, msk, flat(delta), flat(send),
+                flat(rank), extra, damping=prog.damping, tol=prog.tol,
                 interpret=interpret)
-            return r.reshape(p, vp), d.reshape(p, vp), s.reshape(p, vp)
+            return unflat(r), unflat(d), unflat(s)
     elif kind == "min_step":
         from repro.kernels.min_step import fused_min_step
 
@@ -148,9 +154,9 @@ def fused_step_fn(graph: PartitionedGraph, prog: VertexProgram, kind: str,
             extra = _spill_extra(graph, prog, ch, slices, views,
                                  {ch.name: x}, send, p, interpret)
             xn, d, s = fused_min_step(
-                idx, val, msk, x.reshape(-1), send.reshape(-1), extra=extra,
+                idx, val, msk, flat(x), flat(send), extra=extra,
                 semiring=ch.semiring, interpret=interpret)
-            return xn.reshape(p, vp), d.reshape(p, vp), s.reshape(p, vp)
+            return unflat(xn), unflat(d), unflat(s)
     else:  # pragma: no cover
         raise ValueError(kind)
     return step, slices, views
@@ -187,15 +193,28 @@ def _fused_pr_local_phase(
     kstep, slices, views = fused_step_fn(graph, prog, "pr_step", p)
     tol = prog.tol
     name = ch.name
+    # lane channels: send flags ride the loop per-lane (the kernel's SpMM
+    # gating); vertex-level views (`vany`) feed scheduling and counters,
+    # `ex` broadcasts vertex masks against lane arrays.  Scalar channels:
+    # both are the identity and the loop below is the original computation.
+    lanes = ch.lanes
+    ex = (lambda a: a[..., None]) if lanes else (lambda a: a)
+    vany = (lambda a: jnp.any(a, axis=-1)) if lanes else (lambda a: a)
 
     (p0,), has0 = es.pending[name]
     # bootstrap: apply_1 consumes the inbox (payload is 0 wherever ~has,
     # the sum identity, so the adds need no explicit compute mask)
     rank = es.state["rank"] + p0
     send = p0 > tol
-    out_delta = jnp.where(has0, p0, es.out["delta"])
+    if lanes:
+        # the lane program pre-neutralizes out per lane (sub-tol lanes
+        # carry 0), mirroring PersonalizedPageRank.apply
+        out_delta = jnp.where(ex(has0), jnp.where(send, p0, 0.0),
+                              es.out["delta"])
+    else:
+        out_delta = jnp.where(has0, p0, es.out["delta"])
     exp_out = es.export_out["delta"] + jnp.where(send, p0, 0.0)
-    exp_send = jnp.logical_or(es.export_send, send)
+    exp_send = jnp.logical_or(es.export_send, vany(send))
     c0 = es.counters
 
     def cond(carry):
@@ -212,16 +231,20 @@ def _fused_pr_local_phase(
         net_local, mem = metrics
         if collect_metrics:
             # exact parity with the dense accounting: has-flags from the
-            # send gather, one combined local group per messaged dst
+            # send gather, one combined local group per messaged dst (a
+            # K-lane message counts once — vertex-level send)
             has_n, mem_inc = ell_send_accounting(graph, slices, views,
-                                                 send.reshape(-1), p)
+                                                 vany(send).reshape(-1), p)
             net_local = net_local + jnp.sum(has_n).astype(jnp.int32)
             mem = mem + mem_inc
         else:
-            has_n = d_in > 0           # positive-contribution invariant
-        out_d = jnp.where(has_n, d_in, out_d)
+            has_n = vany(d_in > 0)     # positive-contribution invariant
+        if lanes:
+            out_d = jnp.where(ex(has_n), jnp.where(send_n, d_in, 0.0), out_d)
+        else:
+            out_d = jnp.where(has_n, d_in, out_d)
         eo = eo + jnp.where(send_n, d_in, 0.0)
-        esend = jnp.logical_or(esend, send_n)
+        esend = jnp.logical_or(esend, vany(send_n))
         running = jnp.any(has_n, axis=1)
         pseudo = pseudo + running.astype(jnp.int32)
         return (rank_n, d_in, send_n, has_n, out_d, eo, esend, running,
@@ -254,7 +277,7 @@ def _fused_pr_local_phase(
         net_local_messages=c0.net_local_messages + net_local,
         mem_messages=c0.mem_messages + mem)
     return dataclasses.replace(
-        es, state={"rank": rank}, out={"delta": out_delta}, send=send,
+        es, state={"rank": rank}, out={"delta": out_delta}, send=vany(send),
         pending={name: ((delta,), has)},
         export_out={"delta": exp_out}, export_send=exp_send,
         counters=counters)
@@ -299,17 +322,25 @@ def _fused_min_local_phase(
     p = es.send.shape[0]
     kstep, slices, views = fused_step_fn(graph, prog, "min_step", p)
     vmask = graph.vertex_mask
+    # lane channels: per-lane send flags ride the loop (SpMM gating in the
+    # kernel); `vany` collapses to the vertex level for scheduling/export
+    # (the generic keep-latest SourceCombine gates on vertex send) and `ex`
+    # broadcasts vertex masks against lane arrays.  Scalar channels: both
+    # are the identity and the loop is the original computation.
+    lanes = ch.lanes
+    ex = (lambda a: a[..., None]) if lanes else (lambda a: a)
+    vany = (lambda a: jnp.any(a, axis=-1)) if lanes else (lambda a: a)
 
     (m0,), has0 = es.pending[name]
     x0 = es.state[name].astype(jnp.float32)
     eo0 = es.export_out[name]
     # bootstrap: apply_1 consumes the inbox (payload is the ⊕-identity
     # wherever ~has, so the combines need no explicit compute mask)
-    m0f = jnp.where(has0, m0.astype(jnp.float32), sr_ident)
+    m0f = jnp.where(ex(has0), m0.astype(jnp.float32), sr_ident)
     x1 = combine(x0, m0f)
     send1 = improves(x1, x0)
-    eo_f = jnp.where(send1, x1, eo0.astype(jnp.float32))
-    esend1 = jnp.logical_or(es.export_send, send1)
+    eo_f = jnp.where(ex(vany(send1)), x1, eo0.astype(jnp.float32))
+    esend1 = jnp.logical_or(es.export_send, vany(send1))
     c0 = es.counters
 
     def cond(carry):
@@ -325,13 +356,14 @@ def _fused_min_local_phase(
         net_local, mem = metrics
         if collect_metrics:
             has_n, mem_inc = ell_send_accounting(graph, slices, views,
-                                                 send.reshape(-1), p)
+                                                 vany(send).reshape(-1), p)
             net_local = net_local + jnp.sum(has_n).astype(jnp.int32)
             mem = mem + mem_inc
         else:
-            has_n = improves(d_n, sr_ident)   # some sender beat the identity
-        eo = jnp.where(send_n, x_n, eo)
-        esend = jnp.logical_or(esend, send_n)
+            # some sender beat the identity (any lane)
+            has_n = vany(improves(d_n, sr_ident))
+        eo = jnp.where(ex(vany(send_n)), x_n, eo)
+        esend = jnp.logical_or(esend, vany(send_n))
         running = jnp.any(has_n, axis=1)
         pseudo = pseudo + running.astype(jnp.int32)
         return (x_n, d_n, send_n, has_n, eo, esend, running, pseudo,
@@ -355,16 +387,16 @@ def _fused_min_local_phase(
 
     # leave the float32 loop: integer states cast back exactly (gate) under
     # the vertex mask, so padded sentinel slots keep their original bits
-    state = jnp.where(vmask, x.astype(dt), es.state[name])
-    exp_out = jnp.where(vmask, eo.astype(dt), eo0)
-    payload = jnp.where(has, d_in.astype(dt), jnp.asarray(ident, dt))
+    state = jnp.where(ex(vmask), x.astype(dt), es.state[name])
+    exp_out = jnp.where(ex(vmask), eo.astype(dt), eo0)
+    payload = jnp.where(ex(has), d_in.astype(dt), jnp.asarray(ident, dt))
 
     counters = dataclasses.replace(
         c0, pseudo_supersteps=pseudo,
         net_local_messages=c0.net_local_messages + net_local,
         mem_messages=c0.mem_messages + mem)
     return dataclasses.replace(
-        es, state={name: state}, out={name: state}, send=send,
+        es, state={name: state}, out={name: state}, send=vany(send),
         pending={name: ((payload,), has)},
         export_out={name: exp_out}, export_send=esend,
         counters=counters)
@@ -483,6 +515,33 @@ def run_hybrid(
     host round-trip disappears and the host syncs exactly once at the end.
     ``device_loop=False`` keeps the old host-driven loop (useful when
     stepping/debugging iteration by iteration).
+
+    Args:
+        graph: the ``PartitionedGraph`` to iterate over.
+        prog: the ``VertexProgram``; its channels decide kernel dispatch
+            (semiring / ``fused_kernel`` / lane width).
+        vdata: optional per-run auxiliary arrays handed to the program's
+            hooks (e.g. ``{"sources": (K,) int32}`` for the K-lane
+            multi-query programs); traced, so varying it does not recompile.
+        max_iters: upper bound on global iterations; the loop stops early
+            at quiescence (no active vertices, no pending or in-flight
+            messages).
+        max_local_steps: per-iteration cap on local pseudo-supersteps
+            before the local phase cuts off (with rollback semantics for
+            monotone fused kernels).
+        use_ell: dispatch delivery through the sliced-ELL Pallas kernels
+            where the program qualifies; ``False`` forces the dense
+            gather/segment path (identical results and counters).
+        collect_metrics: maintain the paper's per-iteration I/M message
+            counters; ``False`` drops the accounting work from the hot
+            loop (only ``iterations`` / ``pseudo_supersteps`` count).
+        device_loop: see above.
+
+    Returns:
+        ``(es, iterations)`` — the final ``EngineState`` (per-channel
+        state stacked ``(P, Vp[, L])``; read it back in global vertex
+        order via ``graph.unpack_vertex``) and the number of global
+        iterations executed, ``int(es.counters.iterations)``.
     """
     step = partial(hybrid_iteration, graph, prog, vdata=vdata,
                    max_local_steps=max_local_steps, use_ell=use_ell,

@@ -42,11 +42,14 @@ __all__ = [
 
 
 def unpack_vertex(graph: "PartitionedGraph", values) -> np.ndarray:
-    """Scatter a per-slot (P, Vp) array back to global vertex-id order —
-    the inverse of the builder's slot assignment (padding slots dropped)."""
+    """Scatter a per-slot (P, Vp, ...) array back to global vertex-id order —
+    the inverse of the builder's slot assignment (padding slots dropped).
+    Trailing axes (e.g. the K-lane axis of a multi-query run) are kept, so a
+    (P, Vp, L) lane state unpacks to (V, L)."""
     gid = np.asarray(graph.vertex_gid).ravel()
-    val = np.asarray(values).ravel()
-    out = np.zeros(graph.n_vertices, dtype=val.dtype)
+    val = np.asarray(values)
+    val = val.reshape((-1,) + val.shape[2:])
+    out = np.zeros((graph.n_vertices,) + val.shape[1:], dtype=val.dtype)
     out[gid[gid >= 0]] = val[gid >= 0]
     return out
 
@@ -357,6 +360,26 @@ def build_partitioned_graph(
     structure — bit-identical — is produced out-of-core by
     ``repro.io.build_partitioned_graph_from_path``, which shares every
     per-partition helper below.
+
+    Args:
+        edges: (E, 2) int array of [src, dst] vertex ids in [0, V).
+        n_vertices: V, the global vertex count.
+        part: (V,) labeling, or a partitioner name (see above).
+        weights: optional (E,) float32 edge values; defaults to ones.
+        pad_multiple / build_ell / ell_pad_slices / ell_base_slices /
+            edge_blocks: layout knobs, see above.
+        n_partitions, partition_seed: used only when ``part`` is a name.
+
+    Returns:
+        A ``PartitionedGraph``: partition-major vertex tables,
+        block-ragged edge spans, export/halo routing for the exchange,
+        and (when ``build_ell``) local + halo-encoded remote sliced-ELL
+        tiles.
+
+    Raises:
+        ValueError: ``part`` is a partitioner name but ``n_partitions``
+            was not given; an unknown partitioner name; or ``edge_blocks``
+            does not divide into the partition count.
     """
     edges = np.asarray(edges, dtype=np.int64)
     if isinstance(part, str):

@@ -357,12 +357,16 @@ def _ell_deliver(graph, prog, chs, es, pending, delivered, collect_metrics,
     for ch in chs:
         _, _, ident = SEMIRINGS[ch.semiring]
         x = prog.ell_payload(ch, out_tab, send_tab)
-        x = x.reshape(-1).astype(jnp.float32)
-        y = jnp.full((p * vp,), ident, jnp.float32)
+        # lane channels carry a trailing (L,) axis through the same kernel
+        # dispatch (semiring SpMM): flatten partitions only, keep lanes
+        x = x.reshape((-1,) + x.shape[2:]).astype(jnp.float32)
+        y = jnp.full((p * vp,) + x.shape[1:], ident, jnp.float32)
         y = ell_combine_bins(prog, ch, slices, views, x, y, p, interpret)
-        y = y.reshape(p, vp)
+        y = y.reshape((p, vp) + y.shape[1:])
         dt, ident_ch = ch.components[0]
-        payload = jnp.where(has_fresh, y.astype(dt), jnp.asarray(ident_ch, dt))
+        has_b = has_fresh.reshape(
+            has_fresh.shape + (1,) * (y.ndim - has_fresh.ndim))
+        payload = jnp.where(has_b, y.astype(dt), jnp.asarray(ident_ch, dt))
         pending[ch.name] = merge_inbox(ch, pending[ch.name],
                                        ((payload,), has_fresh))
         if collect_metrics and edges == "local":

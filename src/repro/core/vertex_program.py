@@ -55,14 +55,22 @@ class Channel:
       channels without a semiring (or whose ``ell_payload`` returns None)
       transparently keep the dense gather/segment path.  Only
       single-component channels are eligible.
+    lanes: 0 for a classic per-vertex scalar channel; L > 0 declares a
+      *K-lane* channel whose state/out/message arrays carry a trailing lane
+      axis of width L — L independent queries (multi-source SSSP, per-seed
+      personalized PageRank) sharing one delivery.  Lane channels ride the
+      semiring SpMM kernels: one dispatch answers all L lanes.
     """
 
     name: str
     combiner: str
     components: Sequence[tuple[Any, Any]]
     semiring: str | None = None
+    lanes: int = 0
 
     def identity_like(self, shape: tuple[int, ...]) -> tuple[jax.Array, ...]:
+        if self.lanes:
+            shape = tuple(shape) + (self.lanes,)
         return tuple(jnp.full(shape, ident, dtype=dt) for dt, ident in self.components)
 
 
@@ -161,11 +169,13 @@ def combine_segments(
     """
     has = jax.ops.segment_max(valid.astype(jnp.int32), dst,
                               num_segments=num_segments) > 0
+    # lane channels carry payloads (E, L) against a per-edge (E,) validity
+    bx = lambda v, p: v.reshape(v.shape + (1,) * (p.ndim - v.ndim))
 
     if ch.combiner == "sum":
         outs = tuple(
-            jax.ops.segment_sum(jnp.where(valid, p, jnp.zeros_like(p)), dst,
-                                num_segments=num_segments)
+            jax.ops.segment_sum(jnp.where(bx(valid, p), p, jnp.zeros_like(p)),
+                                dst, num_segments=num_segments)
             for p in payloads)
         return outs, has
 
@@ -173,7 +183,7 @@ def combine_segments(
         op = jax.ops.segment_min if ch.combiner == "min" else jax.ops.segment_max
         outs = []
         for p, (dt, ident) in zip(payloads, ch.components):
-            masked = jnp.where(valid, p, jnp.asarray(ident, dtype=dt))
+            masked = jnp.where(bx(valid, p), p, jnp.asarray(ident, dtype=dt))
             outs.append(op(masked, dst, num_segments=num_segments))
         return tuple(outs), has
 

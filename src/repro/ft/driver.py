@@ -232,6 +232,25 @@ def run_hybrid_ft(
     least-loaded healthy workers and rolls back to the latest checkpoint,
     recording a :class:`RecoveryEvent`.  Deterministic by construction: no
     wall-clock enters control flow.
+
+    Engine knobs (``vdata``, ``max_iters``, ``max_local_steps``,
+    ``use_ell``, ``collect_metrics``) mean exactly what they mean to
+    :func:`~repro.core.engine_hybrid.run_hybrid`.  ``straggler_factor``
+    flags a worker's iteration as straggling when its simulated duration
+    exceeds that multiple of the tick median; ``balance`` optionally caps
+    post-recovery load imbalance during reassignment.
+
+    Returns:
+        An :class:`FTRunResult`: the final ``EngineState`` (``es``) and
+        iteration count, every :class:`RecoveryEvent` and straggler
+        ``ShardFlag`` observed, ``resumed_from`` (checkpoint dir this run
+        restored from, or ``None`` for a cold start), and the monitor's
+        final reassignment ``epoch``.
+
+    Raises:
+        CheckpointError: a checkpoint under ``ckpt_dir`` is keyed to a
+            different graph digest or program than this run — refusing to
+            restore mismatched state.
     """
     if step_fn is None:
         def step_fn(g, e):

@@ -187,7 +187,27 @@ class ShardedGraph:
 
 
 def load_graph(path: str) -> ShardedGraph:
-    """Open + validate a ``.ghp`` directory."""
+    """Open + validate a ``.ghp`` directory.
+
+    Validation is structural and cheap — shard payloads are *not* read:
+    ``meta.json`` must parse with the expected magic/version, ``part.npy``
+    must be an int32 labeling of exactly ``n_vertices`` entries, the shard
+    records must match ``n_partitions``, and the per-shard edge counts
+    must sum to ``n_edges``.
+
+    Args:
+        path: the ``.ghp`` directory (as written by ``ShardWriter`` /
+            ``repro.io.convert``).
+
+    Returns:
+        A ``ShardedGraph`` handle: parsed ``meta``, the in-memory
+        partition labeling, and the path — shard arrays are loaded lazily
+        by consumers (mmap-friendly ``.npy``).
+
+    Raises:
+        GraphFormatError: missing or malformed ``meta.json`` /
+            ``part.npy``, or shard records inconsistent with the metadata.
+    """
     meta = read_meta(os.path.join(path, "meta.json"), expect="ghp")
     n = int(meta["n_vertices"])
     part_path = os.path.join(path, "part.npy")

@@ -22,9 +22,25 @@ __all__ = ["SEMIRINGS", "MONOTONE_SEMIRINGS", "semiring_improves",
            "ell_pack_numpy", "ell_bin_widths", "sliced_ell_pack_numpy"]
 
 
-# (⊕ combine, ⊗ times, ⊕-identity) per semiring.  The kernels are generic
-# over this table; adding an entry here is all a new semiring needs (plus a
-# `_SCATTER` rule in runtime for its spill bins).
+#: Semiring table: ``name -> (⊕ combine, ⊗ times, ⊕-identity)``.
+#:
+#: Every kernel (``ell_spmv``, fused ``pr_step``/``min_step``), the engine
+#: dispatch in ``runtime.deliver``, and the reference oracles are generic
+#: over this table.  The entries:
+#:
+#: - ``add_mul``  (+, ×, 0)        — PageRank mass propagation
+#: - ``min_add``  (min, +, +inf)   — shortest paths / HashMin WCC
+#: - ``max_add``  (max, +, -inf)   — best-score / log-likelihood paths
+#: - ``min_mul``  (min, ×, +inf)   — odds propagation
+#: - ``max_min``  (max, min, -inf) — bottleneck / widest-path capacity
+#:
+#: ``⊕`` folds edge products per destination row, ``⊗`` combines a source
+#: value with an edge weight, and the identity fills masked ELL slots so
+#: padding never contributes.  Adding an entry here is all a new semiring
+#: needs (plus a `_SCATTER` rule in runtime for its spill bins).  A
+#: ``Channel(semiring=...)`` naming an entry opts that channel into the
+#: kernel delivery path; monotone entries (see ``MONOTONE_SEMIRINGS``)
+#: additionally unlock the fused ``min_step`` local phase.
 SEMIRINGS = {
     "add_mul": (jnp.add, jnp.multiply, 0.0),
     "min_add": (jnp.minimum, jnp.add, jnp.inf),

@@ -18,6 +18,14 @@ over semirings (⊕, ⊗) ∈ {(+,*) PageRank, (min,+) SSSP, (max,+) best-score
 paths, (min,*) odds propagation, (max,min) bottleneck capacity} — the shared
 table in `kernels.common.SEMIRINGS`.
 
+The frontier ``x`` is either a vector (N,) — the classic SpMV — or a stacked
+frontier *matrix* (N, L) of L independent query lanes (multi-source SSSP,
+landmark tables, per-seed personalized PageRank), in which case the same
+gather indices serve every lane and the product/reduce broadcast over the
+trailing lane axis: one dispatch computes a semiring SpMM, y (R, L).  The
+1-D path is untouched — lane handling is a static rank check, so single-lane
+callers compile the exact original kernel.
+
 Blocking: grid = (R/Bm, K/Bk); each step loads a (Bm, Bk) tile of idx/val/msk
 into VMEM plus the whole source vector x (a graph partition's frontier fits
 VMEM comfortably: 64k fp32 slots = 256 KiB), gathers, reduces over the slice
@@ -44,9 +52,12 @@ def _kernel(idx_ref, val_ref, msk_ref, x_ref, y_ref, *, semiring: str):
     idx = idx_ref[...]                      # (Bm, Bk) int32
     val = val_ref[...]                      # (Bm, Bk)
     msk = msk_ref[...]                      # (Bm, Bk)
-    x = x_ref[...]                          # (N,) — whole frontier in VMEM
+    x = x_ref[...]                          # (N,) or (N, L) — whole frontier
 
-    gathered = x[idx]                       # (Bm, Bk)
+    if x.ndim == 2:                         # K-lane SpMM: broadcast the edge
+        val = val[..., None]                # tile over the trailing lane axis
+        msk = msk[..., None]
+    gathered = x[idx]                       # (Bm, Bk) or (Bm, Bk, L)
     prod = times(val, gathered)
     prod = jnp.where(msk, prod, jnp.asarray(ident, prod.dtype))
 
@@ -68,9 +79,11 @@ def ell_spmv_pallas(
     block_slices: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
-    """y = ⊕_k val ⊗ x[idx] per row.  Returns (R,) in x.dtype."""
+    """y = ⊕_k val ⊗ x[idx] per row.  Returns (R,) for an (N,) frontier and
+    (R, L) for a stacked (N, L) lane frontier, in x.dtype."""
     r, kk = idx.shape
     bm, bk, _, grid = ell_blocking(r, kk, block_rows, block_slices)
+    lanes = x.shape[1:]                     # () SpMV or (L,) SpMM
 
     return pl.pallas_call(
         functools.partial(_kernel, semiring=semiring),
@@ -79,9 +92,11 @@ def ell_spmv_pallas(
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
-            pl.BlockSpec((x.shape[0],), lambda i, k: (0,)),
+            pl.BlockSpec(x.shape, lambda i, k: (0,) * x.ndim),
         ],
-        out_specs=pl.BlockSpec((bm,), lambda i, k: (i,)),
-        out_shape=jax.ShapeDtypeStruct((r,), x.dtype),
+        out_specs=pl.BlockSpec((bm,) + lanes,
+                               (lambda i, k: (i, 0)) if lanes
+                               else (lambda i, k: (i,))),
+        out_shape=jax.ShapeDtypeStruct((r,) + lanes, x.dtype),
         interpret=interpret,
     )(idx, val, msk, x)

@@ -18,7 +18,11 @@ from repro.kernels.ell_spmv.ell_spmv import ell_spmv_pallas
 def ell_spmv(idx, val, msk, x, *, semiring: str = "add_mul",
              block_rows: int = 256, block_slices: int = 128,
              interpret: bool = True) -> jax.Array:
-    """Jitted semiring SpMV: y[r] = ⊕_k val[r,k] ⊗ x[idx[r,k]].
+    """Jitted semiring SpMV/SpMM: y[r] = ⊕_k val[r,k] ⊗ x[idx[r,k]].
+
+    ``x`` is an (N,) frontier vector (SpMV, returns (R,)) or an (N, L)
+    stacked frontier of L query lanes (semiring SpMM, returns (R, L) — one
+    dispatch answers L simultaneous sources over the same edge tiles).
 
     ``interpret=True`` executes the Pallas kernel body on CPU (this
     container); on a TPU runtime pass ``interpret=False`` to lower to Mosaic.

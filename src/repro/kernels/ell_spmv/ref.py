@@ -10,6 +10,9 @@ from repro.kernels.ell_spmv.ell_spmv import SEMIRINGS
 
 def ell_spmv_ref(idx, val, msk, x, *, semiring: str = "add_mul") -> jax.Array:
     combine, times, ident = SEMIRINGS[semiring]
+    if x.ndim == 2:                         # (N, L) lane frontier -> (R, L)
+        val = val[..., None]
+        msk = msk[..., None]
     prod = times(val, x[idx])
     prod = jnp.where(msk, prod, jnp.asarray(ident, prod.dtype))
     if semiring == "add_mul":

@@ -47,9 +47,12 @@ def _kernel(idx_ref, val_ref, msk_ref, x_ref, send_ref, xrow_ref, extra_ref,
     idx = idx_ref[...]
     val = val_ref[...]
     msk = msk_ref[...]
-    x = x_ref[...]
-    send = send_ref[...]
+    x = x_ref[...]                          # (N,) or (N, L) lane frontier
+    send = send_ref[...]                    # matches x's rank (per-lane send)
 
+    if x.ndim == 2:                         # K-lane SpMM: edge tile broadcast
+        val = val[..., None]                # over the trailing lane axis
+        msk = msk[..., None]
     cand = times(x[idx], val)
     cand = jnp.where(jnp.logical_and(msk, send[idx]),
                      cand, jnp.asarray(ident, cand.dtype))
@@ -73,14 +76,21 @@ def fused_min_step_pallas(idx, val, msk, x, send, xrow, extra, *,
                           semiring: str = "min_add",
                           block_rows: int = 256, block_slices: int = 128,
                           interpret: bool = True):
-    """-> (x', d_in, send').  ``x`` is the (N,) frontier, ``xrow`` the (R,)
-    per-row state the epilogue compares against (the same array when rows
-    and frontier share the vertex slot space), ``extra`` an (R,) pre-combined
+    """-> (x', d_in, send').  ``x`` is the (N,) frontier — or (N, L) for L
+    independent query lanes, in which case ``send``/``xrow``/``extra`` carry
+    the same trailing lane axis and all three outputs are (R, L).  ``xrow``
+    is the per-row state the epilogue compares against (the same array when
+    rows and frontier share the vertex slot space), ``extra`` a pre-combined
     spill contribution (the ⊕-identity where none)."""
     assert semiring in MONOTONE_SEMIRINGS, semiring
     r, kk = idx.shape
     bm, bk, nkb, grid = ell_blocking(r, kk, block_rows, block_slices)
-    n = x.shape[0]
+    lanes = x.shape[1:]                     # () SpMV or (L,) lane SpMM
+
+    front_spec = pl.BlockSpec(x.shape, lambda i, k: (0,) * x.ndim)
+    row_spec = pl.BlockSpec((bm,) + lanes,
+                            (lambda i, k: (i, 0)) if lanes
+                            else (lambda i, k: (i,)))
 
     acc, x_out, send_out = pl.pallas_call(
         functools.partial(_kernel, n_kblocks=nkb, semiring=semiring),
@@ -89,20 +99,16 @@ def fused_min_step_pallas(idx, val, msk, x, send, xrow, extra, *,
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
-            pl.BlockSpec((n,), lambda i, k: (0,)),
-            pl.BlockSpec((n,), lambda i, k: (0,)),
-            pl.BlockSpec((bm,), lambda i, k: (i,)),
-            pl.BlockSpec((bm,), lambda i, k: (i,)),
+            front_spec,
+            front_spec,
+            row_spec,
+            row_spec,
         ],
-        out_specs=[
-            pl.BlockSpec((bm,), lambda i, k: (i,)),
-            pl.BlockSpec((bm,), lambda i, k: (i,)),
-            pl.BlockSpec((bm,), lambda i, k: (i,)),
-        ],
+        out_specs=[row_spec, row_spec, row_spec],
         out_shape=[
-            jax.ShapeDtypeStruct((r,), x.dtype),
-            jax.ShapeDtypeStruct((r,), x.dtype),
-            jax.ShapeDtypeStruct((r,), jnp.bool_),
+            jax.ShapeDtypeStruct((r,) + lanes, x.dtype),
+            jax.ShapeDtypeStruct((r,) + lanes, x.dtype),
+            jax.ShapeDtypeStruct((r,) + lanes, jnp.bool_),
         ],
         interpret=interpret,
     )(idx, val, msk, x, send, xrow, extra)

@@ -13,6 +13,9 @@ def fused_min_step_ref(idx, val, msk, x, send, xrow=None, extra=None, *,
     improves = semiring_improves(semiring)
     if xrow is None:
         xrow = x
+    if x.ndim == 2:                         # (N, L) lane frontier
+        val = val[..., None]
+        msk = msk[..., None]
     cand = jnp.where(jnp.logical_and(msk, send[idx]), times(x[idx], val),
                      jnp.asarray(ident, x.dtype))
     d_in = (jnp.min if semiring.startswith("min") else jnp.max)(cand, axis=1)

@@ -17,9 +17,11 @@ def fused_pr_step(idx, val, msk, delta, send, rank, extra=None, *,
                   block_rows: int = 256, block_slices: int = 128,
                   interpret: bool = True):
     """``extra`` carries the sliced-ELL spill bins' pre-combined per-row
-    contributions (zeros / omitted when the layout has a single bin)."""
+    contributions (zeros / omitted when the layout has a single bin).  With
+    an (N, L) lane frontier every operand and output carries the trailing L
+    axis (K-lane SpMM dispatch)."""
     if extra is None:
-        extra = jnp.zeros(idx.shape[:1], rank.dtype)
+        extra = jnp.zeros(idx.shape[:1] + delta.shape[1:], rank.dtype)
     return fused_pr_step_pallas(idx, val, msk, delta, send, rank, extra,
                                 damping=damping, tol=tol,
                                 block_rows=block_rows,

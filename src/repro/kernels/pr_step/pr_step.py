@@ -34,12 +34,19 @@ def _kernel(idx_ref, val_ref, msk_ref, delta_ref, send_ref, rank_ref,
     idx = idx_ref[...]
     val = val_ref[...]
     msk = msk_ref[...]
-    delta = delta_ref[...]
-    send = send_ref[...]
+    delta = delta_ref[...]                  # (N,) or (N, L) lane frontier
+    send = send_ref[...]                    # matches delta's rank
 
+    if delta.ndim == 2:                     # K-lane SpMM: edge tile broadcast
+        val = val[..., None]                # over the trailing lane axis
+        msk = msk[..., None]
     contrib = jnp.where(send[idx], delta[idx], 0.0)
     contrib = jnp.where(msk, damping * val * contrib, 0.0)
-    partial = jnp.sum(contrib, axis=1)
+    partial = contrib[:, 0]
+    for j in range(1, contrib.shape[1]):    # sequential slice-axis fold, as
+        partial = partial + contrib[:, j]   # in ell_spmv: the order is the
+    # same with or without a lane axis, so a lane column is bit-identical
+    # to the single-frontier dispatch of that lane
 
     accumulate_k(acc_ref, partial, jnp.add)
 
@@ -57,10 +64,17 @@ def fused_pr_step_pallas(idx, val, msk, delta, send, rank, extra, *,
                          damping: float = 0.85, tol: float = 1e-4,
                          block_rows: int = 256, block_slices: int = 128,
                          interpret: bool = True):
-    """-> (rank', delta_in, send')."""
+    """-> (rank', delta_in, send').  With an (N, L) lane frontier ``delta``
+    (per-seed personalized PageRank), ``send``/``rank``/``extra`` carry the
+    same trailing L axis and all three outputs are (R, L)."""
     r, kk = idx.shape
     bm, bk, nkb, grid = ell_blocking(r, kk, block_rows, block_slices)
-    n = delta.shape[0]
+    lanes = delta.shape[1:]                 # () SpMV or (L,) lane SpMM
+
+    front_spec = pl.BlockSpec(delta.shape, lambda i, k: (0,) * delta.ndim)
+    row_spec = pl.BlockSpec((bm,) + lanes,
+                            (lambda i, k: (i, 0)) if lanes
+                            else (lambda i, k: (i,)))
 
     acc, rank_out, send_out = pl.pallas_call(
         functools.partial(_kernel, damping=damping, tol=tol, n_kblocks=nkb),
@@ -69,20 +83,16 @@ def fused_pr_step_pallas(idx, val, msk, delta, send, rank, extra, *,
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
-            pl.BlockSpec((n,), lambda i, k: (0,)),
-            pl.BlockSpec((n,), lambda i, k: (0,)),
-            pl.BlockSpec((bm,), lambda i, k: (i,)),
-            pl.BlockSpec((bm,), lambda i, k: (i,)),
+            front_spec,
+            front_spec,
+            row_spec,
+            row_spec,
         ],
-        out_specs=[
-            pl.BlockSpec((bm,), lambda i, k: (i,)),
-            pl.BlockSpec((bm,), lambda i, k: (i,)),
-            pl.BlockSpec((bm,), lambda i, k: (i,)),
-        ],
+        out_specs=[row_spec, row_spec, row_spec],
         out_shape=[
-            jax.ShapeDtypeStruct((r,), rank.dtype),
-            jax.ShapeDtypeStruct((r,), rank.dtype),
-            jax.ShapeDtypeStruct((r,), jnp.bool_),
+            jax.ShapeDtypeStruct((r,) + lanes, rank.dtype),
+            jax.ShapeDtypeStruct((r,) + lanes, rank.dtype),
+            jax.ShapeDtypeStruct((r,) + lanes, jnp.bool_),
         ],
         interpret=interpret,
     )(idx, val, msk, delta, send, rank, extra)

@@ -7,6 +7,9 @@ import jax.numpy as jnp
 
 def fused_pr_step_ref(idx, val, msk, delta, send, rank, extra=None, *,
                       damping: float = 0.85, tol: float = 1e-4):
+    if delta.ndim == 2:                     # (N, L) lane frontier
+        val = val[..., None]
+        msk = msk[..., None]
     contrib = jnp.where(send[idx], delta[idx], 0.0)
     contrib = jnp.where(msk, damping * val * contrib, 0.0)
     d_in = jnp.sum(contrib, axis=1)

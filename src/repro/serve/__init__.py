@@ -1,0 +1,3 @@
+from repro.serve.engine import PROGRAMS, Query, ServeEngine
+
+__all__ = ["PROGRAMS", "Query", "ServeEngine"]

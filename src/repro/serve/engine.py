@@ -1,115 +1,332 @@
-"""Batched serving engine.
+"""Graph-query serving: micro-batched K-lane execution of graph queries.
 
-Requests are grouped into fixed-size batches, left-padded to a common
-timeline (per-slot ``start`` offsets keep RoPE positions and masks exact —
-see models/attention.py kv_start), prefilled once, then decoded in lockstep;
-finished slots (EOS or budget) are masked out.  Straggler mitigation hooks in
-through ft.straggler: per-batch deadlines + re-dispatch with duplicate
-suppression (meaningful with >1 replica; the state machine is exercised in
-tests with a fake clock).
+A :class:`ServeEngine` loads a partitioned graph once (a built
+:class:`~repro.core.graph.PartitionedGraph` or a ``.ghp`` shard directory)
+and serves point queries against it — "distance from vertex s", "rank
+around seed s", "what does s reach".  Queries are micro-batched: requests
+for the same program are grouped, padded to a fixed lane width K, and
+dispatched as ONE K-lane engine run over the semiring SpMM kernels
+(:mod:`repro.core.apps.multi`), so K queries cost one graph traversal.
 
-Greedy or temperature sampling; decode is a single jitted step reused across
-the batch lifetime, so serving costs 1 compile per (arch, batch-shape).
+Compile-cache contract: the lane program is constructed with ``lanes=K``
+and *no* sources — sources arrive as a traced ``(K,)`` array through
+``vdata={"sources": ...}``.  One jitted executable per (program, K) pair
+therefore serves every source set; padding the batch up to the nearest
+width in ``lane_widths`` keeps the set of shapes (and compiles) fixed.
+
+Two dispatch modes:
+
+* :meth:`run` — drain the queue; each batch is one jitted
+  device-side run to quiescence.  Straggler handling reuses
+  :class:`repro.ft.straggler.StragglerMitigator`: every batch is issued
+  against a deadline, overdue batches are re-dispatched to the next
+  replica slot, and duplicate completions are suppressed (first result
+  wins by work id).
+* :meth:`stream` — host-stepped; yields each query as soon as ITS lane
+  converges, while the rest of the batch keeps iterating.  A lane whose
+  state is unchanged across one full global iteration is at its fixed
+  point: any delivery that could still change it would have changed it
+  during that iteration, and unchanged lanes emit only ⊕-identity
+  payloads (per-lane send masking), so nothing new is in flight for them.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+import itertools
+from typing import Any, Callable, Iterator
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
-from repro.models.registry import ModelAPI
+from repro.core.apps.multi import (MultiSourceMonotone, PersonalizedPageRank,
+                                   reachable)
+from repro.core.engine_hybrid import hybrid_iteration, init_hybrid
+from repro.core.graph import PartitionedGraph, unpack_vertex
+from repro.core.runtime import quiescent
+from repro.ft.straggler import StragglerMitigator
 
 
 @dataclasses.dataclass
-class Request:
+class Query:
+    """One graph query: run ``program`` from ``source``.
+
+    ``payload`` carries program parameters (e.g. ``tolerance`` for ppr);
+    queries batch together only when program AND payload match, so every
+    lane of a dispatch runs the same program instance.
+    """
+
     request_id: int
-    prompt: np.ndarray              # (L,) int32
-    max_new: int = 32
-    result: list = dataclasses.field(default_factory=list)
+    program: str
+    source: int
+    payload: dict = dataclasses.field(default_factory=dict)
+    result: np.ndarray | None = None
     done: bool = False
+    iterations: int | None = None
+
+    @property
+    def key(self):
+        return (self.program, tuple(sorted(self.payload.items())))
+
+
+@dataclasses.dataclass(frozen=True)
+class _ProgramSpec:
+    factory: Callable          # (lanes, payload) -> VertexProgram
+    state_key: str             # es.state entry holding the (P, Vp, L) result
+    post: Callable = staticmethod(lambda col: col)
+
+
+#: program registry: name -> how to build the K-lane program and read back
+#: one lane of its fixed point.  All factories take ``lanes=K`` and no
+#: sources — sources are traced in through vdata (see module docstring).
+PROGRAMS: dict[str, _ProgramSpec] = {
+    "sssp": _ProgramSpec(
+        lambda lanes, p: MultiSourceMonotone(lanes=lanes, semiring="min_add",
+                                             **p), "val"),
+    "widest": _ProgramSpec(
+        lambda lanes, p: MultiSourceMonotone(lanes=lanes, semiring="max_min",
+                                             **p), "val"),
+    "reach": _ProgramSpec(
+        lambda lanes, p: MultiSourceMonotone(lanes=lanes, semiring="min_add",
+                                             **p), "val",
+        lambda col: np.asarray(reachable(col))),
+    "ppr": _ProgramSpec(
+        lambda lanes, p: PersonalizedPageRank(lanes=lanes, **p), "rank"),
+}
 
 
 class ServeEngine:
-    def __init__(self, cfg: ArchConfig, api: ModelAPI, params,
-                 max_batch: int = 8, max_len: int = 256,
-                 eos_id: int = -1, dtype=jnp.float32):
-        self.cfg, self.api, self.params = cfg, api, params
-        self.max_batch, self.max_len, self.eos_id = max_batch, max_len, eos_id
-        self.dtype = dtype
-        self.queue: list[Request] = []
-        self._prefill = jax.jit(
-            lambda p, b, c: api.prefill(p, b, c, cfg))
-        self._decode = jax.jit(
-            lambda p, t, c, n, s: api.decode_step(p, t, c, n, cfg,
-                                                  kv_start=s))
+    """Serve graph queries against one resident partitioned graph.
 
-    def submit(self, prompt: np.ndarray, max_new: int = 32) -> Request:
-        req = Request(len(self.queue), np.asarray(prompt, np.int32), max_new)
-        self.queue.append(req)
-        return req
+    Parameters
+    ----------
+    graph:
+        A built :class:`PartitionedGraph`, or a path to a ``.ghp`` shard
+        directory (loaded once via
+        :func:`repro.io.pipeline.build_partitioned_graph_from_path`).
+    lane_widths:
+        The fixed micro-batch widths.  A batch of b queries is padded up
+        to the smallest width >= b (larger groups split at the maximum
+        width); the compile cache holds at most
+        ``len(PROGRAMS) * len(lane_widths)`` executables.
+    use_ell / max_iters:
+        Forwarded to the hybrid engine per dispatch.
+    straggler / dispatch_fn:
+        Deadline re-dispatch state machine and an injectable dispatch
+        hook ``(engine, key, K, sources, attempt) -> EngineState | None``
+        (None = this attempt produced nothing before the deadline; tests
+        drive this with a fake clock).
+    """
 
-    def _make_batch(self, reqs: list[Request]):
-        lmax = max(len(r.prompt) for r in reqs)
-        b = len(reqs)
-        toks = np.zeros((b, lmax), np.int32)
-        start = np.zeros((b,), np.int32)
-        for i, r in enumerate(reqs):
-            pad = lmax - len(r.prompt)
-            toks[i, pad:] = r.prompt
-            start[i] = pad
-        return {"tokens": jnp.asarray(toks), "start": jnp.asarray(start)}, lmax
+    def __init__(self, graph: PartitionedGraph | str, *,
+                 lane_widths: tuple[int, ...] = (1, 4, 16, 64),
+                 use_ell: bool = True, max_iters: int = 10_000,
+                 straggler: StragglerMitigator | None = None,
+                 dispatch_fn: Callable | None = None,
+                 build_kwargs: dict | None = None):
+        if isinstance(graph, str):
+            from repro.io.pipeline import build_partitioned_graph_from_path
+            graph = build_partitioned_graph_from_path(
+                graph, **(build_kwargs or {}))
+        self.graph = graph
+        self.lane_widths = tuple(sorted(lane_widths))
+        self.use_ell = use_ell
+        self.max_iters = max_iters
+        self.straggler = straggler or StragglerMitigator()
+        self._dispatch_fn = dispatch_fn
+        self.queue: list[Query] = []
+        self._ids = itertools.count()        # monotonic: ids never collide
+        self._work_ids = itertools.count()
+        self._progs: dict[tuple, Any] = {}   # (key, K) -> program instance
+        self._full: dict[tuple, Callable] = {}
+        self._init: dict[tuple, Callable] = {}
+        self._step: dict[tuple, Callable] = {}
+        self._changed: dict[tuple, Callable] = {}
+        self.trace_counts: dict[tuple, int] = {}   # compiles per (key, K)
 
-    def run(self, temperature: float = 0.0, seed: int = 0) -> list[Request]:
-        """Serve everything in the queue; returns completed requests."""
-        rng = np.random.RandomState(seed)
-        done: list[Request] = []
-        while self.queue:
-            batch_reqs = self.queue[: self.max_batch]
-            self.queue = self.queue[self.max_batch:]
-            batch, lmax = self._make_batch(batch_reqs)
-            cache = self.api.init_cache(self.cfg, len(batch_reqs),
-                                        self.max_len, self.dtype)
-            logits, cache = self._prefill(self.params, batch, cache)
-            tok = self._sample(logits[:, -1], temperature, rng)
-            for i, r in enumerate(batch_reqs):
-                r.result.append(int(tok[i]))
-            max_new = max(r.max_new for r in batch_reqs)
-            alive = np.ones(len(batch_reqs), bool)
-            for t in range(1, max_new):
-                if not alive.any():
-                    break
-                logits, cache = self._decode(self.params, tok[:, None],
-                                             cache, lmax + t - 1,
-                                             batch["start"])
-                tok = self._sample(logits[:, 0], temperature, rng)
-                for i, r in enumerate(batch_reqs):
-                    if not alive[i]:
-                        continue
-                    nxt = int(tok[i])
-                    r.result.append(nxt)
-                    if nxt == self.eos_id or len(r.result) >= r.max_new:
-                        alive[i] = False
-                        r.done = True
-            for r in batch_reqs:
-                r.done = True
-                done.append(r)
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, program: str, source: int, **payload) -> Query:
+        """Enqueue one query; returns its (pending) :class:`Query`."""
+        if program not in PROGRAMS:
+            raise KeyError(f"unknown program {program!r}; have "
+                           f"{sorted(PROGRAMS)}")
+        q = Query(next(self._ids), program, int(source), payload)
+        self.queue.append(q)
+        return q
+
+    # -- batching ----------------------------------------------------------
+
+    def _take_batches(self) -> list[tuple[tuple, list[Query]]]:
+        """Drain the queue into (key, queries) chunks of <= max lane width,
+        grouping same-program same-payload queries (submit order kept
+        within a group)."""
+        groups: dict[tuple, list[Query]] = {}
+        for q in self.queue:
+            groups.setdefault(q.key, []).append(q)
+        self.queue = []
+        wmax = self.lane_widths[-1]
+        return [(key, qs[i:i + wmax])
+                for key, qs in groups.items()
+                for i in range(0, len(qs), wmax)]
+
+    def _pad_width(self, b: int) -> int:
+        for w in self.lane_widths:
+            if w >= b:
+                return w
+        return self.lane_widths[-1]
+
+    def _sources(self, queries: list[Query], K: int) -> jnp.ndarray:
+        src = [q.source for q in queries]
+        src += [src[-1]] * (K - len(src))    # pad lanes repeat a real source
+        return jnp.asarray(src, jnp.int32)
+
+    # -- compile cache -----------------------------------------------------
+
+    def _program(self, key: tuple, K: int):
+        ck = (key, K)
+        if ck not in self._progs:
+            name, payload = key
+            self._progs[ck] = PROGRAMS[name].factory(K, dict(payload))
+        return self._progs[ck]
+
+    def _full_run(self, key: tuple, K: int) -> Callable:
+        ck = (key, K)
+        if ck not in self._full:
+            prog = self._program(key, K)
+
+            def run(sources):
+                # executes at trace time only: counts compiles per (key, K)
+                self.trace_counts[ck] = self.trace_counts.get(ck, 0) + 1
+                vdata = {"sources": sources}
+                es = init_hybrid(self.graph, prog, vdata,
+                                 use_ell=self.use_ell, collect_metrics=False)
+
+                def cond(e):
+                    return jnp.logical_and(
+                        jnp.logical_not(quiescent(prog, e)),
+                        e.counters.iterations < self.max_iters)
+
+                return jax.lax.while_loop(
+                    cond,
+                    lambda e: hybrid_iteration(self.graph, prog, e, vdata,
+                                               use_ell=self.use_ell,
+                                               collect_metrics=False),
+                    es)
+
+            self._full[ck] = jax.jit(run)
+        return self._full[ck]
+
+    def _stream_fns(self, key: tuple, K: int):
+        ck = (key, K)
+        if ck not in self._step:
+            prog = self._program(key, K)
+            self._init[ck] = jax.jit(lambda src: init_hybrid(
+                self.graph, prog, {"sources": src}, use_ell=self.use_ell,
+                collect_metrics=False))
+            self._step[ck] = jax.jit(lambda es, src: hybrid_iteration(
+                self.graph, prog, es, {"sources": src},
+                use_ell=self.use_ell, collect_metrics=False))
+
+            def changed(prev, state):
+                ch = jnp.zeros((K,), bool)
+                for name in state:
+                    ch = jnp.logical_or(ch, jnp.any(
+                        state[name] != prev[name],
+                        axis=tuple(range(state[name].ndim - 1))))
+                return ch
+
+            self._changed[ck] = jax.jit(changed)
+        return self._init[ck], self._step[ck], self._changed[ck]
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _dispatch(self, key: tuple, K: int, sources, attempt: int):
+        if self._dispatch_fn is not None:
+            return self._dispatch_fn(self, key, K, sources, attempt)
+        return self._full_run(key, K)(sources)
+
+    def _dispatch_mitigated(self, key: tuple, K: int, sources):
+        """One batch through the straggler state machine: issue against the
+        deadline, re-dispatch to the next replica slot while overdue,
+        first completion wins."""
+        wid = next(self._work_ids)
+        self.straggler.issue(wid, replica=0)
+        attempt = 0
+        while True:
+            es = self._dispatch(key, K, sources, attempt)
+            if es is not None and self.straggler.complete(wid):
+                return es
+            overdue = [w for w in self.straggler.overdue()
+                       if w.work_id == wid]
+            if es is None and not overdue:
+                raise RuntimeError(
+                    f"dispatch produced no result for work {wid} and the "
+                    f"deadline ({self.straggler.deadline:.3f}s) has not "
+                    f"passed — nothing to re-dispatch")
+            attempt += 1
+
+    def _finish(self, queries: list[Query], lanes: np.ndarray, iters: int):
+        spec = PROGRAMS[queries[0].program]
+        for j, q in enumerate(queries):
+            q.result = spec.post(lanes[:, j])
+            q.iterations = iters
+            q.done = True
+
+    # -- serving -----------------------------------------------------------
+
+    def run(self) -> list[Query]:
+        """Serve everything in the queue; returns the completed queries
+        (each batch = one jitted K-lane run to quiescence)."""
+        done: list[Query] = []
+        for key, queries in self._take_batches():
+            K = self._pad_width(len(queries))
+            sources = self._sources(queries, K)
+            es = self._dispatch_mitigated(key, K, sources)
+            spec = PROGRAMS[queries[0].program]
+            lanes = np.asarray(unpack_vertex(self.graph,
+                                             es.state[spec.state_key]))
+            self._finish(queries, lanes, int(es.counters.iterations))
+            done.extend(queries)
         return done
 
-    @staticmethod
-    def _sample(logits, temperature, rng):
-        logits = np.asarray(logits, np.float32)
-        if temperature <= 0.0:
-            return logits.argmax(axis=-1).astype(np.int32)
-        z = logits / temperature
-        z = z - z.max(axis=-1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(axis=-1, keepdims=True)
-        return np.array([rng.choice(len(row), p=row) for row in p],
-                        np.int32)
+    def stream(self) -> Iterator[Query]:
+        """Serve the queue host-stepped, yielding each query as soon as its
+        lane converges (state unchanged across one full iteration — see
+        the module docstring for why that is the lane's fixed point)."""
+        for key, queries in self._take_batches():
+            K = self._pad_width(len(queries))
+            sources = self._sources(queries, K)
+            init, step, changed = self._stream_fns(key, K)
+            spec = PROGRAMS[queries[0].program]
+            es = init(sources)
+            pending = {j: q for j, q in enumerate(queries)}
+            it = 0
+            while pending and it < self.max_iters:
+                prev = es.state
+                es = step(es, sources)
+                it += 1
+                if bool(quiescent(self._program(key, K), es)):
+                    lane_done = np.ones((K,), bool)
+                else:
+                    lane_done = ~np.asarray(changed(prev, es.state))
+                if not any(lane_done[j] for j in pending):
+                    continue
+                lanes = np.asarray(unpack_vertex(
+                    self.graph, es.state[spec.state_key]))
+                for j in [j for j in pending if lane_done[j]]:
+                    q = pending.pop(j)
+                    q.result = spec.post(lanes[:, j])
+                    q.iterations = it
+                    q.done = True
+                    yield q
+            if pending:          # max_iters safety valve: flush as-is
+                lanes = np.asarray(unpack_vertex(
+                    self.graph, es.state[spec.state_key]))
+                for j, q in sorted(pending.items()):
+                    q.result = spec.post(lanes[:, j])
+                    q.iterations = it
+                    q.done = True
+                    yield q

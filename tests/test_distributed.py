@@ -201,6 +201,56 @@ def test_distributed_new_semiring_apps_match_host():
     """)
 
 
+def test_distributed_lane_frontiers_match_host():
+    """K-lane multi-source program through the block-sharded distributed
+    step: the (P, Vp, L) state shards on dim 0 like everything else, and
+    the fixed point, iteration count and message counters are bit-exact
+    against the host K-lane run (which itself equals K single runs —
+    tests/test_multi.py)."""
+    run_sub("""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.launch.mesh import set_mesh
+    from jax.sharding import NamedSharding
+    from repro.core import build_partitioned_graph, bfs_partition, run_hybrid
+    from repro.core.apps import MultiSourceMonotone
+    from repro.core.distributed import make_dist_hybrid_step, _es_specs, shard0_specs
+    from repro.core.engine_hybrid import init_hybrid
+    from repro.core.runtime import quiescent
+    from repro.data.graphs import grid_graph
+
+    edges, w, n = grid_graph(6, 40, seed=3)
+    part = bfs_partition(edges, n, 8, seed=1)
+    graph = build_partitioned_graph(edges, n, part, weights=w, edge_blocks=8)
+    prog = MultiSourceMonotone([0, 7, n - 1, 120], semiring='min_add')
+
+    es_ref, iters_ref = run_hybrid(graph, prog)
+    ref = np.asarray(es_ref.state['val'])
+
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    axes = ('data', 'model')
+    step = make_dist_hybrid_step(prog, mesh, axes=axes)
+    es = init_hybrid(graph, prog, None)
+    gs = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      shard0_specs(graph, axes))
+    ess = jax.tree.map(lambda s: NamedSharding(mesh, s), _es_specs(es, axes))
+    graph_d = jax.device_put(graph, gs)
+    es_d = jax.device_put(es, ess)
+    with set_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=(gs, ess))
+        iters = 0
+        while not bool(quiescent(prog, es_d)) and iters < 500:
+            es_d = jitted(graph_d, es_d)
+            iters += 1
+    got = np.asarray(jax.device_get(es_d.state['val']))
+    assert got.shape == ref.shape and got.ndim == 3
+    np.testing.assert_array_equal(got, ref)
+    assert iters == iters_ref, (iters, iters_ref)
+    assert int(es_d.counters.net_messages) == int(es_ref.counters.net_messages)
+    print('DIST LANES OK', iters, got.shape)
+    """)
+
+
 def _dist_ft_body(app: str) -> str:
     """Kill-and-resume on the shard_map path: run the FT driver with the
     distributed step + NamedShardings, interrupt after 3 iterations,

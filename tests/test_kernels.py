@@ -271,3 +271,107 @@ def test_fused_step_generalized_property(r, k, n, semiring, seed):
                               semiring=semiring)
     for g, w in zip(got, want):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# lane frontiers (SpMM): an (N, L) frontier is L queries in one dispatch
+# ---------------------------------------------------------------------------
+
+def _assert_kernel_eq(got, want, semiring):
+    """Monotone (⊕ = min/max) is order-insensitive, so bit-exact; add_mul
+    sums float products, so the kernel's fold and the oracle's jnp.sum may
+    round differently."""
+    if semiring in MONOTONE:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.integers(1, 64), k=st.integers(1, 96), n=st.integers(1, 128),
+       lanes=st.integers(1, 5), semiring=st.sampled_from(SEMIRINGS),
+       seed=st.integers(0, 2**16))
+def test_ell_spmm_lanes_property(r, k, n, lanes, semiring, seed):
+    """(N, L) frontier: matches the oracle, and every lane column is
+    bit-identical to dispatching that lane's (N,) frontier alone (the
+    micro-batching parity contract — the kernel folds the slice axis in
+    the same order with or without a lane axis)."""
+    rng = np.random.RandomState(seed)
+    idx, val, msk, _ = _random_ell(rng, r, k, n)
+    x = jnp.asarray(rng.uniform(0.0, 3.0, size=(n, lanes)).astype(np.float32))
+    got = ell_spmv(idx, val, msk, x, semiring=semiring)
+    assert got.shape == (r, lanes)
+    _assert_kernel_eq(got, ell_spmv_ref(idx, val, msk, x, semiring=semiring),
+                      semiring)
+    for j in range(lanes):
+        single = ell_spmv(idx, val, msk, x[:, j], semiring=semiring)
+        np.testing.assert_array_equal(np.asarray(got[:, j]),
+                                      np.asarray(single))
+
+
+@pytest.mark.parametrize("semiring", MONOTONE)
+@pytest.mark.parametrize("lanes", [1, 3])
+def test_fused_min_step_lanes(semiring, lanes):
+    """Fused monotone pseudo-superstep with lane frontiers: oracle parity
+    plus per-lane bit-identity to single-lane dispatch, including per-lane
+    ``extra`` spill operands and per-lane send' decisions."""
+    r, k, n = 96, 24, 96
+    rng = np.random.RandomState(11)
+    idx, _, msk, _, _, _ = _random_monotone_problem(rng, r, k, n, semiring)
+    lo, hi = (1.0, 3.0) if semiring == "min_mul" else (0.1, 2.0)
+    val = jnp.asarray(rng.uniform(lo, hi, size=(r, k)).astype(np.float32))
+    ident = np.inf if semiring.startswith("min") else -np.inf
+    sign = -1.0 if semiring == "max_add" else 1.0
+    x = jnp.asarray(np.where(rng.uniform(size=(n, lanes)) < 0.8,
+                             sign * rng.uniform(0.1, 10, size=(n, lanes)),
+                             ident).astype(np.float32))
+    send = jnp.asarray(rng.uniform(size=(n, lanes)) < 0.5)
+    xrow = jnp.asarray((sign * rng.uniform(0.1, 10, size=(r, lanes)))
+                       .astype(np.float32))
+    extra = jnp.asarray(np.where(rng.uniform(size=(r, lanes)) < 0.3,
+                                 sign * rng.uniform(0.1, 1, size=(r, lanes)),
+                                 ident).astype(np.float32))
+    got = fused_min_step(idx, val, msk, x, send, xrow, extra,
+                         semiring=semiring)
+    want = fused_min_step_ref(idx, val, msk, x, send, xrow, extra,
+                              semiring=semiring)
+    for g, w in zip(got, want):
+        assert g.shape == (r, lanes)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    for j in range(lanes):
+        singles = fused_min_step(idx, val, msk, x[:, j], send[:, j],
+                                 xrow[:, j], extra[:, j], semiring=semiring)
+        for g, s in zip(got, singles):
+            np.testing.assert_array_equal(np.asarray(g[:, j]), np.asarray(s))
+
+
+@pytest.mark.parametrize("lanes", [1, 3])
+def test_fused_pr_step_lanes(lanes):
+    """Fused PageRank pseudo-superstep with lane frontiers: oracle parity
+    (allclose — additive folds) AND bit-identical lane columns vs
+    single-lane dispatch (exact — the kernel's sequential slice-axis fold
+    reduces each lane in single-frontier order)."""
+    r, k, n = 96, 24, 96
+    rng = np.random.RandomState(13)
+    idx = jnp.asarray(rng.randint(0, n, size=(r, k)).astype(np.int32))
+    val = jnp.asarray(rng.uniform(0, 1, size=(r, k)).astype(np.float32))
+    msk = jnp.asarray(rng.uniform(size=(r, k)) < 0.4)
+    delta = jnp.asarray(rng.uniform(0, 0.1, size=(n, lanes))
+                        .astype(np.float32))
+    send = jnp.asarray(rng.uniform(size=(n, lanes)) < 0.5)
+    rank = jnp.asarray(rng.uniform(0, 2, size=(r, lanes)).astype(np.float32))
+    extra = jnp.asarray(rng.uniform(0, 0.01, size=(r, lanes))
+                        .astype(np.float32))
+    got = fused_pr_step(idx, val, msk, delta, send, rank, extra, tol=1e-3)
+    want = fused_pr_step_ref(idx, val, msk, delta, send, rank, extra,
+                             tol=1e-3)
+    for g, w in zip(got, want):
+        assert g.shape == (r, lanes)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+    for j in range(lanes):
+        singles = fused_pr_step(idx, val, msk, delta[:, j], send[:, j],
+                                rank[:, j], extra[:, j], tol=1e-3)
+        for g, s in zip(got, singles):
+            np.testing.assert_array_equal(np.asarray(g[:, j]), np.asarray(s))

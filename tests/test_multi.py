@@ -1,0 +1,94 @@
+"""K-lane multi-query programs: lane j of one K-lane run must be
+bit-identical to the corresponding single-source run (the contract the
+serving layer's micro-batching rests on).
+
+Kept hypothesis-free so the whole file runs in minimal environments; the
+property-test sweep over kernel shapes lives in test_kernels.py.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import run_hybrid
+from repro.core.apps import (MultiSourceMonotone, PersonalizedPageRank, SSSP,
+                             WidestPath, reachable)
+from repro.core.apps.pagerank import pagerank_edge_weights
+from repro.core.graph import build_partitioned_graph, unpack_vertex
+from repro.data.graphs import rmat_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges, n = rmat_graph(128, avg_degree=5, seed=3)
+    w = (np.abs(np.sin(np.arange(len(edges)))) * 0.9 + 0.05).astype(
+        np.float32)
+    return build_partitioned_graph(edges, n, "hash", weights=w,
+                                   n_partitions=4), n
+
+
+def test_multisource_sssp_lanes_bitexact_fused(graph):
+    """Staggered sources (hub, tail vertex, mid) through the fused kernel
+    path, sources passed per-run via vdata (the serving contract): every
+    lane equals the single-source SSSP fixed point bit-for-bit, even
+    though the lanes converge at different iterations."""
+    g, n = graph
+    srcs = [0, n - 1, 17]
+    prog = MultiSourceMonotone(lanes=len(srcs), semiring="min_add")
+    es, _ = run_hybrid(g, prog, vdata={"sources": jnp.asarray(srcs,
+                                                              jnp.int32)})
+    lanes = np.asarray(unpack_vertex(g, es.state["val"]))
+    assert lanes.shape == (n, len(srcs))
+    for j, s in enumerate(srcs):
+        es1, _ = run_hybrid(g, SSSP(source=s))
+        np.testing.assert_array_equal(
+            lanes[:, j], np.asarray(unpack_vertex(g, es1.state["dist"])))
+    # reachability is a view of the same fixed point
+    assert reachable(lanes).dtype == bool
+    assert bool(reachable(lanes)[srcs[0], 0])
+
+
+def test_multisource_max_min_lanes_bitexact_dense(graph):
+    """max_min (widest path) lanes on the generic dense path (use_ell=False)
+    match single-source WidestPath runs — the lane axis is engine-wide,
+    not a kernel-only feature."""
+    g, n = graph
+    srcs = [0, 42]
+    prog = MultiSourceMonotone(srcs, semiring="max_min")
+    es, _ = run_hybrid(g, prog, use_ell=False)
+    lanes = np.asarray(unpack_vertex(g, es.state["val"]))
+    for j, s in enumerate(srcs):
+        es1, _ = run_hybrid(g, WidestPath(source=s), use_ell=False)
+        np.testing.assert_array_equal(
+            lanes[:, j], np.asarray(unpack_vertex(g, es1.state["cap"])))
+
+
+def test_ppr_lanes_bitexact_fused():
+    """Personalized PageRank lanes through the fused pr_step kernel are
+    bit-identical to single-seed runs (the kernel folds the slice axis
+    sequentially, so a lane column reduces in the same order as the
+    single-frontier dispatch)."""
+    edges, n = rmat_graph(128, avg_degree=5, seed=3)
+    w = pagerank_edge_weights(edges, n)
+    g = build_partitioned_graph(edges, n, "hash", weights=w, n_partitions=4)
+    seeds = [7, 90]
+    es, _ = run_hybrid(g, PersonalizedPageRank(seeds))
+    lanes = np.asarray(unpack_vertex(g, es.state["rank"]))
+    for j, s in enumerate(seeds):
+        es1, _ = run_hybrid(g, PersonalizedPageRank([s]))
+        np.testing.assert_array_equal(
+            lanes[:, j], np.asarray(unpack_vertex(g, es1.state["rank"]))[:, 0])
+    # all teleport mass sits at the lane's own seed
+    assert lanes[seeds[0], 0] > 0 and lanes[seeds[1], 1] > 0
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        MultiSourceMonotone([0], semiring="add_mul")   # not monotone
+    with pytest.raises(ValueError):
+        MultiSourceMonotone()                          # no sources, no lanes
+    with pytest.raises(ValueError):
+        PersonalizedPageRank()
+    assert MultiSourceMonotone(lanes=4).lanes == 4
+    assert PersonalizedPageRank(lanes=2).channels[0].lanes == 2

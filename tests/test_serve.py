@@ -1,0 +1,130 @@
+"""Graph-query serving layer: micro-batching, lane padding, compile-cache
+behavior, monotonic request ids, straggler re-dispatch, streaming."""
+
+import numpy as np
+import pytest
+
+from repro.core import run_hybrid
+from repro.core.apps import SSSP
+from repro.core.graph import build_partitioned_graph, unpack_vertex
+from repro.data.graphs import rmat_graph
+from repro.ft.straggler import StragglerMitigator
+from repro.serve import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges, n = rmat_graph(128, avg_degree=5, seed=3)
+    w = (np.abs(np.sin(np.arange(len(edges)))) * 0.9 + 0.05).astype(
+        np.float32)
+    return build_partitioned_graph(edges, n, "hash", weights=w,
+                                   n_partitions=4), n
+
+
+@pytest.fixture(scope="module")
+def engine(graph):
+    # single lane width: every batch pads to 4 lanes, so the whole module
+    # shares ONE compiled (sssp, 4) executable
+    return ServeEngine(graph[0], lane_widths=(4,))
+
+
+def test_request_ids_monotonic_across_rounds(engine, graph):
+    """Regression: ids came from len(queue), so they collided after the
+    queue drained and refilled.  Two submit/run rounds must hand out
+    strictly increasing ids and both rounds must answer correctly."""
+    g, n = graph
+    r1 = [engine.submit("sssp", s) for s in (0, 17, 99)]
+    done1 = engine.run()
+    r2 = [engine.submit("sssp", s) for s in (5, 0)]
+    done2 = engine.run()
+    ids = [q.request_id for q in r1 + r2]
+    assert ids == sorted(ids) and len(set(ids)) == len(ids)
+    assert all(q.done for q in done1 + done2)
+    # both rounds produce the single-source fixed points
+    es, _ = run_hybrid(g, SSSP(source=0))
+    ref0 = np.asarray(unpack_vertex(g, es.state["dist"]))
+    np.testing.assert_array_equal(r1[0].result, ref0)
+    np.testing.assert_array_equal(r2[1].result, ref0)
+
+
+def test_one_compile_per_program_width(engine, graph):
+    """Batches of 1..4 queries all pad to the fixed lane width, so every
+    dispatch so far reused one (program, K) compile."""
+    q = engine.submit("sssp", 42)
+    engine.run()
+    assert q.done
+    assert sum(engine.trace_counts.values()) == 1, engine.trace_counts
+    assert list(engine.trace_counts) == [(("sssp", ()), 4)]
+
+
+def test_padded_solo_query_matches_batched(engine):
+    """A solo query (padded 1 -> 4 lanes) returns the same answer as the
+    same source served inside a full batch."""
+    a = engine.submit("sssp", 17)
+    engine.run()
+    batch = [engine.submit("sssp", s) for s in (3, 17, 60, 2)]
+    engine.run()
+    np.testing.assert_array_equal(a.result, batch[1].result)
+
+
+def test_mixed_programs_split_batches(engine):
+    """sssp and reach queries never share a lane dispatch; reach is the
+    boolean view of the sssp fixed point."""
+    d = engine.submit("sssp", 0)
+    r = engine.submit("reach", 0)
+    engine.run()
+    assert r.result.dtype == bool
+    np.testing.assert_array_equal(r.result, np.isfinite(d.result))
+
+
+def test_stream_yields_lanes_as_they_converge(engine, graph):
+    """Host-stepped mode: queries complete at their own lane's convergence
+    iteration, not the batch's; results match full-run dispatch."""
+    g, n = graph
+    qs = [engine.submit("sssp", s) for s in (0, n - 1, 17)]
+    got = list(engine.stream())
+    assert {q.request_id for q in got} == {q.request_id for q in qs}
+    iters = [q.iterations for q in got]
+    assert iters == sorted(iters)            # yielded in convergence order
+    for q in got:
+        es, _ = run_hybrid(g, SSSP(source=q.source))
+        np.testing.assert_array_equal(
+            q.result, np.asarray(unpack_vertex(g, es.state["dist"])))
+
+
+def test_unknown_program_rejected(engine):
+    with pytest.raises(KeyError):
+        engine.submit("pagerankk", 0)
+
+
+def test_straggler_redispatch_and_duplicate_suppression(graph):
+    """Deadline re-dispatch state machine with a fake clock: attempt 0
+    straggles past the deadline, attempt 1's result wins, and a late
+    completion of the same work id is suppressed."""
+    g, _ = graph
+    t = [0.0]
+    sentinel = object()
+    attempts = []
+
+    def dispatch(eng, key, k, sources, attempt):
+        attempts.append(attempt)
+        if attempt == 0:
+            t[0] = 10.0                      # blow through the deadline
+            return None
+        return sentinel
+
+    mit = StragglerMitigator(clock=lambda: t[0], min_deadline=1.0)
+    eng = ServeEngine(g, straggler=mit, dispatch_fn=dispatch)
+    out = eng._dispatch_mitigated(("sssp", ()), 4, None)
+    assert out is sentinel and attempts == [0, 1]
+    assert mit.redispatches == 1
+    assert mit.complete(0) is False          # first result already won
+    assert mit.duplicates_suppressed == 1
+
+
+def test_straggler_no_result_before_deadline_raises(graph):
+    g, _ = graph
+    mit = StragglerMitigator(clock=lambda: 0.0, min_deadline=100.0)
+    eng = ServeEngine(g, straggler=mit, dispatch_fn=lambda *a: None)
+    with pytest.raises(RuntimeError, match="deadline"):
+        eng._dispatch_mitigated(("sssp", ()), 4, None)

@@ -201,42 +201,8 @@ def test_prefetcher():
 
 
 # ---------------------------------------------------------------------------
-# serving
+# serving moved: the graph-query ServeEngine is covered in test_serve.py
 # ---------------------------------------------------------------------------
-
-def test_serve_engine_batched_greedy():
-    from repro.serve.engine import ServeEngine
-    cfg, api, params = small_setup()
-    eng = ServeEngine(cfg, api, params, max_batch=3, max_len=64)
-    rng = np.random.RandomState(0)
-    reqs = [eng.submit(rng.randint(0, cfg.vocab, size=(l,)), max_new=6)
-            for l in (5, 9, 3, 7)]     # ragged prompts, 2 batches
-    done = eng.run()
-    assert len(done) == 4
-    for r in done:
-        assert len(r.result) == 6
-        assert all(0 <= t < cfg.vocab for t in r.result)
-
-
-def test_serve_left_padding_matches_unpadded():
-    """A left-padded slot must produce the same greedy tokens as a solo
-    unpadded run — proves the kv_start masking & positions are exact."""
-    from repro.serve.engine import ServeEngine
-    cfg, api, params = small_setup()
-    rng = np.random.RandomState(1)
-    prompt = rng.randint(0, cfg.vocab, size=(5,))
-    long_prompt = rng.randint(0, cfg.vocab, size=(11,))
-
-    solo = ServeEngine(cfg, api, params, max_batch=1, max_len=64)
-    solo.submit(prompt, max_new=5)
-    r_solo = solo.run()[0]
-
-    both = ServeEngine(cfg, api, params, max_batch=2, max_len=64)
-    both.submit(prompt, max_new=5)          # will be left-padded by 6
-    both.submit(long_prompt, max_new=5)
-    r_both = both.run()[0]
-    assert r_solo.result == r_both.result, (r_solo.result, r_both.result)
-
 
 # ---------------------------------------------------------------------------
 # fault tolerance
