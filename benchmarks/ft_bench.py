@@ -27,9 +27,18 @@ worker kill whose :class:`RecoveryEvent` yields ``recovery_restore_s``,
 ``iterations_lost``, and ``reads_latest_only`` (the restore read one
 durable checkpoint, never the history — gated).
 
+``klane_resume`` — the serving layer's K-lane kill-and-resume on a K=16
+SSSP batch over a ~10^6-edge R-MAT graph: the batch is killed at roughly
+half lane convergence, then (a) resumed from its ``(program, K,
+sources-digest)`` checkpoint family (converged lanes dropped from the
+restored frontier) and (b) recomputed from scratch, both through the same
+warmed checkpointing executor.  Gated: resume wall <= 0.5x recompute wall,
+per-lane results bit-identical, and at least one converged lane actually
+dropped at the resume point.
+
 Emits ``BENCH_ft.json`` (committed, trajectory-tracked); gates live in
 ``benchmarks/gates.json`` table ``ft``.  ``--fast`` drops the gated
-10^6-edge workload (CI runs the table full-size, it is seconds of work).
+10^6-edge workloads (CI runs the table full-size, it is seconds of work).
 
     PYTHONPATH=src python -m benchmarks.run --table ft [--fast]
     PYTHONPATH=src python -m benchmarks.ft_bench [--fast] [--out PATH]
@@ -204,6 +213,89 @@ def bench_recovery() -> dict:
     }
 
 
+def bench_klane_resume(n_vertices: int = 125_000, lanes: int = 16) -> dict:
+    """Kill/resume a half-converged K-lane serving batch vs recompute."""
+    import numpy as np
+    from repro.core import build_partitioned_graph, hash_partition
+    from repro.data.graphs import rmat_graph
+    from repro.serve import ServeEngine
+
+    edges, n = rmat_graph(n_vertices, avg_degree=AVG_DEGREE, seed=5)
+    rng = np.random.RandomState(7)
+    w = rng.uniform(0.05, 1.0, len(edges)).astype(np.float32)
+    part = hash_partition(n, N_PARTITIONS, seed=0)
+    # dense delivery for the same reason as the overhead rows: interpret-mode
+    # Pallas would measure the interpreter, not the resume machinery
+    graph = build_partitioned_graph(edges, n, part, weights=w,
+                                    build_ell=False)
+    srcs = [int(s) for s in rng.choice(n, size=lanes, replace=False)]
+
+    # Per-lane convergence iterations (untimed probe).  Kill one iteration
+    # short of the last lane's convergence: on this fixture roughly half
+    # the lanes (9/16, gated) have converged by the latest durable
+    # checkpoint, so the resume both skips most of the redone iterations
+    # AND exercises the converged-lane frontier drop.  (On the dense
+    # delivery path an iteration costs O(E) regardless of frontier size,
+    # so resume/recompute is essentially iterations-rerun/iterations.)
+    probe = ServeEngine(graph, lane_widths=(lanes,), use_ell=False)
+    for s in srcs:
+        probe.submit("sssp", s)
+    conv = sorted(q.iterations for q in probe.stream())
+    kill_at = conv[-1] - 1               # durable ckpt lands at kill_at - 1
+
+    with tempfile.TemporaryDirectory() as d:
+        armed = [True]
+
+        def killer(eng, prog, K, iteration):
+            if armed[0] and iteration == kill_at:
+                raise KeyboardInterrupt("injected kill")
+
+        eng = ServeEngine(graph, lane_widths=(lanes,), use_ell=False,
+                          ckpt_dir=os.path.join(d, "serve"),
+                          on_iteration=killer)
+        # warm run + kill: pays the (sssp, K) compile, leaves the batch's
+        # checkpoint family durable at iteration kill_at - 1
+        for s in srcs:
+            eng.submit("sssp", s)
+        try:
+            eng.run()
+            raise RuntimeError("injected kill did not fire")
+        except KeyboardInterrupt:
+            pass
+        armed[0] = False
+
+        # (a) resume from the checkpoint family (deleted on completion)
+        qs_resume = [eng.submit("sssp", s) for s in srcs]
+        t0 = time.perf_counter()
+        eng.run()
+        wall_resume = time.perf_counter() - t0
+        [ev] = eng.resume_events
+
+        # (b) recompute from scratch through the same warmed engine,
+        # still checkpointing every iteration (apples-to-apples)
+        qs_re = [eng.submit("sssp", s) for s in srcs]
+        t0 = time.perf_counter()
+        eng.run()
+        wall_recompute = time.perf_counter() - t0
+
+    bitexact = all(np.array_equal(a.result, b.result)
+                   for a, b in zip(qs_resume, qs_re))
+    return {
+        "n_edges": len(edges),
+        "lanes": lanes,
+        "iterations": int(qs_re[0].iterations),
+        "conv_iterations": conv,
+        "resumed_at_iteration": ev.iteration,
+        "lanes_dropped": sum(ev.lanes_done),
+        "bitexact": int(bitexact),
+        "wall_resume_s": round(wall_resume, 4),
+        "wall_recompute_s": round(wall_recompute, 4),
+        "ratios": {
+            "resume_over_recompute": round(wall_resume / wall_recompute, 4),
+        },
+    }
+
+
 def bench_ft(fast: bool = False, out_path: str = DEFAULT_OUT) -> dict:
     results = {"workloads": {}}
     for name, n_vertices in WORKLOADS.items():
@@ -211,6 +303,8 @@ def bench_ft(fast: bool = False, out_path: str = DEFAULT_OUT) -> dict:
             continue            # gated row: CI runs the table full-size
         results["workloads"][name] = bench_ckpt_overhead(name, n_vertices)
     results["workloads"]["recovery_sssp"] = bench_recovery()
+    if not fast:                # gated 10^6-edge row, like pagerank_1e6
+        results["workloads"]["klane_resume"] = bench_klane_resume()
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -225,6 +319,13 @@ def csv_rows(results: dict) -> list[str]:
                        f"overhead_sync={rec['ratios']['overhead_sync']};"
                        f"ckpt_mb={rec['ckpt_mb']}")
             rows.append(f"ft/{name},{rec['per_iter_none_us']:.0f},{derived}")
+        elif "wall_recompute_s" in rec:
+            derived = (f"resume_over_recompute="
+                       f"{rec['ratios']['resume_over_recompute']};"
+                       f"bitexact={rec['bitexact']};"
+                       f"lanes_dropped={rec['lanes_dropped']}")
+            rows.append(f"ft/{name},{rec['wall_resume_s'] * 1e6:.0f},"
+                        f"{derived}")
         else:
             derived = (f"exact_resume={rec['exact_resume']};"
                        f"reads_latest_only={rec['reads_latest_only']};"
@@ -237,7 +338,8 @@ def csv_rows(results: dict) -> list[str]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
-                    help="drop the gated 10^6-edge overhead workload")
+                    help="drop the gated 10^6-edge workloads "
+                         "(pagerank_1e6, klane_resume)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
     results = bench_ft(fast=args.fast, out_path=args.out)

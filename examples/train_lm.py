@@ -4,8 +4,8 @@ steps on the synthetic pipeline, with checkpointing and restart.
     PYTHONPATH=src python examples/train_lm.py --steps 300
 
 (~100M model: 12 x 512 transformer with a 32k vocab; on this CPU container a
-step takes O(seconds) — the same driver scales to the production mesh via
-launch/train.py.)
+step takes O(seconds) — the same step function shards onto the production
+mesh with the specs from repro.sharding.rules.)
 """
 
 import argparse

@@ -36,13 +36,26 @@ compiled (program, K) executable serves every source set.
 
 from __future__ import annotations
 
+import hashlib
+
+import numpy as np
+
 import jax.numpy as jnp
 
 from repro.core.vertex_program import Channel, StepInfo, VertexProgram
 from repro.kernels.common import MONOTONE_SEMIRINGS, SEMIRINGS, \
     semiring_improves
 
-__all__ = ["MultiSourceMonotone", "PersonalizedPageRank", "reachable"]
+__all__ = ["MultiSourceMonotone", "PersonalizedPageRank", "reachable",
+           "sources_digest"]
+
+
+def sources_digest(sources) -> str:
+    """Content digest of a (K,) source/seed vector — the lane-batch half
+    of the ``(program, K, sources)`` checkpoint key.  Order-sensitive on
+    purpose: lane j of a checkpoint is only valid for lane j's source."""
+    a = np.ascontiguousarray(np.asarray(sources, dtype=np.int64))
+    return hashlib.sha256(a.tobytes()).hexdigest()[:16]
 
 # natural "the path starts here" value per monotone semiring: the ⊗-identity
 # (so the first edge's message is just the edge value), except max_min whose

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.engine_hybrid import hybrid_iteration
+from repro.exec.iteration import hybrid_iteration
 from repro.core.graph import PartitionedGraph
 from repro.core.runtime import Counters, EngineState
 from repro.core.vertex_program import VertexProgram

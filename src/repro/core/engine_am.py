@@ -12,85 +12,36 @@ ordered half-blocks A|B: A computes first, its in-partition messages are
 delivered in memory, then B computes — every vertex still runs Compute() at
 most once per superstep (Grace's bound), and forward-crossing messages land
 same-superstep.  Cross-partition messages keep the superstep-latency of Hama.
+
+This module is configuration only: the superstep body lives in
+:mod:`repro.exec.iteration` and the loop in :mod:`repro.exec.driver` —
+``run_am`` is the executor under :func:`repro.exec.policy.am_policy`.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Any
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.graph import PartitionedGraph
-from repro.core.runtime import (EngineState, apply_phase, deliver,
-                                ell_channels, exchange, init_state, quiescent)
-from repro.core.vertex_program import StepInfo, VertexProgram
+from repro.core.runtime import EngineState
+from repro.core.vertex_program import VertexProgram
+from repro.exec.driver import run_engine
+from repro.exec.iteration import am_superstep
+from repro.exec.policy import am_policy
 
 __all__ = ["am_superstep", "run_am"]
 
 
-def am_superstep(
-    graph: PartitionedGraph,
-    prog: VertexProgram,
-    es: EngineState,
-    vdata: Any,
-    gather_table: Callable | None = None,
-    use_ell: bool = True,
-    collect_metrics: bool = True,
-) -> EngineState:
-    es = exchange(graph, es, gather_table)
-    es = dataclasses.replace(
-        es, export_out=prog.export_identity(es.export_out),
-        export_send=jnp.zeros_like(es.export_send))
-    if use_ell and ell_channels(graph, prog, es.out, es.send):
-        # split so each half rides its ELL layout (groups never mix local
-        # and remote edges, so counters are unchanged); programs with no
-        # kernel-eligible channel keep the single 'all' delivery
-        es, _ = deliver(graph, prog, es, edges="remote", use_ell=True,
-                        collect_metrics=collect_metrics)
-        es, _ = deliver(graph, prog, es, edges="local", use_ell=True,
-                        collect_metrics=collect_metrics)
-    else:
-        es, _ = deliver(graph, prog, es, edges="all",
-                        collect_metrics=collect_metrics)
-
-    slot = jnp.arange(graph.vp)[None, :]
-    half_a = jnp.logical_and(graph.vertex_mask, slot < graph.vp // 2)
-    half_b = jnp.logical_and(graph.vertex_mask, jnp.logical_not(slot < graph.vp // 2))
-
-    info = StepInfo(superstep=es.counters.iterations + 1, pseudo_step=0,
-                    phase="superstep")
-    es = apply_phase(graph, prog, es, half_a, info, vdata)
-    es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
-                    collect_metrics=collect_metrics)   # A's messages, in memory
-    es = apply_phase(graph, prog, es, half_b, info, vdata)
-    # es.send is now B's senders only: A's in-partition messages were already
-    # delivered above (delivering them again next superstep would double-count
-    # for sum channels); A's cross-partition messages travel via the export
-    # buffer, which accumulated A's sends in its apply_phase.
-
-    c = es.counters
-    return dataclasses.replace(
-        es, counters=dataclasses.replace(
-            c, iterations=c.iterations + 1,
-            pseudo_supersteps=c.pseudo_supersteps + 1))
-
-
 def run_am(
-    graph: PartitionedGraph,
+    graph,
     prog: VertexProgram,
     vdata: Any = None,
     max_iters: int = 100_000,
     use_ell: bool = True,
     collect_metrics: bool = True,
 ) -> tuple[EngineState, int]:
-    step = jax.jit(partial(am_superstep, graph, prog, vdata=vdata,
-                           use_ell=use_ell, collect_metrics=collect_metrics))
-    es = init_state(graph, prog, vdata)
-    for _ in range(max_iters):
-        if bool(quiescent(prog, es)):
-            break
-        es = step(es=es)
-    return es, int(es.counters.iterations)
+    """Host-driven loop: init superstep + AM supersteps until quiescence."""
+    ctx = run_engine(graph, prog,
+                     am_policy(use_ell=use_ell,
+                               collect_metrics=collect_metrics),
+                     vdata, max_iters=max_iters)
+    return ctx.es, ctx.iteration

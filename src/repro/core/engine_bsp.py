@@ -7,70 +7,27 @@ O(#supersteps) — the inefficiency GraphHP attacks.
 Message accounting follows the paper's Hama baseline: *all* messages travel
 through the distributed mechanism (RPC "by default", §4.1), so M counts both
 same-partition and cross-partition combined groups.
+
+This module is configuration only: the superstep body lives in
+:mod:`repro.exec.iteration` and the loop in :mod:`repro.exec.driver` —
+``run_bsp`` is the executor under :func:`repro.exec.policy.bsp_policy`.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Any
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.graph import PartitionedGraph
-from repro.core.runtime import (EngineState, apply_phase, deliver,
-                                ell_channels, exchange, init_state, quiescent)
-from repro.core.vertex_program import StepInfo, VertexProgram
+from repro.core.runtime import EngineState
+from repro.core.vertex_program import VertexProgram
+from repro.exec.driver import run_engine
+from repro.exec.iteration import bsp_superstep
+from repro.exec.policy import bsp_policy
 
 __all__ = ["bsp_superstep", "run_bsp"]
 
 
-def _reset_export(prog: VertexProgram, es: EngineState) -> EngineState:
-    return dataclasses.replace(
-        es, export_out=prog.export_identity(es.export_out),
-        export_send=jnp.zeros_like(es.export_send))
-
-
-def bsp_superstep(
-    graph: PartitionedGraph,
-    prog: VertexProgram,
-    es: EngineState,
-    vdata: Any,
-    gather_table: Callable | None = None,
-    use_ell: bool = True,
-    collect_metrics: bool = True,
-) -> EngineState:
-    """One Hama superstep: exchange -> deliver(all) -> Compute(all).
-
-    With ``use_ell`` (the default) the delivery splits into remote + local
-    halves so each half can dispatch to its Pallas ELL layout.  Combine
-    groups never mix local and remote edges, so counters are unchanged;
-    float 'sum' inboxes may differ in the last bit (different reduction
-    order).
-    """
-    es = exchange(graph, es, gather_table)
-    es = _reset_export(prog, es)
-    if use_ell and ell_channels(graph, prog, es.out, es.send):
-        es, _ = deliver(graph, prog, es, edges="remote", use_ell=True,
-                        collect_metrics=collect_metrics)
-        es, _ = deliver(graph, prog, es, edges="local", use_ell=True,
-                        collect_metrics=collect_metrics)
-    else:
-        es, _ = deliver(graph, prog, es, edges="all",
-                        collect_metrics=collect_metrics)
-    info = StepInfo(superstep=es.counters.iterations + 1, pseudo_step=0,
-                    phase="superstep")
-    es = apply_phase(graph, prog, es, graph.vertex_mask, info, vdata)
-    c = es.counters
-    return dataclasses.replace(
-        es, counters=dataclasses.replace(
-            c, iterations=c.iterations + 1,
-            pseudo_supersteps=c.pseudo_supersteps + 1))
-
-
 def run_bsp(
-    graph: PartitionedGraph,
+    graph,
     prog: VertexProgram,
     vdata: Any = None,
     max_iters: int = 100_000,
@@ -78,11 +35,8 @@ def run_bsp(
     collect_metrics: bool = True,
 ) -> tuple[EngineState, int]:
     """Host-driven loop: init superstep + supersteps until quiescence."""
-    step = jax.jit(partial(bsp_superstep, graph, prog, vdata=vdata,
-                           use_ell=use_ell, collect_metrics=collect_metrics))
-    es = init_state(graph, prog, vdata)
-    for _ in range(max_iters):
-        if bool(quiescent(prog, es)):
-            break
-        es = step(es=es)
-    return es, int(es.counters.iterations)
+    ctx = run_engine(graph, prog,
+                     bsp_policy(use_ell=use_ell,
+                                collect_metrics=collect_metrics),
+                     vdata, max_iters=max_iters)
+    return ctx.es, ctx.iteration

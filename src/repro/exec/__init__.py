@@ -1,0 +1,23 @@
+"""The executor layer: one driver loop, engines as policies, checkpointing
+as a hook.  See docs/architecture.md for the dataflow."""
+
+from repro.exec.checkpoint import (CheckpointHook, checkpoint_key,
+                                   drop_converged_lanes, require_monotone,
+                                   validate_key)
+from repro.exec.driver import ExecContext, ExecHook, run_engine, while_engine
+from repro.exec.iteration import (am_superstep, bsp_superstep,
+                                  hybrid_iteration, init_hybrid)
+from repro.exec.local_phase import fused_local_kernel, fused_step_fn, \
+    local_phase
+from repro.exec.policy import (EnginePolicy, POLICIES, am_policy, bsp_policy,
+                               hybrid_policy, make_policy)
+
+__all__ = [
+    "run_engine", "while_engine", "ExecContext", "ExecHook",
+    "EnginePolicy", "POLICIES", "bsp_policy", "am_policy", "hybrid_policy",
+    "make_policy",
+    "bsp_superstep", "am_superstep", "hybrid_iteration", "init_hybrid",
+    "local_phase", "fused_step_fn", "fused_local_kernel",
+    "CheckpointHook", "checkpoint_key", "validate_key", "require_monotone",
+    "drop_converged_lanes",
+]

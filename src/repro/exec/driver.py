@@ -1,0 +1,148 @@
+"""The one superstep executor.
+
+Every run path in the reproduction — ``run_bsp``, ``run_am``,
+``run_hybrid``, the fault-tolerant driver, the serving layer and the
+shard_map distributed step — is this loop with a different
+:class:`~repro.exec.policy.EnginePolicy` and hook set:
+
+    init -> [ while not quiescent and iteration < max_iters: step ] -> done
+
+Two lowerings of the same loop:
+
+* :func:`run_engine` — host-driven; checks ``quiescent`` once per step and
+  calls :class:`ExecHook` methods between steps (checkpointing, failure
+  detection, per-lane convergence tracking, ...).  ``device_loop=True``
+  jits the whole loop instead (one host sync at the end) when no hook
+  needs to run between steps.
+* :func:`while_engine` — the bare ``lax.while_loop`` form, for embedding
+  inside a larger jitted computation (the serving layer's full-run path).
+
+The driver is the only place an outer iteration loop exists; the policy
+modules contain step bodies, the engine modules contain configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.runtime import EngineState, quiescent
+from repro.exec.policy import EnginePolicy
+
+__all__ = ["run_engine", "while_engine", "ExecContext", "ExecHook"]
+
+
+@dataclasses.dataclass
+class ExecContext:
+    """Mutable view of a run, handed to every hook.
+
+    ``iteration`` mirrors ``int(es.counters.iterations)`` after every step
+    and restore; ``tick`` counts host-loop trips (including trips a hook
+    turned into a restore instead of a step), so failure-detection clocks
+    can advance even when no progress is made.
+    """
+
+    graph: Any
+    prog: Any
+    policy: EnginePolicy | None
+    vdata: Any
+    es: EngineState
+    iteration: int = 0
+    tick: int = 0
+
+
+class ExecHook:
+    """Executor hook protocol — subclass and override what you need.
+
+    ``on_start`` runs once before the loop (a resume hook may replace
+    ``ctx.es`` / ``ctx.iteration`` here); ``before_step`` runs every tick
+    and may return ``False`` to skip this tick's step (e.g. a failure was
+    detected and the state was rolled back instead); ``after_step`` runs
+    after each completed step (checkpoint cadence lives here); ``on_exit``
+    runs once after the loop (flush/close).
+    """
+
+    def on_start(self, ctx: ExecContext) -> None: ...
+
+    def before_step(self, ctx: ExecContext) -> bool | None: ...
+
+    def after_step(self, ctx: ExecContext) -> None: ...
+
+    def on_exit(self, ctx: ExecContext) -> None: ...
+
+
+def while_engine(prog, step: Callable, es: EngineState, max_iters: int):
+    """The device-side loop body: iterate ``step`` (``es -> es``) until
+    quiescence or ``max_iters``, as a ``lax.while_loop``.  Not jitted here
+    — embed it in whatever jit owns the surrounding computation."""
+    def cond(e):
+        return jnp.logical_and(jnp.logical_not(quiescent(prog, e)),
+                               e.counters.iterations < max_iters)
+
+    return jax.lax.while_loop(cond, step, es)
+
+
+def run_engine(
+    graph,
+    prog,
+    policy: EnginePolicy,
+    vdata: Any = None,
+    *,
+    max_iters: int = 100_000,
+    hooks: Sequence[ExecHook] = (),
+    es: EngineState | None = None,
+    jit_step: Callable | None = None,
+    device_loop: bool = False,
+) -> ExecContext:
+    """Run ``policy`` to quiescence; returns the final :class:`ExecContext`
+    (``ctx.es``, ``ctx.iteration``).
+
+    ``es`` seeds the loop (default: ``policy.init``); ``jit_step``
+    overrides the jitted step ``es -> es`` (callers with a compile cache —
+    the serving layer — or a shard_map step pass their own).
+    ``device_loop=True`` lowers the whole loop into one jit; hooks then
+    only see ``on_start`` / ``on_exit`` (there is no host boundary between
+    steps), so it rejects hooks that override the per-step methods.
+    """
+    if es is None:
+        es = policy.init(graph, prog, vdata)
+    if jit_step is None:
+        jit_step = jax.jit(
+            lambda e: policy.step(graph, prog, e, vdata))
+
+    ctx = ExecContext(graph=graph, prog=prog, policy=policy, vdata=vdata,
+                      es=es, iteration=int(es.counters.iterations))
+    for h in hooks:
+        h.on_start(ctx)
+
+    if device_loop:
+        stepwise = [h for h in hooks
+                    if type(h).before_step is not ExecHook.before_step
+                    or type(h).after_step is not ExecHook.after_step]
+        if stepwise:
+            raise ValueError(
+                f"device_loop=True runs with no host boundary between "
+                f"steps; hooks {[type(h).__name__ for h in stepwise]} "
+                f"override before_step/after_step and need the host loop")
+        ctx.es = jax.jit(
+            lambda e: while_engine(prog, jit_step, e, max_iters))(ctx.es)
+        ctx.iteration = int(ctx.es.counters.iterations)
+    else:
+        while (ctx.iteration < max_iters
+               and not bool(quiescent(prog, ctx.es))):
+            ctx.tick += 1
+            # evaluate every hook (clocks must advance even when another
+            # hook consumes the tick), then skip the step if any said so
+            if False in [h.before_step(ctx) for h in hooks]:
+                continue            # a hook consumed this tick (restore)
+            ctx.es = jit_step(ctx.es)
+            ctx.iteration = int(ctx.es.counters.iterations)
+            for h in hooks:
+                h.after_step(ctx)
+
+    for h in hooks:
+        h.on_exit(ctx)
+    return ctx

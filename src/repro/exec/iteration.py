@@ -1,0 +1,184 @@
+"""The superstep bodies behind every run path.
+
+Each function here is one jittable unit of progress — a Hama superstep
+(:func:`bsp_superstep`), an AM-Hama superstep (:func:`am_superstep`), or a
+GraphHP global iteration (:func:`hybrid_iteration`) — expressed over the
+same runtime primitives (``exchange`` / ``deliver`` / ``apply_phase``) and
+differing only in *policy*: how often they synchronize and how far the
+local phase runs between synchronizations.  The executor
+(:mod:`repro.exec.driver`) iterates whichever body its
+:class:`~repro.exec.policy.EnginePolicy` names; nothing here loops to
+quiescence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.core.graph import PartitionedGraph
+from repro.core.runtime import (EngineState, apply_phase, deliver,
+                                ell_channels, exchange, init_state)
+from repro.core.vertex_program import StepInfo, VertexProgram
+from repro.exec.local_phase import local_phase
+
+__all__ = ["bsp_superstep", "am_superstep", "hybrid_iteration",
+           "init_hybrid", "reset_export"]
+
+
+def reset_export(prog: VertexProgram, es: EngineState) -> EngineState:
+    """Clear the export buffer after an exchange: values to the channel
+    identity, send flags off.  Every superstep body starts with this."""
+    return dataclasses.replace(
+        es, export_out=prog.export_identity(es.export_out),
+        export_send=jnp.zeros_like(es.export_send))
+
+
+def _deliver_split(graph, prog, es, use_ell, collect_metrics):
+    """Superstep delivery: remote + local halves when a channel can ride
+    the Pallas ELL layouts (combine groups never mix local and remote
+    edges, so counters are unchanged), else one dense 'all' pass."""
+    if use_ell and ell_channels(graph, prog, es.out, es.send):
+        es, _ = deliver(graph, prog, es, edges="remote", use_ell=True,
+                        collect_metrics=collect_metrics)
+        es, _ = deliver(graph, prog, es, edges="local", use_ell=True,
+                        collect_metrics=collect_metrics)
+    else:
+        es, _ = deliver(graph, prog, es, edges="all",
+                        collect_metrics=collect_metrics)
+    return es
+
+
+def bsp_superstep(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    es: EngineState,
+    vdata: Any,
+    gather_table: Callable | None = None,
+    use_ell: bool = True,
+    collect_metrics: bool = True,
+) -> EngineState:
+    """One Hama superstep: exchange -> deliver(all) -> Compute(all).
+
+    With ``use_ell`` (the default) the delivery splits into remote + local
+    halves so each half can dispatch to its Pallas ELL layout.  Combine
+    groups never mix local and remote edges, so counters are unchanged;
+    float 'sum' inboxes may differ in the last bit (different reduction
+    order).
+    """
+    es = exchange(graph, es, gather_table)
+    es = reset_export(prog, es)
+    es = _deliver_split(graph, prog, es, use_ell, collect_metrics)
+    info = StepInfo(superstep=es.counters.iterations + 1, pseudo_step=0,
+                    phase="superstep")
+    es = apply_phase(graph, prog, es, graph.vertex_mask, info, vdata)
+    c = es.counters
+    return dataclasses.replace(
+        es, counters=dataclasses.replace(
+            c, iterations=c.iterations + 1,
+            pseudo_supersteps=c.pseudo_supersteps + 1))
+
+
+def am_superstep(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    es: EngineState,
+    vdata: Any,
+    gather_table: Callable | None = None,
+    use_ell: bool = True,
+    collect_metrics: bool = True,
+) -> EngineState:
+    """One AM-Hama superstep: Hama's cadence + asynchronous in-memory
+    delivery between two ordered half-blocks A|B (the Grace mechanism,
+    vectorized — see :mod:`repro.core.engine_am`)."""
+    es = exchange(graph, es, gather_table)
+    es = reset_export(prog, es)
+    es = _deliver_split(graph, prog, es, use_ell, collect_metrics)
+
+    slot = jnp.arange(graph.vp)[None, :]
+    half_a = jnp.logical_and(graph.vertex_mask, slot < graph.vp // 2)
+    half_b = jnp.logical_and(graph.vertex_mask,
+                             jnp.logical_not(slot < graph.vp // 2))
+
+    info = StepInfo(superstep=es.counters.iterations + 1, pseudo_step=0,
+                    phase="superstep")
+    es = apply_phase(graph, prog, es, half_a, info, vdata)
+    es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
+                    collect_metrics=collect_metrics)   # A's messages, in memory
+    es = apply_phase(graph, prog, es, half_b, info, vdata)
+    # es.send is now B's senders only: A's in-partition messages were already
+    # delivered above (delivering them again next superstep would double-count
+    # for sum channels); A's cross-partition messages travel via the export
+    # buffer, which accumulated A's sends in its apply_phase.
+
+    c = es.counters
+    return dataclasses.replace(
+        es, counters=dataclasses.replace(
+            c, iterations=c.iterations + 1,
+            pseudo_supersteps=c.pseudo_supersteps + 1))
+
+
+def hybrid_iteration(
+    graph: PartitionedGraph,
+    prog: VertexProgram,
+    es: EngineState,
+    vdata: Any,
+    gather_table: Callable | None = None,
+    max_local_steps: int = 100_000,
+    wire_dtype=None,
+    use_ell: bool = True,
+    collect_metrics: bool = True,
+) -> EngineState:
+    """One global iteration: exchange -> global phase -> local phase.
+
+    ``use_ell`` (the default) routes remote- and local-phase delivery
+    through the Pallas ELL kernels for semiring-declared channels (and the
+    entire local phase through the fused `pr_step` / `min_step` kernels for
+    programs declaring ``fused_kernel``); ``collect_metrics=False`` drops
+    the paper's message accounting from the hot loop (counters other than
+    iterations/pseudo-supersteps stay put).
+    """
+    it = es.counters.iterations + 1
+
+    # -- 1. the one distributed exchange ---------------------------------
+    es = exchange(graph, es, gather_table, wire_dtype=wire_dtype)
+    es = reset_export(prog, es)
+    es, _ = deliver(graph, prog, es, edges="remote", use_ell=use_ell,
+                    collect_metrics=collect_metrics)
+
+    # -- 2. global phase: boundary vertices, exactly once -----------------
+    # (plus any program-declared global-only-active vertices: interior
+    #  vertices waiting on cross-partition round-trips tick here)
+    gmask = graph.is_boundary
+    gonly = prog.global_only_active(es.state, vdata)
+    if gonly is not None:
+        gmask = jnp.logical_or(gmask, jnp.logical_and(es.active, gonly))
+    info_g = StepInfo(superstep=it, pseudo_step=0, phase="global")
+    es = apply_phase(graph, prog, es, gmask, info_g, vdata)
+    # boundary -> same-partition messages are processed by the immediate
+    # local phase of this iteration (paper §4.2)
+    es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
+                    collect_metrics=collect_metrics)
+
+    # -- 3. local phase: pseudo-supersteps until per-partition quiescence --
+    es = local_phase(graph, prog, es, vdata, it,
+                     max_local_steps=max_local_steps, use_ell=use_ell,
+                     collect_metrics=collect_metrics)
+
+    c = es.counters
+    return dataclasses.replace(
+        es, counters=dataclasses.replace(c, iterations=c.iterations + 1))
+
+
+def init_hybrid(graph: PartitionedGraph, prog: VertexProgram, vdata: Any,
+                use_ell: bool = True,
+                collect_metrics: bool = True) -> EngineState:
+    """Initialization iteration (iteration 0): same as Hama's first superstep;
+    in-partition messages go to pending for iteration 1's phases, crossing
+    messages ride the export buffer."""
+    es = init_state(graph, prog, vdata)
+    es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
+                    collect_metrics=collect_metrics)
+    return es

@@ -26,7 +26,14 @@ Elastic resume (k -> k' partitions, via ``repro.io.resize``) re-shards the
 checkpointed vertex state by global vertex id and re-announces every
 vertex's current out-value on the first exchange — safe exactly for
 monotone-semiring programs (min/max combiners: re-delivery can only
-re-confirm the fixed point), which the restore path enforces.
+re-confirm the fixed point), which the shared executor gate
+(:func:`repro.exec.checkpoint.require_monotone`) enforces.
+
+This module is configuration only: the loop lives in
+:mod:`repro.exec.driver`, checkpoint save/resume in
+:class:`repro.exec.checkpoint.CheckpointHook`, and ``run_hybrid_ft`` wires
+them to a :class:`_FaultHook` driving the heartbeat -> reassign -> restore
+cycle between steps.
 """
 
 from __future__ import annotations
@@ -40,17 +47,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.ckpt import (AsyncCheckpointer, CheckpointError,
-                                   checkpoint_bytes, latest_checkpoint,
-                                   load_checkpoint, load_checkpoint_arrays,
-                                   read_manifest, _leaf_path_names)
-from repro.core.engine_hybrid import hybrid_iteration, init_hybrid
-from repro.core.runtime import EngineState, deliver, quiescent
+                                   load_checkpoint_arrays, _leaf_path_names)
+from repro.core.runtime import EngineState, deliver
 from repro.core.vertex_program import VertexProgram
+from repro.exec.checkpoint import (CheckpointHook, checkpoint_key,
+                                   require_monotone)
+from repro.exec.driver import ExecContext, ExecHook, run_engine
+from repro.exec.iteration import init_hybrid
+from repro.exec.policy import hybrid_policy
 from repro.ft.elastic import partition_owners, reshard_vertex_tree
 from repro.ft.heartbeat import HeartbeatMonitor
 from repro.ft.inject import FaultInjector
 from repro.ft.straggler import ShardFlag, flag_slow_shards
-from repro.io.digest import graph_digest
 
 __all__ = ["run_hybrid_ft", "RecoveryEvent", "FTRunResult", "checkpoint_key",
            "elastic_restore", "reshard_checkpoint_arrays"]
@@ -80,33 +88,6 @@ class FTRunResult:
     straggler_flags: list[ShardFlag]
     resumed_from: str | None      # checkpoint dir this run started from
     epoch: int                    # monitor reassignment epoch at exit
-
-
-def checkpoint_key(graph, prog: VertexProgram) -> dict:
-    """What a checkpoint is keyed to: the graph content digest (the same
-    ``io.digest.graph_digest`` the ingest benchmark pins builder identity
-    with) + the program's class name."""
-    return {"graph_digest": graph_digest(graph),
-            "program": type(prog).__name__}
-
-
-def _validate_key(meta: dict, key: dict, path: str) -> None:
-    for k in ("graph_digest", "program"):
-        if meta.get(k) != key[k]:
-            raise CheckpointError(
-                f"{path}: checkpoint is keyed to {k}={meta.get(k)!r}, this "
-                f"run has {key[k]!r} — refusing to restore state from a "
-                f"different graph/program")
-
-
-def _monotone_only(prog: VertexProgram, what: str) -> None:
-    bad = [ch.name for ch in prog.channels if ch.combiner not in
-           ("min", "max")]
-    if bad:
-        raise CheckpointError(
-            f"{what} re-announces every vertex's current value on the next "
-            f"exchange, which only monotone (min/max-combiner) programs "
-            f"absorb; channels {bad} do not qualify")
 
 
 def reshard_checkpoint_arrays(arrs: dict[str, np.ndarray],
@@ -139,8 +120,10 @@ def elastic_restore(ckpt_path: str, graph, prog: VertexProgram, vdata: Any,
 
     Returns ``(state, iteration)``.  Monotone-semiring programs only (the
     re-announce on the first exchange re-delivers current values, which
-    min/max combiners absorb and a sum combiner would double-count)."""
-    _monotone_only(prog, "elastic restore")
+    min/max combiners absorb and a sum combiner would double-count) — the
+    gate is the executor's :func:`~repro.exec.checkpoint.require_monotone`,
+    shared with the serving layer's K-lane resume."""
+    require_monotone(prog, "elastic restore")
     arrs, manifest = load_checkpoint_arrays(ckpt_path)
     meta = manifest.get("meta", {})
     if meta.get("program") not in (None, type(prog).__name__):
@@ -188,6 +171,48 @@ def elastic_restore(ckpt_path: str, graph, prog: VertexProgram, vdata: Any,
     return es, int(manifest["step"])
 
 
+class _FaultHook(ExecHook):
+    """Heartbeat/failure detection between executor steps.
+
+    Each tick advances the injected logical clock, beats the live (or
+    injector-scripted) workers, and sweeps the monitor; a detected failure
+    reassigns the dead workers' partitions and rolls the run back to the
+    latest durable checkpoint via the shared :class:`CheckpointHook`,
+    consuming the tick (the step is skipped).  Deterministic by
+    construction: no wall-clock enters control flow.
+    """
+
+    def __init__(self, monitor: HeartbeatMonitor,
+                 injector: FaultInjector | None,
+                 ckpt: CheckpointHook, clock: list, tick_seconds: float):
+        self.monitor = monitor
+        self.injector = injector
+        self.ckpt = ckpt
+        self.clock = clock
+        self.tick_seconds = tick_seconds
+        self.recoveries: list[RecoveryEvent] = []
+
+    def before_step(self, ctx: ExecContext) -> bool | None:
+        self.clock[0] += self.tick_seconds
+        n_workers = len(self.monitor.workers)
+        beating = (self.injector.beating(ctx.tick)
+                   if self.injector is not None else range(n_workers))
+        for w in beating:
+            self.monitor.beat(w)
+        newly_failed = self.monitor.sweep()
+        if not newly_failed:
+            return None
+        moved = self.monitor.reassign_failed()
+        t0 = time.perf_counter()
+        es, rit, _, nbytes = self.ckpt.restore()
+        self.recoveries.append(RecoveryEvent(
+            tick=ctx.tick, failed_workers=tuple(newly_failed), moved=moved,
+            restored_iteration=rit, iterations_lost=ctx.iteration - rit,
+            restore_seconds=time.perf_counter() - t0, bytes_read=nbytes))
+        ctx.es, ctx.iteration = es, rit
+        return False                  # rolled back: skip this tick's step
+
+
 def run_hybrid_ft(
     graph,
     prog: VertexProgram,
@@ -214,16 +239,17 @@ def run_hybrid_ft(
     """Run global iterations to quiescence with checkpointing + recovery.
 
     ``step_fn`` is one jittable global iteration ``(graph, es) -> es``
-    (default: the host :func:`hybrid_iteration`; pass the result of
+    (default: the host :func:`~repro.exec.iteration.hybrid_iteration`;
+    pass the result of
     :func:`~repro.core.distributed.make_dist_hybrid_step` plus
     ``es_shardings`` for the shard_map path — restores are ``device_put``
     back onto the mesh through ``load_checkpoint(shardings=...)``).
 
     Checkpoints land under ``ckpt_dir`` every ``checkpoint_every`` global
     iterations, written off-thread (:class:`AsyncCheckpointer`), each keyed
-    to :func:`checkpoint_key`; ``resume=True`` restarts from the latest
-    complete checkpoint when one exists (exact resume: identical final
-    state and counters to the uninterrupted run).
+    to :func:`~repro.exec.checkpoint.checkpoint_key`; ``resume=True``
+    restarts from the latest complete checkpoint when one exists (exact
+    resume: identical final state and counters to the uninterrupted run).
 
     Failure detection runs on an injected logical clock: each driver tick
     advances it ``tick_seconds``, live workers heartbeat (all of them, or
@@ -252,43 +278,22 @@ def run_hybrid_ft(
             different graph digest or program than this run — refusing to
             restore mismatched state.
     """
+    policy = hybrid_policy(use_ell=use_ell, collect_metrics=collect_metrics,
+                           max_local_steps=max_local_steps)
     if step_fn is None:
         def step_fn(g, e):
-            return hybrid_iteration(g, prog, e, vdata,
-                                    max_local_steps=max_local_steps,
-                                    use_ell=use_ell,
-                                    collect_metrics=collect_metrics)
+            return policy.step(g, prog, e, vdata)
     jstep = jax.jit(step_fn)
 
-    key = checkpoint_key(graph, prog)
     template = init_hybrid(graph, prog, vdata, use_ell=use_ell,
                            collect_metrics=collect_metrics)
     if es_shardings is not None:
         template = jax.device_put(template, es_shardings)
 
-    own_ckpt = checkpointer is None and ckpt_dir is not None
-    if own_ckpt:
-        checkpointer = AsyncCheckpointer(ckpt_dir, keep=keep)
-    base = ckpt_dir if ckpt_dir is not None else getattr(
-        checkpointer, "base", None)
-
-    def restore() -> tuple[EngineState, int, str | None, int]:
-        """(state, iteration, path, bytes_read) from the latest durable
-        checkpoint, or the initialization state when none exists."""
-        if checkpointer is not None:
-            checkpointer.wait()        # in-flight writes become durable
-        path = latest_checkpoint(base) if base else None
-        if path is None:
-            return template, 0, None, 0
-        _validate_key(read_manifest(path).get("meta", {}), key, path)
-        es, step = load_checkpoint(path, template, shardings=es_shardings)
-        return es, int(step), path, checkpoint_bytes(path)
-
-    resumed_from = None
-    if resume and base is not None:
-        es, it, resumed_from, _ = restore()
-    else:
-        es, it = template, 0
+    ckpt = CheckpointHook(key=checkpoint_key(graph, prog, vdata),
+                          ckpt_dir=ckpt_dir, checkpointer=checkpointer,
+                          every=checkpoint_every, keep=keep, resume=resume,
+                          template=template, shardings=es_shardings)
 
     # --- simulated cluster: contiguous partition blocks per worker --------
     P = graph.n_partitions
@@ -299,41 +304,15 @@ def run_hybrid_ft(
                                    clock=lambda: clock[0])
         for p, w in enumerate(partition_owners(P, n_workers)):
             monitor.assign(int(w), p)
-    n_workers = len(monitor.workers)
+    fault = _FaultHook(monitor, injector, ckpt, clock, tick_seconds)
 
-    recoveries: list[RecoveryEvent] = []
-    tick = 0
-    while it < max_iters and not bool(quiescent(prog, es)):
-        tick += 1
-        clock[0] += tick_seconds
-        beating = (injector.beating(tick) if injector is not None
-                   else range(n_workers))
-        for w in beating:
-            monitor.beat(w)
-        newly_failed = monitor.sweep()
-        if newly_failed:
-            moved = monitor.reassign_failed()
-            t0 = time.perf_counter()
-            es, rit, _, nbytes = restore()
-            recoveries.append(RecoveryEvent(
-                tick=tick, failed_workers=tuple(newly_failed), moved=moved,
-                restored_iteration=rit, iterations_lost=it - rit,
-                restore_seconds=time.perf_counter() - t0, bytes_read=nbytes))
-            it = rit
-            continue
-        es = jstep(graph, es)
-        it = int(es.counters.iterations)
-        if checkpointer is not None and it % checkpoint_every == 0:
-            checkpointer.save(it, es, meta={**key, "iteration": it})
-
-    if checkpointer is not None:
-        checkpointer.wait()
-        if own_ckpt:
-            checkpointer.close()
+    ctx = run_engine(graph, prog, policy, vdata, max_iters=max_iters,
+                     hooks=(fault, ckpt), es=template,
+                     jit_step=lambda e: jstep(graph, e))
 
     flags = flag_slow_shards(
-        np.asarray(jax.device_get(es.counters.pseudo_supersteps)),
+        np.asarray(jax.device_get(ctx.es.counters.pseudo_supersteps)),
         balance=balance, factor=straggler_factor)
-    return FTRunResult(es=es, iterations=it, recoveries=recoveries,
-                       straggler_flags=flags, resumed_from=resumed_from,
-                       epoch=monitor.epoch)
+    return FTRunResult(es=ctx.es, iterations=ctx.iteration,
+                       recoveries=fault.recoveries, straggler_flags=flags,
+                       resumed_from=ckpt.resumed_from, epoch=monitor.epoch)

@@ -34,6 +34,8 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
+import shutil
 from typing import Any, Callable, Iterator
 
 import numpy as np
@@ -43,9 +45,12 @@ import jax.numpy as jnp
 
 from repro.core.apps.multi import (MultiSourceMonotone, PersonalizedPageRank,
                                    reachable)
-from repro.core.engine_hybrid import hybrid_iteration, init_hybrid
 from repro.core.graph import PartitionedGraph, unpack_vertex
 from repro.core.runtime import quiescent
+from repro.exec.checkpoint import (CheckpointHook, checkpoint_key,
+                                   drop_converged_lanes, require_monotone)
+from repro.exec.driver import ExecContext, ExecHook, run_engine, while_engine
+from repro.exec.policy import hybrid_policy
 from repro.ft.straggler import StragglerMitigator
 
 
@@ -69,6 +74,18 @@ class Query:
     @property
     def key(self):
         return (self.program, tuple(sorted(self.payload.items())))
+
+
+@dataclasses.dataclass(frozen=True)
+class ResumeEvent:
+    """One killed batch picked back up from its durable checkpoint."""
+
+    program: str
+    lanes: int
+    sources_digest: str
+    path: str                      # checkpoint directory restored from
+    iteration: int                 # global iteration the batch resumed at
+    lanes_done: tuple[bool, ...]   # converged lanes dropped from the frontier
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +114,52 @@ PROGRAMS: dict[str, _ProgramSpec] = {
 }
 
 
+class _LaneHook(ExecHook):
+    """Per-lane convergence tracking for one checkpointed K-lane dispatch.
+
+    ``done[j]`` goes (and stays) True once lane j's state is unchanged
+    across one full global iteration — the same fixed-point criterion
+    :meth:`ServeEngine.stream` yields on.  The mask rides every
+    checkpoint's meta (via the :class:`CheckpointHook`'s ``meta_fn``); on
+    resume it comes back from the manifest and the converged lanes are
+    dropped from the restored frontier before the first step.
+    """
+
+    def __init__(self, engine: "ServeEngine", program: str, K: int,
+                 changed: Callable):
+        self.engine = engine
+        self.program = program
+        self.K = K
+        self.changed = changed
+        self.ckpt: CheckpointHook | None = None   # wired by the dispatcher
+        self.done = np.zeros((K,), bool)
+        self._prev = None
+        self._resume_checked = False
+
+    def before_step(self, ctx: ExecContext) -> None:
+        if not self._resume_checked:
+            self._resume_checked = True
+            if self.ckpt is not None and self.ckpt.resumed_from is not None:
+                meta = self.ckpt.restore_manifest() or {}
+                self.done = np.asarray(
+                    meta.get("lanes_done", self.done), bool)
+                ctx.es = drop_converged_lanes(ctx.prog, ctx.es,
+                                              jnp.asarray(self.done))
+                self.engine.resume_events.append(ResumeEvent(
+                    program=self.program, lanes=self.K,
+                    sources_digest=self.ckpt.key.get("sources_digest", ""),
+                    path=self.ckpt.resumed_from, iteration=ctx.iteration,
+                    lanes_done=tuple(bool(b) for b in self.done)))
+        self._prev = ctx.es.state
+
+    def after_step(self, ctx: ExecContext) -> None:
+        self.done = np.logical_or(
+            self.done, ~np.asarray(self.changed(self._prev, ctx.es.state)))
+        if self.engine.on_iteration is not None:
+            self.engine.on_iteration(self.engine, self.program, self.K,
+                                     ctx.iteration)
+
+
 class ServeEngine:
     """Serve graph queries against one resident partitioned graph.
 
@@ -118,6 +181,22 @@ class ServeEngine:
         hook ``(engine, key, K, sources, attempt) -> EngineState | None``
         (None = this attempt produced nothing before the deadline; tests
         drive this with a fake clock).
+    ckpt_dir / checkpoint_every / keep:
+        When ``ckpt_dir`` is set, :meth:`run` dispatches every batch
+        through the checkpointing executor: the batch's state is saved
+        every ``checkpoint_every`` global iterations under
+        ``ckpt_dir/<program>_K<K>_<sources-digest>`` (keyed to the
+        ``(program, K, sources-digest)`` tuple), a killed batch resumes
+        from its latest durable checkpoint instead of recomputing (with
+        already-converged lanes dropped from the restored frontier — see
+        :func:`~repro.exec.checkpoint.drop_converged_lanes`), and the
+        batch's checkpoint family is deleted once it completes.  Monotone
+        programs only (the shared executor gate); resumes are recorded in
+        ``resume_events``.
+    on_iteration:
+        Optional callback ``(engine, program, K, iteration)`` invoked
+        after every global iteration of a checkpointed dispatch — tests
+        kill a batch mid-flight by raising from it.
     """
 
     def __init__(self, graph: PartitionedGraph | str, *,
@@ -125,7 +204,9 @@ class ServeEngine:
                  use_ell: bool = True, max_iters: int = 10_000,
                  straggler: StragglerMitigator | None = None,
                  dispatch_fn: Callable | None = None,
-                 build_kwargs: dict | None = None):
+                 build_kwargs: dict | None = None,
+                 ckpt_dir: str | None = None, checkpoint_every: int = 1,
+                 keep: int = 3, on_iteration: Callable | None = None):
         if isinstance(graph, str):
             from repro.io.pipeline import build_partitioned_graph_from_path
             graph = build_partitioned_graph_from_path(
@@ -136,6 +217,12 @@ class ServeEngine:
         self.max_iters = max_iters
         self.straggler = straggler or StragglerMitigator()
         self._dispatch_fn = dispatch_fn
+        self.ckpt_dir = ckpt_dir
+        self.checkpoint_every = checkpoint_every
+        self.keep = keep
+        self.on_iteration = on_iteration
+        self.resume_events: list[ResumeEvent] = []
+        self._policy = hybrid_policy(use_ell=use_ell, collect_metrics=False)
         self.queue: list[Query] = []
         self._ids = itertools.count()        # monotonic: ids never collide
         self._work_ids = itertools.count()
@@ -201,20 +288,11 @@ class ServeEngine:
                 # executes at trace time only: counts compiles per (key, K)
                 self.trace_counts[ck] = self.trace_counts.get(ck, 0) + 1
                 vdata = {"sources": sources}
-                es = init_hybrid(self.graph, prog, vdata,
-                                 use_ell=self.use_ell, collect_metrics=False)
-
-                def cond(e):
-                    return jnp.logical_and(
-                        jnp.logical_not(quiescent(prog, e)),
-                        e.counters.iterations < self.max_iters)
-
-                return jax.lax.while_loop(
-                    cond,
-                    lambda e: hybrid_iteration(self.graph, prog, e, vdata,
-                                               use_ell=self.use_ell,
-                                               collect_metrics=False),
-                    es)
+                es = self._policy.init(self.graph, prog, vdata)
+                return while_engine(
+                    prog,
+                    lambda e: self._policy.step(self.graph, prog, e, vdata),
+                    es, self.max_iters)
 
             self._full[ck] = jax.jit(run)
         return self._full[ck]
@@ -223,12 +301,10 @@ class ServeEngine:
         ck = (key, K)
         if ck not in self._step:
             prog = self._program(key, K)
-            self._init[ck] = jax.jit(lambda src: init_hybrid(
-                self.graph, prog, {"sources": src}, use_ell=self.use_ell,
-                collect_metrics=False))
-            self._step[ck] = jax.jit(lambda es, src: hybrid_iteration(
-                self.graph, prog, es, {"sources": src},
-                use_ell=self.use_ell, collect_metrics=False))
+            self._init[ck] = jax.jit(lambda src: self._policy.init(
+                self.graph, prog, {"sources": src}))
+            self._step[ck] = jax.jit(lambda es, src: self._policy.step(
+                self.graph, prog, es, {"sources": src}))
 
             def changed(prev, state):
                 ch = jnp.zeros((K,), bool)
@@ -247,6 +323,42 @@ class ServeEngine:
         if self._dispatch_fn is not None:
             return self._dispatch_fn(self, key, K, sources, attempt)
         return self._full_run(key, K)(sources)
+
+    def _dispatch_checkpointed(self, key: tuple, K: int, sources):
+        """One batch through the checkpointing executor: host-stepped with
+        a :class:`CheckpointHook` keyed to (program, K, sources-digest),
+        resuming from the latest durable checkpoint when one exists and
+        deleting the batch's checkpoint family once it completes."""
+        prog = self._program(key, K)
+        require_monotone(prog, "K-lane resume")
+        name = key[0]
+        vdata = {"sources": sources}
+        ckey = checkpoint_key(self.graph, prog, vdata)
+        bdir = os.path.join(self.ckpt_dir,
+                            f"{name}_K{K}_{ckey['sources_digest']}")
+        init, step, changed = self._stream_fns(key, K)
+        es0 = init(sources)
+        lane = _LaneHook(self, name, K, changed)
+        ckpt = CheckpointHook(
+            key=ckey, ckpt_dir=bdir, every=self.checkpoint_every,
+            keep=self.keep, template=es0,
+            meta_fn=lambda _ctx: {"lanes_done": [bool(b)
+                                                 for b in lane.done]})
+        lane.ckpt = ckpt
+        killed = True
+        try:
+            ctx = run_engine(self.graph, prog, self._policy, vdata,
+                             max_iters=self.max_iters, hooks=(lane, ckpt),
+                             es=es0, jit_step=lambda e: step(e, sources))
+            killed = False
+        finally:
+            if killed:    # queued saves become durable for the resume
+                try:
+                    ckpt.checkpointer.wait()
+                finally:
+                    ckpt.checkpointer.close()
+        shutil.rmtree(bdir, ignore_errors=True)   # completed: drop family
+        return ctx.es
 
     def _dispatch_mitigated(self, key: tuple, K: int, sources):
         """One batch through the straggler state machine: issue against the
@@ -284,7 +396,10 @@ class ServeEngine:
         for key, queries in self._take_batches():
             K = self._pad_width(len(queries))
             sources = self._sources(queries, K)
-            es = self._dispatch_mitigated(key, K, sources)
+            if self.ckpt_dir is not None:
+                es = self._dispatch_checkpointed(key, K, sources)
+            else:
+                es = self._dispatch_mitigated(key, K, sources)
             spec = PROGRAMS[queries[0].program]
             lanes = np.asarray(unpack_vertex(self.graph,
                                              es.state[spec.state_key]))

@@ -329,14 +329,19 @@ def test_lm_cell_runs_on_mesh():
     import jax, jax.numpy as jnp
     from repro.launch.mesh import set_mesh
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.configs import get_config
+    from repro.configs import ArchConfig, LayerSpec
     from repro.models.registry import get_model, param_shapes
     from repro.sharding.rules import param_specs, batch_spec
     from repro.sharding.util import sanitize_specs, named
     from repro.train.trainer import make_train_step
     from repro.optim.adamw import adamw_init
 
-    cfg = get_config('granite-moe-1b-a400m', smoke=True)
+    # tiny MoE stack (ad-hoc; the LM preset zoo was pruned)
+    cfg = ArchConfig(
+        name='moe-smoke', family='moe', n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=32, vocab=256,
+        pattern=(LayerSpec(mixer='attn', attn='full', moe=True),),
+        n_experts=8, top_k=2, d_expert=32, tie_embeddings=True)
     api = get_model(cfg)
     mesh = jax.make_mesh((2, 4), ('data', 'model'))
     params = api.init(jax.random.PRNGKey(0), cfg, jnp.float32)
@@ -369,12 +374,16 @@ def test_decode_cell_seq_sharded_cache():
     import numpy as np
     import jax, jax.numpy as jnp
     from repro.launch.mesh import set_mesh
-    from repro.configs import get_config
+    from repro.configs import ArchConfig, LayerSpec
     from repro.models.registry import get_model
     from repro.sharding.rules import cache_specs
     from repro.sharding.util import sanitize_specs, named
 
-    cfg = get_config('phi4-mini-3.8b', smoke=True)
+    # tiny dense GQA transformer (ad-hoc; the LM preset zoo was pruned)
+    cfg = ArchConfig(
+        name='dense-smoke', family='dense', n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        pattern=(LayerSpec(mixer='attn', attn='full'),), tie_embeddings=True)
     api = get_model(cfg)
     mesh = jax.make_mesh((2, 4), ('data', 'model'))
     params = api.init(jax.random.PRNGKey(0), cfg, jnp.float32)
@@ -409,7 +418,7 @@ def test_hybrid_sync_on_pod_mesh():
     import jax, jax.numpy as jnp
     from repro.launch.mesh import set_mesh
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.configs import get_config
+    from repro.configs import ArchConfig, LayerSpec
     from repro.core.hybrid_sync import (global_sync, inner_steps, outer_init,
                                         stack_pods)
     from repro.models.registry import get_model
@@ -418,7 +427,11 @@ def test_hybrid_sync_on_pod_mesh():
     from repro.sharding.util import sanitize_specs, named
     from repro.train.trainer import make_train_step
 
-    cfg = get_config('phi4-mini-3.8b', smoke=True)
+    # tiny dense GQA transformer (ad-hoc; the LM preset zoo was pruned)
+    cfg = ArchConfig(
+        name='dense-smoke', family='dense', n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        pattern=(LayerSpec(mixer='attn', attn='full'),), tie_embeddings=True)
     api = get_model(cfg)
     mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
     params = api.init(jax.random.PRNGKey(0), cfg, jnp.float32)

@@ -1,9 +1,13 @@
 """Graph-query serving layer: micro-batching, lane padding, compile-cache
-behavior, monotonic request ids, straggler re-dispatch, streaming."""
+behavior, monotonic request ids, straggler re-dispatch, streaming,
+K-lane kill-and-resume through the executor's checkpoint hook."""
+
+import os
 
 import numpy as np
 import pytest
 
+from repro.checkpoint.ckpt import CheckpointError
 from repro.core import run_hybrid
 from repro.core.apps import SSSP
 from repro.core.graph import build_partitioned_graph, unpack_vertex
@@ -128,3 +132,72 @@ def test_straggler_no_result_before_deadline_raises(graph):
     eng = ServeEngine(g, straggler=mit, dispatch_fn=lambda *a: None)
     with pytest.raises(RuntimeError, match="deadline"):
         eng._dispatch_mitigated(("sssp", ()), 4, None)
+
+
+# ---------------------------------------------------------------------------
+# K-lane kill-and-resume (executor checkpoint hook)
+# ---------------------------------------------------------------------------
+
+class _Killed(RuntimeError):
+    pass
+
+
+def test_klane_kill_and_resume_bit_identical(graph, tmp_path):
+    """Kill a checkpointed K-lane batch mid-flight, resume it from the
+    (program, K, sources-digest) checkpoint family in a fresh engine:
+    per-lane results are bit-identical to the uninterrupted run, the
+    already-converged lane is recorded as dropped from the restored
+    frontier, and the resume re-enters past iteration 0."""
+    g, n = graph
+    srcs = (0, 17, 99, n - 1)       # lane n-1 converges at iteration 1,
+    kill_at = 4                     # lanes 0/17 at 5, lane 99 at 7
+
+    ref_eng = ServeEngine(g, lane_widths=(4,))
+    refs = [ref_eng.submit("sssp", s) for s in srcs]
+    ref_eng.run()
+
+    ckdir = str(tmp_path / "serve_ck")
+
+    def killer(eng, prog, K, iteration):
+        if iteration == kill_at:
+            raise _Killed(f"injected kill at iteration {iteration}")
+
+    eng = ServeEngine(g, lane_widths=(4,), ckpt_dir=ckdir,
+                      on_iteration=killer)
+    qs = [eng.submit("sssp", s) for s in srcs]
+    with pytest.raises(_Killed):
+        eng.run()
+    assert not any(q.done for q in qs)
+    fams = os.listdir(ckdir)
+    assert len(fams) == 1 and fams[0].startswith("sssp_K4_")
+    # the kill raised before iteration 4's save: latest durable is 3
+    assert any(d.endswith("step_00000003")
+               for d in os.listdir(os.path.join(ckdir, fams[0])))
+
+    eng2 = ServeEngine(g, lane_widths=(4,), ckpt_dir=ckdir)
+    qs2 = [eng2.submit("sssp", s) for s in srcs]
+    done = eng2.run()
+    assert all(q.done for q in done)
+
+    [ev] = eng2.resume_events
+    assert ev.program == "sssp" and ev.lanes == 4
+    assert ev.iteration == kill_at - 1       # resumed past iteration 0
+    assert ev.path.endswith("step_00000003")
+    # lane n-1 had converged before the checkpoint -> dropped; others not
+    assert ev.lanes_done == (False, False, False, True)
+
+    for q_ref, q2 in zip(refs, qs2):
+        np.testing.assert_array_equal(q_ref.result, q2.result)
+    # batch completed -> its checkpoint family is deleted
+    assert os.listdir(ckdir) == []
+
+
+def test_klane_resume_requires_monotone(graph, tmp_path):
+    """Non-monotone (sum-combiner) programs are refused by the shared
+    executor gate before any checkpointed dispatch starts."""
+    g, _ = graph
+    eng = ServeEngine(g, lane_widths=(4,),
+                      ckpt_dir=str(tmp_path / "ppr_ck"))
+    eng.submit("ppr", 0)
+    with pytest.raises(CheckpointError, match="min/max-combiner"):
+        eng.run()

@@ -15,7 +15,7 @@ needs_zstd = pytest.mark.skipif(
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
+from repro.configs import ArchConfig, LayerSpec
 from repro.core.hybrid_sync import (global_sync, inner_steps, outer_init,
                                     stack_pods)
 from repro.checkpoint import AsyncCheckpointer, load_checkpoint, save_checkpoint
@@ -29,8 +29,12 @@ from repro.optim.compression import ef_init, ef_int8_compress, ef_int8_decompres
 from repro.train.trainer import make_train_step
 
 
-def small_setup(arch="phi4-mini-3.8b"):
-    cfg = get_config(arch, smoke=True)
+def small_setup():
+    # tiny dense GQA transformer (ad-hoc; the LM preset zoo was pruned)
+    cfg = ArchConfig(
+        name="dense-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        pattern=(LayerSpec(mixer="attn", attn="full"),), tie_embeddings=True)
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(0), cfg, jnp.float32)
     return cfg, api, params
