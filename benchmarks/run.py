@@ -23,7 +23,7 @@ def main() -> None:
     ap.add_argument("--table", default=None,
                     help="run a single table: sssp|pagerank|bm|giraphpp|"
                          "kernels|local_phase|dist_phase|partition|ingest|"
-                         "ft|serve|roofline")
+                         "ft|serve|obs|roofline")
     args = ap.parse_args()
 
     if args.table == "dist_phase":
@@ -90,6 +90,12 @@ def main() -> None:
         # the gated 10^6-edge workload, so CI runs it full)
         from benchmarks import serve_bench
         rows += serve_bench.csv_rows(serve_bench.bench_serve(fast=args.fast))
+    if args.table == "obs":
+        # explicit-only (tracing-overhead A/B + BSP-vs-hybrid report
+        # checks; --fast drops the gated 10^6-edge workload, so CI runs
+        # it full)
+        from benchmarks import obs_bench
+        rows += obs_bench.csv_rows(obs_bench.bench_obs(fast=args.fast))
     if want("roofline"):
         rows += roofline_rows()
 

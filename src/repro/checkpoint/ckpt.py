@@ -26,7 +26,6 @@ import os
 import queue
 import shutil
 import threading
-import time
 from typing import Any
 
 import numpy as np
@@ -37,6 +36,8 @@ except ImportError:                # pragma: no cover - env without zstandard
     zstd = None
 
 import jax
+
+from repro.obs import clock as obs_clock
 
 Tree = Any
 
@@ -269,9 +270,9 @@ class AsyncCheckpointer:
 
     def save(self, step: int, tree: Tree, meta: dict | None = None):
         self._raise_pending()
-        t0 = time.perf_counter()
+        t0 = obs_clock.perf_counter()
         host = jax.tree.map(lambda x: np.asarray(x), tree)   # snapshot
-        self.save_seconds += time.perf_counter() - t0
+        self.save_seconds += obs_clock.perf_counter() - t0
         self.q.put((int(step), host, meta))
 
     def wait(self):

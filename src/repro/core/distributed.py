@@ -36,7 +36,7 @@ def make_dist_hybrid_step(prog: VertexProgram, mesh: Mesh,
                           axes: tuple = AXES, vdata: Any = None,
                           max_local_steps: int = 10_000,
                           wire_dtype=None, use_ell: bool = True,
-                          collect_metrics: bool = True):
+                          collect_metrics: bool = True, tracer=None):
     """Returns a jittable step: (graph, es) -> es, running one global
     iteration on a mesh where dim 0 of every array is the partition axis.
     ``wire_dtype=jnp.bfloat16`` halves exchange bytes (§Perf);
@@ -48,7 +48,15 @@ def make_dist_hybrid_step(prog: VertexProgram, mesh: Mesh,
     block-local partition slices (``runtime.slice_flat`` re-offsets), the
     multi-device CI matrix pins it bit-exact against the host dense run,
     and ``collect_metrics=True`` costs no dense fallback — remote group
-    accounting rides the ELL tiles' per-slot group ids."""
+    accounting rides the ELL tiles' per-slot group ids.
+
+    ``tracer`` (a :class:`repro.obs.trace.Tracer`) wraps the returned step
+    with host-side span recording — one ``dist_step`` span per global
+    iteration carrying per-device-block exchange bytes, halo sizes, and
+    pseudo-superstep counts.  The wrapped step blocks between iterations
+    (honest timing) and is *not* meant to be re-jitted by the caller;
+    ``tracer=None`` (the default) returns the bare jittable step with no
+    observability import at all."""
 
     def gather_table(x):
         # local (Pb, X, ...) -> global (P, X, ...): the one exchange
@@ -86,6 +94,10 @@ def make_dist_hybrid_step(prog: VertexProgram, mesh: Mesh,
         out_specs = _es_specs(es, axes)
         return _shard_map(local_step, mesh, in_specs, out_specs)(graph, es)
 
+    if tracer is not None:
+        from repro.obs.trace import traced_dist_step   # lazy: opt-in only
+        return traced_dist_step(step, tracer, mesh.size,
+                                wire_dtype=wire_dtype)
     return step
 
 

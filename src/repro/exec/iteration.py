@@ -25,7 +25,9 @@ from repro.core.vertex_program import StepInfo, VertexProgram
 from repro.exec.local_phase import local_phase
 
 __all__ = ["bsp_superstep", "am_superstep", "hybrid_iteration",
-           "init_hybrid", "reset_export"]
+           "init_hybrid", "reset_export", "exchange_phase", "bsp_delivery",
+           "bsp_compute", "hybrid_remote_delivery", "hybrid_global_phase",
+           "hybrid_local"]
 
 
 def reset_export(prog: VertexProgram, es: EngineState) -> EngineState:
@@ -51,6 +53,81 @@ def _deliver_split(graph, prog, es, use_ell, collect_metrics):
     return es
 
 
+# ---------------------------------------------------------------------------
+# phase functions: each superstep body below is a composition of these.
+# The observability layer (:mod:`repro.obs`) jits and times them one by one
+# to attribute wall time to exchange / delivery / compute / local phases —
+# they must compose to *exactly* the unsplit bodies (the golden parity
+# suite pins the composed results bit-identical).
+# ---------------------------------------------------------------------------
+
+def exchange_phase(graph, prog, es, gather_table=None,
+                   wire_dtype=None) -> EngineState:
+    """The one distributed communication of a superstep / global iteration:
+    gather export buffers through the halo plan, then clear them."""
+    es = exchange(graph, es, gather_table, wire_dtype=wire_dtype)
+    return reset_export(prog, es)
+
+
+def bsp_delivery(graph, prog, es, use_ell: bool = True,
+                 collect_metrics: bool = True) -> EngineState:
+    """Hama's delivery: every edge (remote + local halves on the ELL path,
+    one dense 'all' pass otherwise)."""
+    return _deliver_split(graph, prog, es, use_ell, collect_metrics)
+
+
+def bsp_compute(graph, prog, es, vdata) -> EngineState:
+    """Hama's bulk Compute() over all (active ∨ messaged) vertices, plus
+    the superstep counter bump."""
+    info = StepInfo(superstep=es.counters.iterations + 1, pseudo_step=0,
+                    phase="superstep")
+    es = apply_phase(graph, prog, es, graph.vertex_mask, info, vdata)
+    c = es.counters
+    return dataclasses.replace(
+        es, counters=dataclasses.replace(
+            c, iterations=c.iterations + 1,
+            pseudo_supersteps=c.pseudo_supersteps + 1))
+
+
+def hybrid_remote_delivery(graph, prog, es, use_ell: bool = True,
+                           collect_metrics: bool = True) -> EngineState:
+    """GraphHP: deliver the just-exchanged remote messages into pending."""
+    es, _ = deliver(graph, prog, es, edges="remote", use_ell=use_ell,
+                    collect_metrics=collect_metrics)
+    return es
+
+
+def hybrid_global_phase(graph, prog, es, vdata, use_ell: bool = True,
+                        collect_metrics: bool = True) -> EngineState:
+    """GraphHP's global phase: boundary vertices Compute() exactly once,
+    then their same-partition messages are delivered for the immediate
+    local phase (paper §4.2)."""
+    it = es.counters.iterations + 1
+    gmask = graph.is_boundary
+    gonly = prog.global_only_active(es.state, vdata)
+    if gonly is not None:
+        gmask = jnp.logical_or(gmask, jnp.logical_and(es.active, gonly))
+    info_g = StepInfo(superstep=it, pseudo_step=0, phase="global")
+    es = apply_phase(graph, prog, es, gmask, info_g, vdata)
+    es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
+                    collect_metrics=collect_metrics)
+    return es
+
+
+def hybrid_local(graph, prog, es, vdata, max_local_steps: int = 100_000,
+                 use_ell: bool = True,
+                 collect_metrics: bool = True) -> EngineState:
+    """GraphHP's local phase — pseudo-supersteps to per-partition
+    quiescence — plus the global-iteration counter bump."""
+    it = es.counters.iterations + 1
+    es = local_phase(graph, prog, es, vdata, it,
+                     max_local_steps=max_local_steps, use_ell=use_ell,
+                     collect_metrics=collect_metrics)
+    c = es.counters
+    return dataclasses.replace(
+        es, counters=dataclasses.replace(c, iterations=c.iterations + 1))
+
+
 def bsp_superstep(
     graph: PartitionedGraph,
     prog: VertexProgram,
@@ -68,17 +145,9 @@ def bsp_superstep(
     float 'sum' inboxes may differ in the last bit (different reduction
     order).
     """
-    es = exchange(graph, es, gather_table)
-    es = reset_export(prog, es)
-    es = _deliver_split(graph, prog, es, use_ell, collect_metrics)
-    info = StepInfo(superstep=es.counters.iterations + 1, pseudo_step=0,
-                    phase="superstep")
-    es = apply_phase(graph, prog, es, graph.vertex_mask, info, vdata)
-    c = es.counters
-    return dataclasses.replace(
-        es, counters=dataclasses.replace(
-            c, iterations=c.iterations + 1,
-            pseudo_supersteps=c.pseudo_supersteps + 1))
+    es = exchange_phase(graph, prog, es, gather_table)
+    es = bsp_delivery(graph, prog, es, use_ell, collect_metrics)
+    return bsp_compute(graph, prog, es, vdata)
 
 
 def am_superstep(
@@ -93,9 +162,8 @@ def am_superstep(
     """One AM-Hama superstep: Hama's cadence + asynchronous in-memory
     delivery between two ordered half-blocks A|B (the Grace mechanism,
     vectorized — see :mod:`repro.core.engine_am`)."""
-    es = exchange(graph, es, gather_table)
-    es = reset_export(prog, es)
-    es = _deliver_split(graph, prog, es, use_ell, collect_metrics)
+    es = exchange_phase(graph, prog, es, gather_table)
+    es = bsp_delivery(graph, prog, es, use_ell, collect_metrics)
 
     slot = jnp.arange(graph.vp)[None, :]
     half_a = jnp.logical_and(graph.vertex_mask, slot < graph.vp // 2)
@@ -140,36 +208,21 @@ def hybrid_iteration(
     the paper's message accounting from the hot loop (counters other than
     iterations/pseudo-supersteps stay put).
     """
-    it = es.counters.iterations + 1
-
     # -- 1. the one distributed exchange ---------------------------------
-    es = exchange(graph, es, gather_table, wire_dtype=wire_dtype)
-    es = reset_export(prog, es)
-    es, _ = deliver(graph, prog, es, edges="remote", use_ell=use_ell,
-                    collect_metrics=collect_metrics)
+    es = exchange_phase(graph, prog, es, gather_table, wire_dtype=wire_dtype)
+    es = hybrid_remote_delivery(graph, prog, es, use_ell=use_ell,
+                                collect_metrics=collect_metrics)
 
     # -- 2. global phase: boundary vertices, exactly once -----------------
     # (plus any program-declared global-only-active vertices: interior
     #  vertices waiting on cross-partition round-trips tick here)
-    gmask = graph.is_boundary
-    gonly = prog.global_only_active(es.state, vdata)
-    if gonly is not None:
-        gmask = jnp.logical_or(gmask, jnp.logical_and(es.active, gonly))
-    info_g = StepInfo(superstep=it, pseudo_step=0, phase="global")
-    es = apply_phase(graph, prog, es, gmask, info_g, vdata)
-    # boundary -> same-partition messages are processed by the immediate
-    # local phase of this iteration (paper §4.2)
-    es, _ = deliver(graph, prog, es, edges="local", use_ell=use_ell,
-                    collect_metrics=collect_metrics)
+    es = hybrid_global_phase(graph, prog, es, vdata, use_ell=use_ell,
+                             collect_metrics=collect_metrics)
 
     # -- 3. local phase: pseudo-supersteps until per-partition quiescence --
-    es = local_phase(graph, prog, es, vdata, it,
-                     max_local_steps=max_local_steps, use_ell=use_ell,
-                     collect_metrics=collect_metrics)
-
-    c = es.counters
-    return dataclasses.replace(
-        es, counters=dataclasses.replace(c, iterations=c.iterations + 1))
+    return hybrid_local(graph, prog, es, vdata,
+                        max_local_steps=max_local_steps, use_ell=use_ell,
+                        collect_metrics=collect_metrics)
 
 
 def init_hybrid(graph: PartitionedGraph, prog: VertexProgram, vdata: Any,

@@ -39,7 +39,6 @@ cycle between steps.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
@@ -59,6 +58,7 @@ from repro.ft.elastic import partition_owners, reshard_vertex_tree
 from repro.ft.heartbeat import HeartbeatMonitor
 from repro.ft.inject import FaultInjector
 from repro.ft.straggler import ShardFlag, flag_slow_shards
+from repro.obs import clock as obs_clock
 
 __all__ = ["run_hybrid_ft", "RecoveryEvent", "FTRunResult", "checkpoint_key",
            "elastic_restore", "reshard_checkpoint_arrays"]
@@ -88,6 +88,7 @@ class FTRunResult:
     straggler_flags: list[ShardFlag]
     resumed_from: str | None      # checkpoint dir this run started from
     epoch: int                    # monitor reassignment epoch at exit
+    registry: Any = None          # MetricsRegistry when one was passed in
 
 
 def reshard_checkpoint_arrays(arrs: dict[str, np.ndarray],
@@ -184,12 +185,14 @@ class _FaultHook(ExecHook):
 
     def __init__(self, monitor: HeartbeatMonitor,
                  injector: FaultInjector | None,
-                 ckpt: CheckpointHook, clock: list, tick_seconds: float):
+                 ckpt: CheckpointHook, clock: list, tick_seconds: float,
+                 tracer=None):
         self.monitor = monitor
         self.injector = injector
         self.ckpt = ckpt
         self.clock = clock
         self.tick_seconds = tick_seconds
+        self.tracer = tracer
         self.recoveries: list[RecoveryEvent] = []
 
     def before_step(self, ctx: ExecContext) -> bool | None:
@@ -203,12 +206,20 @@ class _FaultHook(ExecHook):
         if not newly_failed:
             return None
         moved = self.monitor.reassign_failed()
-        t0 = time.perf_counter()
+        t0 = obs_clock.perf_counter()
         es, rit, _, nbytes = self.ckpt.restore()
-        self.recoveries.append(RecoveryEvent(
+        ev = RecoveryEvent(
             tick=ctx.tick, failed_workers=tuple(newly_failed), moved=moved,
             restored_iteration=rit, iterations_lost=ctx.iteration - rit,
-            restore_seconds=time.perf_counter() - t0, bytes_read=nbytes))
+            restore_seconds=obs_clock.perf_counter() - t0, bytes_read=nbytes)
+        self.recoveries.append(ev)
+        if self.tracer is not None:
+            self.tracer.add(
+                "recovery", t0, ev.restore_seconds, cat="ft", ph="X",
+                tick=ev.tick, failed_workers=list(ev.failed_workers),
+                restored_iteration=rit,
+                iterations_lost=ev.iterations_lost,
+                bytes_read=ev.bytes_read)
         ctx.es, ctx.iteration = es, rit
         return False                  # rolled back: skip this tick's step
 
@@ -235,6 +246,8 @@ def run_hybrid_ft(
     tick_seconds: float = 1.0,
     straggler_factor: float = 1.5,
     balance: float | None = None,
+    tracer=None,
+    registry=None,
 ) -> FTRunResult:
     """Run global iterations to quiescence with checkpointing + recovery.
 
@@ -266,12 +279,22 @@ def run_hybrid_ft(
     exceeds that multiple of the tick median; ``balance`` optionally caps
     post-recovery load imbalance during reassignment.
 
+    ``tracer`` (a :class:`repro.obs.trace.Tracer`) records one span per
+    global iteration, the checkpoint/fault hooks' per-method costs, and a
+    ``recovery`` span (``cat="ft"``) for every failure -> restore cycle.
+    ``registry`` (a :class:`repro.obs.metrics.MetricsRegistry`) receives
+    the run's counters / checkpoint / recovery metrics at exit, and the
+    straggler flags are then derived *from the registry* (the
+    ``engine.pseudo_supersteps`` gauge and ``partition.balance``).  Both
+    default to off, adding nothing to the run.
+
     Returns:
         An :class:`FTRunResult`: the final ``EngineState`` (``es``) and
         iteration count, every :class:`RecoveryEvent` and straggler
         ``ShardFlag`` observed, ``resumed_from`` (checkpoint dir this run
-        restored from, or ``None`` for a cold start), and the monitor's
-        final reassignment ``epoch``.
+        restored from, or ``None`` for a cold start), the monitor's final
+        reassignment ``epoch``, and the populated ``registry`` (when one
+        was passed).
 
     Raises:
         CheckpointError: a checkpoint under ``ckpt_dir`` is keyed to a
@@ -304,15 +327,38 @@ def run_hybrid_ft(
                                    clock=lambda: clock[0])
         for p, w in enumerate(partition_owners(P, n_workers)):
             monitor.assign(int(w), p)
-    fault = _FaultHook(monitor, injector, ckpt, clock, tick_seconds)
+    fault = _FaultHook(monitor, injector, ckpt, clock, tick_seconds,
+                       tracer=tracer)
+
+    hooks: tuple = (fault, ckpt)
+    if tracer is not None:
+        # opt-in only: the default path never imports the tracing module
+        from repro.obs.trace import trace_hooks, wrap_hooks
+        hooks = wrap_hooks(tracer, hooks) + trace_hooks(tracer)
 
     ctx = run_engine(graph, prog, policy, vdata, max_iters=max_iters,
-                     hooks=(fault, ckpt), es=template,
+                     hooks=hooks, es=template,
                      jit_step=lambda e: jstep(graph, e))
 
-    flags = flag_slow_shards(
-        np.asarray(jax.device_get(ctx.es.counters.pseudo_supersteps)),
-        balance=balance, factor=straggler_factor)
+    pseudo = np.asarray(jax.device_get(ctx.es.counters.pseudo_supersteps))
+    if registry is not None:
+        from repro.obs.metrics import (record_checkpointer,
+                                       record_engine_counters)
+        record_engine_counters(registry, ctx.es.counters)
+        if ckpt.checkpointer is not None:
+            record_checkpointer(registry, ckpt.checkpointer)
+        if balance is not None:
+            registry.set_gauge("partition.balance", float(balance))
+        registry.set_counter("ft.recoveries", float(len(fault.recoveries)))
+        registry.set_counter("ft.iterations_lost", float(sum(
+            r.iterations_lost for r in fault.recoveries)))
+        # the flags now come from the registry's own gauges — the same
+        # numbers any external consumer of the profile would read
+        flags = flag_slow_shards(registry=registry, factor=straggler_factor)
+    else:
+        flags = flag_slow_shards(pseudo, balance=balance,
+                                 factor=straggler_factor)
     return FTRunResult(es=ctx.es, iterations=ctx.iteration,
                        recoveries=fault.recoveries, straggler_flags=flags,
-                       resumed_from=ckpt.resumed_from, epoch=monitor.epoch)
+                       resumed_from=ckpt.resumed_from, epoch=monitor.epoch,
+                       registry=registry)

@@ -11,8 +11,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import time
 from typing import Callable
+
+from repro.obs import clock as obs_clock
 
 
 class WorkerState(enum.Enum):
@@ -31,9 +32,10 @@ class WorkerInfo:
 
 class HeartbeatMonitor:
     def __init__(self, n_workers: int, suspect_after: float = 5.0,
-                 fail_after: float = 15.0, clock: Callable = time.monotonic):
-        self.clock = clock
-        now = clock()
+                 fail_after: float = 15.0, clock: Callable | None = None):
+        # default: the installable obs clock (an explicit clock= still wins)
+        self.clock = clock if clock is not None else obs_clock.monotonic
+        now = self.clock()
         self.workers = {i: WorkerInfo(i, now) for i in range(n_workers)}
         self.suspect_after = suspect_after
         self.fail_after = fail_after

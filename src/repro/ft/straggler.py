@@ -13,8 +13,9 @@ Two mechanisms, one per workload kind:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
+
+from repro.obs import clock as obs_clock
 
 
 @dataclasses.dataclass
@@ -28,8 +29,9 @@ class PendingWork:
 
 class StragglerMitigator:
     def __init__(self, deadline_factor: float = 3.0, min_deadline: float = 0.5,
-                 clock: Callable = time.monotonic):
-        self.clock = clock
+                 clock: Callable | None = None):
+        # default: the installable obs clock (an explicit clock= still wins)
+        self.clock = clock if clock is not None else obs_clock.monotonic
         self.deadline_factor = deadline_factor
         self.min_deadline = min_deadline
         self._lat_ewma: float | None = None
@@ -94,8 +96,8 @@ class ShardFlag:
     cause: str                 # 'skew' | 'straggler'
 
 
-def flag_slow_shards(pseudo_supersteps, balance: float | None = None,
-                     factor: float = 1.5) -> list[ShardFlag]:
+def flag_slow_shards(pseudo_supersteps=None, balance: float | None = None,
+                     factor: float = 1.5, registry=None) -> list[ShardFlag]:
     """Flag shards whose local phase runs long, from the per-partition
     ``Counters.pseudo_supersteps`` the hybrid engine already keeps.
 
@@ -105,9 +107,21 @@ def flag_slow_shards(pseudo_supersteps, balance: float | None = None,
     hostage.  ``balance`` (``PartitionReport.balance`` — max partition
     size over the even share) classifies the flag: when the labeling
     itself is skewed past the same factor the remedy is re-partitioning,
-    not failover, so the cause reads 'skew'."""
+    not failover, so the cause reads 'skew'.
+
+    ``registry`` (a :class:`repro.obs.metrics.MetricsRegistry`) supplies
+    either input not passed explicitly: the per-partition vector from the
+    ``engine.pseudo_supersteps`` gauge, the balance from
+    ``partition.balance``."""
     import numpy as np
 
+    if registry is not None:
+        if pseudo_supersteps is None:
+            pseudo_supersteps = registry.value("engine.pseudo_supersteps")
+        if balance is None:
+            balance = registry.value("partition.balance")
+    if pseudo_supersteps is None:
+        return []
     counts = np.asarray(pseudo_supersteps)
     if counts.ndim != 1 or not counts.size:
         return []

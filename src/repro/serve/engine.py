@@ -52,6 +52,13 @@ from repro.exec.checkpoint import (CheckpointHook, checkpoint_key,
 from repro.exec.driver import ExecContext, ExecHook, run_engine, while_engine
 from repro.exec.policy import hybrid_policy
 from repro.ft.straggler import StragglerMitigator
+from repro.obs import clock as obs_clock
+from repro.obs.metrics import MetricsRegistry, save_registry
+
+#: filename of the persisted serving-statistics registry (see
+#: :attr:`ServeEngine.stats_path`); read it back with
+#: :func:`repro.obs.metrics.load_registry`.
+STATS_FILENAME = "serve_stats.json"
 
 
 @dataclasses.dataclass
@@ -197,6 +204,18 @@ class ServeEngine:
         Optional callback ``(engine, program, K, iteration)`` invoked
         after every global iteration of a checkpointed dispatch — tests
         kill a batch mid-flight by raising from it.
+    registry / stats_dir:
+        The engine keeps per-program serving statistics in a
+        :class:`~repro.obs.metrics.MetricsRegistry` (own one by default,
+        pass one to share): request inter-arrival gap and dispatched
+        batch-size histograms (``serve.arrival_seconds.<program>``,
+        ``serve.batch_size.<program>`` — the distributions lane-width
+        autotuning needs), plus compile counts per (program, K).  With
+        ``stats_dir`` set (default: ``ckpt_dir``, so the stats land
+        beside the checkpoint/compile-cache state) the registry is
+        persisted to ``<stats_dir>/serve_stats.json`` after every
+        :meth:`run` / :meth:`stream` drain; read it back with
+        :func:`repro.obs.metrics.load_registry`.
     """
 
     def __init__(self, graph: PartitionedGraph | str, *,
@@ -206,7 +225,9 @@ class ServeEngine:
                  dispatch_fn: Callable | None = None,
                  build_kwargs: dict | None = None,
                  ckpt_dir: str | None = None, checkpoint_every: int = 1,
-                 keep: int = 3, on_iteration: Callable | None = None):
+                 keep: int = 3, on_iteration: Callable | None = None,
+                 registry: MetricsRegistry | None = None,
+                 stats_dir: str | None = None):
         if isinstance(graph, str):
             from repro.io.pipeline import build_partitioned_graph_from_path
             graph = build_partitioned_graph_from_path(
@@ -232,6 +253,24 @@ class ServeEngine:
         self._step: dict[tuple, Callable] = {}
         self._changed: dict[tuple, Callable] = {}
         self.trace_counts: dict[tuple, int] = {}   # compiles per (key, K)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.stats_dir = stats_dir if stats_dir is not None else ckpt_dir
+        self._last_arrival: dict[str, float] = {}
+
+    @property
+    def stats_path(self) -> str | None:
+        """Where the serving-statistics registry persists (None when no
+        ``stats_dir``/``ckpt_dir`` was configured)."""
+        if self.stats_dir is None:
+            return None
+        return os.path.join(self.stats_dir, STATS_FILENAME)
+
+    def _persist_stats(self) -> None:
+        from repro.obs.metrics import record_serve
+
+        record_serve(self.registry, self)
+        if self.stats_path is not None:
+            save_registry(self.registry, self.stats_path)
 
     # -- admission ---------------------------------------------------------
 
@@ -241,6 +280,12 @@ class ServeEngine:
             raise KeyError(f"unknown program {program!r}; have "
                            f"{sorted(PROGRAMS)}")
         q = Query(next(self._ids), program, int(source), payload)
+        now = obs_clock.monotonic()
+        last = self._last_arrival.get(program)
+        if last is not None:
+            self.registry.observe(f"serve.arrival_seconds.{program}",
+                                  now - last, unit="s")
+        self._last_arrival[program] = now
         self.queue.append(q)
         return q
 
@@ -255,9 +300,13 @@ class ServeEngine:
             groups.setdefault(q.key, []).append(q)
         self.queue = []
         wmax = self.lane_widths[-1]
-        return [(key, qs[i:i + wmax])
-                for key, qs in groups.items()
-                for i in range(0, len(qs), wmax)]
+        batches = [(key, qs[i:i + wmax])
+                   for key, qs in groups.items()
+                   for i in range(0, len(qs), wmax)]
+        for key, qs in batches:
+            self.registry.observe(f"serve.batch_size.{key[0]}", len(qs),
+                                  unit="queries")
+        return batches
 
     def _pad_width(self, b: int) -> int:
         for w in self.lane_widths:
@@ -405,6 +454,7 @@ class ServeEngine:
                                              es.state[spec.state_key]))
             self._finish(queries, lanes, int(es.counters.iterations))
             done.extend(queries)
+        self._persist_stats()
         return done
 
     def stream(self) -> Iterator[Query]:
@@ -445,3 +495,4 @@ class ServeEngine:
                     q.iterations = it
                     q.done = True
                     yield q
+        self._persist_stats()

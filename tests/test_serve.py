@@ -14,6 +14,7 @@ from repro.core.graph import build_partitioned_graph, unpack_vertex
 from repro.data.graphs import rmat_graph
 from repro.ft.straggler import StragglerMitigator
 from repro.serve import ServeEngine
+from repro.serve.engine import STATS_FILENAME
 
 
 @pytest.fixture(scope="module")
@@ -168,7 +169,7 @@ def test_klane_kill_and_resume_bit_identical(graph, tmp_path):
     with pytest.raises(_Killed):
         eng.run()
     assert not any(q.done for q in qs)
-    fams = os.listdir(ckdir)
+    fams = [f for f in os.listdir(ckdir) if f != STATS_FILENAME]
     assert len(fams) == 1 and fams[0].startswith("sssp_K4_")
     # the kill raised before iteration 4's save: latest durable is 3
     assert any(d.endswith("step_00000003")
@@ -188,8 +189,35 @@ def test_klane_kill_and_resume_bit_identical(graph, tmp_path):
 
     for q_ref, q2 in zip(refs, qs2):
         np.testing.assert_array_equal(q_ref.result, q2.result)
-    # batch completed -> its checkpoint family is deleted
-    assert os.listdir(ckdir) == []
+    # batch completed -> its checkpoint family is deleted (only the serving
+    # statistics registry persists beside where the family lived)
+    assert [f for f in os.listdir(ckdir) if f != STATS_FILENAME] == []
+
+
+def test_serving_stats_histograms_persisted(graph, tmp_path):
+    """The engine records per-program inter-arrival and batch-size
+    histograms and persists the registry beside its checkpoint/cache state;
+    the file reads back through ``repro.obs.metrics``."""
+    from repro.obs import clock as obs_clock
+    from repro.obs.metrics import load_registry
+
+    g, _ = graph
+    sdir = str(tmp_path / "stats")
+    with obs_clock.fake() as fc:
+        eng = ServeEngine(g, lane_widths=(4,), stats_dir=sdir)
+        for i, s in enumerate((0, 17, 99)):
+            fc.advance(0.25 * (i + 1))
+            eng.submit("sssp", s)
+        eng.run()
+    assert eng.stats_path == os.path.join(sdir, STATS_FILENAME)
+
+    reg = load_registry(eng.stats_path)
+    h = reg.histogram("serve.arrival_seconds.sssp")
+    assert h.count == 2                      # 3 submits -> 2 gaps
+    assert abs(h.sum - 1.25) < 1e-9 and abs(h.max - 0.75) < 1e-9
+    b = reg.histogram("serve.batch_size.sssp")
+    assert b.count == 1 and b.max == 3.0     # one dispatched batch of 3
+    assert reg.value("serve.compiles.sssp.K4") == 1.0
 
 
 def test_klane_resume_requires_monotone(graph, tmp_path):
